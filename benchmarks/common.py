@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing: cached workload, timing, CSV emission."""
+from __future__ import annotations
+
+import functools
+import json
+import time
+from pathlib import Path
+
+from repro.core import run_policy
+from repro.traces import TraceSpec, generate_workload
+
+RESULTS = Path("results/benchmarks")
+
+
+@functools.lru_cache(maxsize=4)
+def paper_workload(minutes: int = 2):
+    """The paper's workload: first `minutes` of the (synthesized) Azure
+    trace — 12,442 invocations for minutes=2."""
+    return generate_workload(TraceSpec(minutes=minutes)).tasks
+
+
+def timed(fn, *a, **kw):
+    t0 = time.time()
+    out = fn(*a, **kw)
+    return out, time.time() - t0
+
+
+def emit(name: str, rows: list[dict], elapsed_s: float) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(
+        json.dumps(rows, indent=2, default=str))
+    us = elapsed_s * 1e6
+    derived = rows[0] if rows else {}
+    key = next((k for k in ("cost_usd", "p99_execution_s", "value")
+                if k in derived), None)
+    dv = derived.get(key, "")
+    print(f"{name},{us:.0f},{dv}", flush=True)
+
+
+def cdf_points(vals, n: int = 50):
+    import numpy as np
+    v = np.sort(np.asarray(vals))
+    qs = np.linspace(0, 100, n)
+    return [{"pct": float(q), "value_ms": float(np.percentile(v, q))}
+            for q in qs]

@@ -1,0 +1,189 @@
+"""One benchmark per paper table/figure (DESIGN.md Sec. 7 index).
+
+Each ``figXX()`` returns rows that reproduce the figure's quantity; the
+driver (run.py) times them and emits name,us_per_call,derived CSV.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import run_policy
+from repro.core.cost import MEMORY_LADDER_MB
+from repro.core.hybrid import Rightsizer, TimeLimitAdapter
+
+from .common import cdf_points, paper_workload
+
+
+def _metrics_row(res, policy):
+    return {
+        "policy": policy,
+        "mean_execution_s": float(res.execution().mean()) / 1e3,
+        "p50_execution_s": res.p("execution", 50) / 1e3,
+        "p99_execution_s": res.p("execution", 99) / 1e3,
+        "p99_response_s": res.p("response", 99) / 1e3,
+        "p99_turnaround_s": res.p("turnaround", 99) / 1e3,
+        "preemptions": res.total_preemptions(),
+        "makespan_s": res.makespan() / 1e3,
+        "cost_usd": res.cost_usd(),
+    }
+
+
+def fig01_cost_fifo_cfs():
+    """Fig. 1: FIFO vs CFS cost over the memory-size ladder."""
+    w = paper_workload()
+    rows = []
+    for policy in ("fifo", "cfs"):
+        res = run_policy(policy, w)
+        ladder = res.cost_ladder()
+        for mb in MEMORY_LADDER_MB:
+            rows.append({"policy": policy, "mem_mb": mb,
+                         "cost_usd": ladder[mb]})
+    f = {r["mem_mb"]: r["cost_usd"] for r in rows if r["policy"] == "fifo"}
+    c = {r["mem_mb"]: r["cost_usd"] for r in rows if r["policy"] == "cfs"}
+    rows.insert(0, {"policy": "ratio", "mem_mb": 0,
+                    "cost_usd": c[1024] / f[1024]})
+    return rows
+
+
+def fig04_fifo_vs_cfs():
+    w = paper_workload()
+    rows = []
+    for policy in ("fifo", "cfs"):
+        res = run_policy(policy, w)
+        row = _metrics_row(res, policy)
+        row["execution_cdf"] = cdf_points(res.execution())
+        row["response_cdf"] = cdf_points(res.response())
+        row["turnaround_cdf"] = cdf_points(res.turnaround())
+        rows.append(row)
+    return rows
+
+
+def fig05_fifo_preempt():
+    """Fig. 5: FIFO vs FIFO_100ms (preemption improves response &
+    turnaround at execution-time cost)."""
+    w = paper_workload()
+    rows = [_metrics_row(run_policy("fifo", w), "fifo"),
+            _metrics_row(run_policy("fifo_preempt", w, quantum_ms=100.0),
+                         "fifo_100ms")]
+    return rows
+
+
+def fig06_hybrid_vs_fifo():
+    w = paper_workload()
+    return [_metrics_row(run_policy("fifo", w), "fifo"),
+            _metrics_row(run_policy("hybrid", w, time_limit_ms=1633.0),
+                         "fifo+cfs(25/25)")]
+
+
+def fig11_core_tuning():
+    """Fig. 11: FIFO/CFS core-split sweep at the 1,633 ms limit."""
+    w = paper_workload()
+    rows = []
+    for n_fifo in (10, 20, 25, 30, 40):
+        res = run_policy("hybrid", w, n_fifo=n_fifo,
+                         time_limit_ms=1633.0)
+        row = _metrics_row(res, f"hybrid({n_fifo}/{50 - n_fifo})")
+        rows.append(row)
+    rows.append(_metrics_row(run_policy("cfs", w), "cfs"))
+    return rows
+
+
+def fig12_14_hybrid_vs_cfs():
+    """Figs. 12-14: hybrid vs CFS metrics + per-core preemptions +
+    group utilization."""
+    w = paper_workload()
+    hyb = run_policy("hybrid", w, time_limit_ms=1633.0, trace_util=True)
+    cfs = run_policy("cfs", w)
+    rows = [_metrics_row(hyb, "hybrid"), _metrics_row(cfs, "cfs")]
+    rows[0]["preempt_per_core"] = hyb.preempt_per_core
+    rows[1]["preempt_per_core"] = cfs.preempt_per_core
+    if hyb.util_series:
+        rows[0]["util_series"] = [
+            {"t_s": t / 1e3, "fifo": u.get(0, 0.0), "cfs": u.get(1, 0.0)}
+            for t, u, _ in hyb.util_series[:600]]
+    return rows
+
+
+def fig15_17_time_limit():
+    """Figs. 15-17: adaptive limit percentile sweep."""
+    w = paper_workload()
+    rows = []
+    for pct in (25, 50, 75, 90, 95):
+        res = run_policy("hybrid", w,
+                         adapter=TimeLimitAdapter(pct=float(pct)))
+        row = _metrics_row(res, f"ts=p{pct}")
+        if res.limit_series:
+            ls = res.limit_series
+            row["limit_final_ms"] = ls[-1][1]
+            row["limit_series"] = [
+                {"t_s": t / 1e3, "limit_ms": l} for t, l in ls[::200]]
+        rows.append(row)
+    return rows
+
+
+def fig18_19_rightsizing():
+    w = paper_workload()
+    fixed = run_policy("hybrid", w, adapt_pct=95.0, trace_util=True)
+    dyn = run_policy("hybrid", w, adapt_pct=95.0, rightsize=True,
+                     trace_util=True)
+    rows = [_metrics_row(fixed, "fixed-cores"),
+            _metrics_row(dyn, "rightsized")]
+    rows[1]["core_migrations"] = len(dyn.migrations or [])
+    if dyn.util_series:
+        rows[1]["n_fifo_series"] = [
+            {"t_s": t / 1e3, "n_fifo": n} for t, _, n in
+            dyn.util_series[:600]]
+    return rows
+
+
+def fig20_table1_cost():
+    """Fig. 20 + Table I: cost ladder + p99 table for FIFO/CFS/Ours
+    (ghOSt-mode: native-CFS spawn-storm interference on, as measured
+    in the paper's testbed; idealized numbers in fig0x benches)."""
+    w = paper_workload()
+    rows = []
+    for policy, name, kw in (
+            ("fifo", "fifo", {}),
+            ("cfs", "cfs", {}),
+            ("hybrid", "ours", dict(adapt_pct=95.0, rightsize=True))):
+        res = run_policy(policy, w, ghost_mode=True, **kw)
+        row = _metrics_row(res, name)
+        row["cost_ladder"] = {str(mb): c
+                              for mb, c in res.cost_ladder().items()}
+        rows.append(row)
+    return rows
+
+
+def fig21_22_microvm():
+    """Figs. 21/22: Firecracker microVM mode (boot overhead, VMM tax,
+    2,952-instance admission cap)."""
+    w = paper_workload(minutes=2)
+    rows = []
+    for policy, kw in (("cfs", {}),
+                       ("hybrid", dict(adapt_pct=95.0))):
+        res = run_policy(policy, w, microvm=True, **kw)
+        row = _metrics_row(res, f"uvm-{policy}")
+        row["failed_to_launch"] = len(res.failed)
+        rows.append(row)
+    c, h = rows[0]["cost_usd"], rows[1]["cost_usd"]
+    rows.insert(0, {"policy": "saving", "value": (c - h) / c})
+    return rows
+
+
+def fig23_pareto():
+    """Fig. 23: cost vs p99 response across the scheduler zoo."""
+    w = paper_workload()
+    rows = []
+    for policy, name, kw in (
+            ("fifo", "fifo", {}),
+            ("cfs", "cfs", {}),
+            ("rr", "rr", {}),
+            ("edf", "edf", {}),
+            ("fifo_preempt", "fifo_100ms", dict(quantum_ms=100.0)),
+            ("hybrid", "hybrid", dict(time_limit_ms=1633.0)),
+            ("hybrid", "hybrid+adapt+rs",
+             dict(adapt_pct=95.0, rightsize=True))):
+        res = run_policy(policy, w, **kw)
+        rows.append({"policy": name, "cost_usd": res.cost_usd(),
+                     "p99_response_s": res.p("response", 99) / 1e3})
+    return rows

@@ -1,0 +1,43 @@
+"""Fault-tolerance drill: kill training mid-run, restart, verify exact
+resume; then simulate a device-count change and re-mesh.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.distributed.elastic import ElasticRunner, viable_meshes
+
+
+def main():
+    ckpt = "/tmp/repro_elastic_demo"
+    subprocess.run(["rm", "-rf", ckpt])
+    base = [sys.executable, "-m", "repro.launch.train",
+            "--arch", "deepseek-7b", "--steps", "40", "--batch", "2",
+            "--seq", "32", "--ckpt-dir", ckpt, "--ckpt-every", "10"]
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    print("== phase 1: run 40 steps, checkpoints every 10 ==")
+    r1 = subprocess.run(base, capture_output=True, text=True, env=env)
+    print("\n".join(r1.stdout.splitlines()[-3:]))
+    print("== phase 2: 'crash' happened; restart asks for 60 steps ==")
+    base[base.index("40")] = "60"
+    r2 = subprocess.run(base, capture_output=True, text=True, env=env)
+    out = r2.stdout.splitlines()
+    assert any("resumed from step 40" in l for l in out), out[:5]
+    print("\n".join(out[:2] + out[-2:]))
+    print("== phase 3: elastic re-mesh after device-count change ==")
+    for n in (256, 512, 128):
+        print(f"  {n} devices -> viable (data, model) meshes: "
+              f"{viable_meshes(n)[:3]} ...")
+    runner = ElasticRunner(
+        build_step=lambda ctx: (lambda: ctx.mesh.devices.shape))
+    fn = runner.ensure(jax.devices())
+    print(f"  re-lowered step on mesh {fn()} (1-device CPU container)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — hybrid two-level FaaS scheduling (Zhao et al., 2024) as a
+production JAX training/serving framework. See DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""repro.checkpoint — atomic, hashed, auto-resuming checkpoints."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,123 @@
+"""Fault-tolerant checkpointing: atomic, content-hashed, auto-resuming.
+
+Layout: <dir>/step_<N>/
+    arrays.npz      flattened leaves (key = /-joined tree path)
+    meta.json       step, tree structure digest, content hash, wall time
+
+Writes go to a temp dir + atomic rename, so a crash mid-save never
+corrupts the latest checkpoint. ``restore_latest`` walks steps downward
+and skips checkpoints whose content hash fails (torn/bit-rotted files)
+— together with the training loop's signal hook this gives
+checkpoint/restart fault tolerance. Async mode hands the write to a
+background thread (training continues; ``wait()`` joins before exit).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _content_hash(flat: dict[str, np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(flat):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(flat[k]).tobytes())
+    return h.hexdigest()
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        tree = jax.tree.map(np.asarray, tree)   # device -> host copy now
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(step, tree, extra))
+            self._thread.start()
+        else:
+            self._save_sync(step, tree, extra)
+
+    def _save_sync(self, step: int, tree: Any, extra: Optional[dict]):
+        flat = _flatten(tree)
+        tmp = self.dir / f".tmp_step_{step}_{os.getpid()}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        np.savez(tmp / "arrays.npz", **flat)
+        meta = {
+            "step": step,
+            "hash": _content_hash(flat),
+            "keys": sorted(flat),
+            "time": time.time(),
+            "extra": extra or {},
+        }
+        (tmp / "meta.json").write_text(json.dumps(meta))
+        final = self.dir / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)                  # atomic publish
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.dir.glob("step_*"))
+        for old in steps[:-self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------
+    def steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1])
+                      for p in self.dir.glob("step_*"))
+
+    def restore(self, step: int, like: Any) -> Any:
+        path = self.dir / f"step_{step:08d}"
+        meta = json.loads((path / "meta.json").read_text())
+        with np.load(path / "arrays.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        if _content_hash(flat) != meta["hash"]:
+            raise IOError(f"checkpoint {step} failed integrity check")
+        leaves_like = jax.tree_util.tree_flatten_with_path(like)[0]
+        out = []
+        for p, leaf in leaves_like:
+            key = "/".join(str(getattr(x, "key", getattr(x, "idx", x)))
+                           for x in p)
+            arr = flat[key]
+            out.append(np.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+        return jax.tree.unflatten(jax.tree.structure(like), out)
+
+    def restore_latest(self, like: Any) -> tuple[Optional[int], Any]:
+        """Newest checkpoint that passes integrity; (None, like) if none."""
+        for step in reversed(self.steps()):
+            try:
+                return step, self.restore(step, like)
+            except Exception:
+                continue
+        return None, like

@@ -1,0 +1,9 @@
+"""repro.configs — model + shape + paper configurations."""
+from .base import (ModelConfig, SHAPES, ShapeConfig, TrainConfig,
+                   shape_applicable)
+from .registry import ARCHS, all_cells, get_config, get_smoke
+
+__all__ = [
+    "ModelConfig", "SHAPES", "ShapeConfig", "TrainConfig",
+    "shape_applicable", "ARCHS", "all_cells", "get_config", "get_smoke",
+]

@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution: hybrid two-level scheduling.
+
+Discrete-event simulation of OS-level scheduling policies for serverless
+(L1), plus the policy objects reused by the serving gateway (L2).
+"""
+from .events import Core, Scheduler, Task, GROUP_CFS, GROUP_FIFO
+from .policies import CFS, EDF, FIFO, FIFOPreempt, RoundRobin
+from .hybrid import HybridScheduler, Rightsizer, TimeLimitAdapter, percentile
+from .metrics import SimResult, collect
+from .simulate import POLICIES, make_scheduler, run_policy
+from . import cost
+
+__all__ = [
+    "Core", "Scheduler", "Task", "GROUP_CFS", "GROUP_FIFO",
+    "CFS", "EDF", "FIFO", "FIFOPreempt", "RoundRobin",
+    "HybridScheduler", "Rightsizer", "TimeLimitAdapter", "percentile",
+    "SimResult", "collect", "POLICIES", "make_scheduler", "run_policy",
+    "cost",
+]

@@ -1,0 +1,69 @@
+"""AWS Lambda pricing model (paper Fig. 1/20, Table I).
+
+AWS bills wall-clock *execution duration* per millisecond, with a
+per-GB-second rate plus a flat per-request fee. The paper multiplies each
+function's measured execution time (T_completion - T_firstrun) by the
+per-ms price for its memory size; Table I weights by the Azure-trace
+memory-size distribution, Figs. 1/20 show the cost if ALL functions had a
+given fixed size.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence
+
+# AWS Lambda x86 pricing (https://aws.amazon.com/lambda/pricing/, 2024).
+PRICE_PER_GB_SECOND = 1.66667e-5  # USD
+PRICE_PER_REQUEST = 2.0e-7        # USD ($0.20 per 1M requests)
+
+# Fig. 1 / Fig. 20 memory ladder (MB).
+MEMORY_LADDER_MB = (128, 256, 512, 1024, 2048, 4096, 10240)
+
+# Azure '20: >90% of functions allocate < 400 MB. Discrete stand-in
+# distribution used for Table I-style overall cost.
+AZURE_MEMORY_DISTRIBUTION = (
+    (128, 0.45),
+    (192, 0.15),
+    (256, 0.15),
+    (384, 0.15),
+    (512, 0.05),
+    (1024, 0.03),
+    (2048, 0.015),
+    (4096, 0.005),
+)
+
+
+def price_per_ms(mem_mb: float) -> float:
+    return (mem_mb / 1024.0) * PRICE_PER_GB_SECOND / 1000.0
+
+
+def invocation_cost_usd(execution_ms: float, mem_mb: float) -> float:
+    return execution_ms * price_per_ms(mem_mb) + PRICE_PER_REQUEST
+
+
+def workload_cost_usd(execution_ms: Iterable[float],
+                      mem_mb: Optional[Iterable[float]] = None,
+                      fixed_mem_mb: Optional[float] = None) -> float:
+    """Total user-facing cost of a workload.
+
+    With ``fixed_mem_mb`` set, prices every invocation at that size
+    (Fig. 1 / Fig. 20 style); otherwise uses per-invocation sizes.
+    """
+    if fixed_mem_mb is not None:
+        return sum(invocation_cost_usd(e, fixed_mem_mb) for e in execution_ms)
+    assert mem_mb is not None
+    return sum(invocation_cost_usd(e, m)
+               for e, m in zip(execution_ms, mem_mb))
+
+
+def cost_ladder(execution_ms: Sequence[float]) -> dict[int, float]:
+    """Cost for each memory size on the Fig. 1/20 ladder."""
+    return {mb: workload_cost_usd(execution_ms, fixed_mem_mb=mb)
+            for mb in MEMORY_LADDER_MB}
+
+
+def sample_memory_sizes(n: int, rng) -> list[int]:
+    """Draw n memory sizes from the Azure-like distribution."""
+    sizes = [mb for mb, _ in AZURE_MEMORY_DISTRIBUTION]
+    probs = [p for _, p in AZURE_MEMORY_DISTRIBUTION]
+    idx = rng.choice(len(sizes), size=n, p=probs)
+    return [sizes[i] for i in idx]

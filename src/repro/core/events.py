@@ -1,0 +1,301 @@
+"""Event-driven cluster simulator substrate.
+
+This is the paper-faithful layer (L1 in DESIGN.md): a deterministic
+discrete-event simulation of one big serverless host (the paper uses 50
+enclave cores of a 2x18C/2T Xeon). Scheduling policies subclass
+:class:`Scheduler` and receive the same "message pump" a ghOSt agent would:
+task arrival, chunk expiry (slice / time-limit), completion, timers.
+
+Time is in milliseconds (float). The simulation is exact (no ticks): every
+core schedules its next decision point; stale decision points are
+invalidated with per-core generation counters.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+ARRIVAL, CORE_EVT, TIMER = 0, 1, 2
+
+# Group tags for two-level policies.
+GROUP_FIFO = 0
+GROUP_CFS = 1
+
+_EPS = 1e-9
+
+
+@dataclass
+class Task:
+    """One serverless function invocation.
+
+    ``service`` is the pure CPU demand in ms (the Fibonacci run time in the
+    paper). Metrics follow OSTEP (paper Sec. II-B):
+
+    execution  = completion - first_run
+    response   = first_run - arrival
+    turnaround = completion - arrival
+    """
+
+    tid: int
+    arrival: float
+    service: float
+    mem_mb: int = 256
+    func_id: int = 0
+    bucket: int = 0
+
+    # -- runtime state ------------------------------------------------
+    remaining: float = field(default=0.0, repr=False)
+    cpu_time: float = 0.0
+    first_run: Optional[float] = None
+    completion: Optional[float] = None
+    vruntime: float = 0.0
+    deadline: float = float("inf")
+    preemptions: int = 0
+    migrations: int = 0
+    ctx_switches: int = 0
+    failed: bool = False
+    aux_of: Optional[int] = None  # microVM mode: auxiliary thread's parent
+
+    def __post_init__(self) -> None:
+        self.remaining = self.service
+
+    # -- metrics ------------------------------------------------------
+    @property
+    def execution(self) -> float:
+        return self.completion - self.first_run
+
+    @property
+    def response(self) -> float:
+        return self.first_run - self.arrival
+
+    @property
+    def turnaround(self) -> float:
+        return self.completion - self.arrival
+
+
+class Core:
+    """One CPU core; holds at most one running chunk."""
+
+    __slots__ = (
+        "cid", "task", "gen", "chunk_start", "chunk_work_start", "chunk_len",
+        "chunk_rate", "group", "locked_until", "busy_ms", "last_task", "rq",
+        "rq_seq", "min_vruntime", "preempt_count", "busy_snapshot", "_rs_snap",
+    )
+
+    def __init__(self, cid: int, group: int = GROUP_FIFO):
+        self.cid = cid
+        self.task: Optional[Task] = None
+        self.gen = 0
+        self.chunk_start = 0.0
+        self.chunk_work_start = 0.0
+        self.chunk_len = 0.0
+        self.chunk_rate = 1.0
+        self.group = group
+        self.locked_until = -1.0
+        self.busy_ms = 0.0
+        self.last_task: Optional[Task] = None
+        # CFS per-core runqueue: heap of (vruntime, seq, Task)
+        self.rq: list = []
+        self.rq_seq = 0
+        self.min_vruntime = 0.0
+        self.preempt_count = 0
+        self.busy_snapshot = 0.0
+        self._rs_snap = 0.0
+
+    @property
+    def nr_running(self) -> int:
+        return len(self.rq) + (1 if self.task is not None else 0)
+
+    def busy_total(self, now: float) -> float:
+        if self.task is not None:
+            return self.busy_ms + max(0.0, now - self.chunk_start)
+        return self.busy_ms
+
+    def rq_push(self, task: Task) -> None:
+        heapq.heappush(self.rq, (task.vruntime, self.rq_seq, task))
+        self.rq_seq += 1
+
+    def rq_pop(self) -> Task:
+        vr, _, task = heapq.heappop(self.rq)
+        self.min_vruntime = max(self.min_vruntime, vr)
+        return task
+
+
+class Scheduler:
+    """Base event loop. Policies override the hooks at the bottom."""
+
+    name = "base"
+
+    def __init__(
+        self,
+        n_cores: int = 50,
+        ctx_switch_ms: float = 0.06,
+        util_sample_ms: float = 500.0,
+        trace_util: bool = False,
+        interference_fn: Optional[Callable[[float], float]] = None,
+        seed: int = 0,
+    ):
+        self.n_cores = n_cores
+        self.ctx_switch_ms = ctx_switch_ms
+        self.util_sample_ms = util_sample_ms
+        self.trace_util = trace_util
+        # ghOSt mode: fraction of each enclave core stolen by NATIVE Linux
+        # CFS tasks (freshly spawned, not yet pinned to the enclave) as a
+        # function of time. The ghOSt scheduling class runs below CFS, so
+        # spawn storms stall enclave tasks (paper Sec. VI, Table I FIFO
+        # p99-execution artifact). None = idealized enclave.
+        self.interference_fn = interference_fn
+        self.cores = [Core(i) for i in range(n_cores)]
+        self.heap: list = []
+        self.seq = 0
+        self.now = 0.0
+        self.completed: list[Task] = []
+        self.failed: list[Task] = []
+        self.total_ctx = 0
+        self.util_series: list = []  # (t, per-group {group: util})
+        self._timers: list[tuple[float, Callable]] = []
+
+    # -- event machinery ------------------------------------------------
+    def _push(self, t: float, kind: int, payload, gen: int = 0) -> None:
+        heapq.heappush(self.heap, (t, self.seq, kind, payload, gen))
+        self.seq += 1
+
+    def run(self, tasks: list[Task]) -> "Scheduler":
+        self.total_tasks = len(tasks) + len(self.completed) + \
+            len(self.failed)
+        for task in tasks:
+            self._push(task.arrival, ARRIVAL, task)
+        if self.trace_util:
+            self._push(self.util_sample_ms, TIMER, "util")
+        self.on_start()
+        while self.heap:
+            t, _, kind, payload, gen = heapq.heappop(self.heap)
+            self.now = t
+            if kind == ARRIVAL:
+                self.on_arrival(payload, t)
+            elif kind == CORE_EVT:
+                core: Core = payload
+                if gen != core.gen:
+                    continue  # stale decision point
+                self._finish_chunk(core, t)
+            else:  # TIMER
+                self.on_timer(payload, t)
+        return self
+
+    # -- chunk lifecycle -------------------------------------------------
+    def _start_chunk(self, core: Core, task: Task, t: float,
+                     limit: Optional[float] = None) -> None:
+        ctx = self.ctx_switch_ms if core.last_task is not task else 0.0
+        if task.first_run is None:
+            task.first_run = t
+        run = task.remaining if limit is None else min(task.remaining, limit)
+        run = max(run, _EPS)
+        rate = 1.0
+        if self.interference_fn is not None:
+            rate = max(0.05, 1.0 - self.interference_fn(t))
+        core.task = task
+        core.chunk_start = t
+        core.chunk_work_start = t + ctx
+        core.chunk_len = run
+        core.chunk_rate = rate
+        core.gen += 1
+        if ctx > 0.0:
+            task.ctx_switches += 1
+            self.total_ctx += 1
+        self._push(t + ctx + run / rate, CORE_EVT, core, core.gen)
+
+    def _interrupt(self, core: Core, t: float) -> Task:
+        """Stop the running chunk early; returns the (partially run) task."""
+        task = core.task
+        done = min(max(0.0, t - core.chunk_work_start) * core.chunk_rate,
+                   core.chunk_len)
+        task.remaining -= done
+        task.cpu_time += done
+        core.busy_ms += max(0.0, t - core.chunk_start)
+        core.gen += 1
+        core.task = None
+        core.last_task = task
+        if task.remaining <= _EPS:  # raced with completion
+            task.remaining = 0.0
+            task.completion = t
+            self.completed.append(task)
+            self.on_complete(task, t)
+            return task
+        return task
+
+    def _finish_chunk(self, core: Core, t: float) -> None:
+        task = core.task
+        task.remaining -= core.chunk_len
+        task.cpu_time += core.chunk_len
+        core.busy_ms += t - core.chunk_start
+        core.task = None
+        core.last_task = task
+        if task.remaining <= _EPS:
+            task.remaining = 0.0
+            task.completion = t
+            self.completed.append(task)
+            self.on_complete(task, t)
+        else:
+            self.on_chunk_limit(core, task, t)
+        self.dispatch(core, t)
+
+    def dispatch(self, core: Core, t: float) -> None:
+        if core.task is not None or t < core.locked_until:
+            return
+        pick = self.pick_next(core, t)
+        if pick is not None:
+            task, limit = pick
+            self._start_chunk(core, task, t, limit)
+
+    def kick(self, core: Core, t: float) -> None:
+        if core.task is None:
+            self.dispatch(core, t)
+
+    def idle_core(self, cores: Optional[list[Core]] = None) -> Optional[Core]:
+        for core in cores if cores is not None else self.cores:
+            if core.task is None and self.now >= core.locked_until:
+                return core
+        return None
+
+    # -- utilization sampling ---------------------------------------------
+    def sample_util(self, t: float) -> dict:
+        groups: dict[int, list[float]] = {}
+        for core in self.cores:
+            total = core.busy_total(t)
+            delta = total - core.busy_snapshot
+            core.busy_snapshot = total
+            groups.setdefault(core.group, []).append(delta)
+        window = self.util_sample_ms
+        return {g: sum(v) / (len(v) * window) for g, v in groups.items() if v}
+
+    def work_remaining(self) -> bool:
+        """True while any task is incomplete. Periodic timers must key
+        off THIS, not heap emptiness — two timers would otherwise keep
+        each other alive forever."""
+        done = len(self.completed) + len(self.failed)
+        return done < getattr(self, "total_tasks", 0)
+
+    def on_timer(self, payload, t: float) -> None:
+        if payload == "util":
+            util = self.sample_util(t)
+            self.util_series.append(
+                (t, util, sum(1 for c in self.cores if c.group == GROUP_FIFO)))
+            if self.work_remaining():
+                self._push(t + self.util_sample_ms, TIMER, "util")
+
+    # -- policy hooks -------------------------------------------------------
+    def on_start(self) -> None:  # pragma: no cover - trivial
+        pass
+
+    def on_arrival(self, task: Task, t: float) -> None:
+        raise NotImplementedError
+
+    def pick_next(self, core: Core, t: float):
+        raise NotImplementedError
+
+    def on_chunk_limit(self, core: Core, task: Task, t: float) -> None:
+        raise NotImplementedError
+
+    def on_complete(self, task: Task, t: float) -> None:
+        pass

@@ -1,0 +1,257 @@
+"""The paper's contribution: hybrid two-group FIFO+CFS scheduling (Sec. IV).
+
+* Cores are split into a FIFO group (centralized global queue; tasks run
+  WITHOUT preemption until a time limit) and a CFS group (per-core
+  vruntime queues). Tasks that exceed the time limit are preempted and
+  migrated round-robin onto the CFS cores (Fig. 7).
+* ``TimeLimitAdapter`` keeps the most recent 100 task durations and sets
+  the limit to a configurable percentile (Sec. IV-B, Fig. 15-17).
+* ``Rightsizer`` monitors per-group utilization over a window and migrates
+  one core from the hot group to the cold group when the imbalance
+  exceeds a threshold, following the Lock / Preempt / Migrate /
+  Transition / Unlock protocol of Fig. 8.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+from .events import GROUP_CFS, GROUP_FIFO, Core, Scheduler, Task
+
+
+def percentile(sorted_vals: list[float], pct: float) -> float:
+    """Linear-interpolated percentile of a pre-sorted list."""
+    if not sorted_vals:
+        raise ValueError("empty window")
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    rank = (pct / 100.0) * (len(sorted_vals) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = rank - lo
+    return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+
+
+class TimeLimitAdapter:
+    """Sliding window (most recent ``window`` durations) percentile limit."""
+
+    def __init__(self, pct: float = 95.0, window: int = 100,
+                 initial_ms: float = 1633.0):
+        self.pct = pct
+        self.window: deque[float] = deque(maxlen=window)
+        self.initial_ms = initial_ms
+        self.series: list[tuple[float, float]] = []
+
+    def record(self, duration_ms: float, now: float) -> None:
+        self.window.append(duration_ms)
+        self.series.append((now, self.limit()))
+
+    def limit(self) -> float:
+        if not self.window:
+            return self.initial_ms
+        return percentile(sorted(self.window), self.pct)
+
+
+class Rightsizer:
+    """Utilization-driven core migration between the two groups."""
+
+    def __init__(self, interval_ms: float = 1000.0, threshold: float = 0.15,
+                 min_group: int = 1, lock_ms: float = 1.0):
+        self.interval_ms = interval_ms
+        self.threshold = threshold
+        self.min_group = min_group
+        self.lock_ms = lock_ms
+        self.migrations: list[tuple[float, int, int]] = []  # (t, from, to)
+
+
+class HybridScheduler(Scheduler):
+    """FIFO+CFS two-group scheduler (the paper's design, Fig. 7/8)."""
+
+    name = "hybrid"
+
+    def __init__(
+        self,
+        n_fifo: Optional[int] = None,
+        time_limit_ms: float = 1633.0,
+        adapter: Optional[TimeLimitAdapter] = None,
+        rightsizer: Optional[Rightsizer] = None,
+        sched_latency_ms: float = 24.0,
+        min_granularity_ms: float = 3.0,
+        **kw,
+    ):
+        super().__init__(**kw)
+        if n_fifo is None:
+            n_fifo = self.n_cores // 2      # paper's best split (Fig. 11)
+        assert 1 <= n_fifo < self.n_cores, "need at least one core per group"
+        self.static_limit_ms = time_limit_ms
+        self.adapter = adapter
+        self.rightsizer = rightsizer
+        self.sched_latency_ms = sched_latency_ms
+        self.min_granularity_ms = min_granularity_ms
+        self.fifo_queue: deque[Task] = deque()
+        for i, core in enumerate(self.cores):
+            core.group = GROUP_FIFO if i < n_fifo else GROUP_CFS
+        self._rr_cfs = 0
+
+    # -- group views -----------------------------------------------------
+    @property
+    def fifo_cores(self) -> list[Core]:
+        return [c for c in self.cores if c.group == GROUP_FIFO]
+
+    @property
+    def cfs_cores(self) -> list[Core]:
+        return [c for c in self.cores if c.group == GROUP_CFS]
+
+    def time_limit(self) -> float:
+        if self.adapter is not None:
+            return self.adapter.limit()
+        return self.static_limit_ms
+
+    # -- event hooks -------------------------------------------------------
+    def on_start(self) -> None:
+        if self.rightsizer is not None:
+            self._push(self.rightsizer.interval_ms, 2, "rightsize")
+
+    def on_arrival(self, task: Task, t: float) -> None:
+        # New tasks always enter the FIFO group's global queue (Fig. 7).
+        self.fifo_queue.append(task)
+        core = self.idle_core(self.fifo_cores)
+        if core is not None:
+            self.dispatch(core, t)
+
+    def pick_next(self, core: Core, t: float):
+        if core.group == GROUP_FIFO:
+            if self.fifo_queue:
+                task = self.fifo_queue.popleft()
+                # Remaining budget before this task must migrate to CFS.
+                budget = max(self.time_limit() - task.cpu_time, 0.01)
+                return task, budget
+            return None
+        if core.rq:
+            task = core.rq_pop()
+            return task, self._cfs_slice(core)
+        return None
+
+    def _cfs_slice(self, core: Core) -> float:
+        nr = max(1, core.nr_running)
+        return max(self.sched_latency_ms / nr, self.min_granularity_ms)
+
+    def on_chunk_limit(self, core: Core, task: Task, t: float) -> None:
+        if core.group == GROUP_FIFO:
+            # Time limit hit: preempt and migrate to a CFS core (round
+            # robin distribution over per-core queues, Sec. IV-A).
+            task.preemptions += 1
+            task.migrations += 1
+            core.preempt_count += 1
+            self._migrate_to_cfs(task, t)
+        else:
+            task.vruntime += core.chunk_len
+            task.preemptions += 1
+            core.preempt_count += 1
+            core.rq_push(task)
+
+    def _migrate_to_cfs(self, task: Task, t: float) -> None:
+        cfs = self.cfs_cores
+        if not cfs:  # degenerate (rightsizer keeps >=1, but be safe)
+            self.fifo_queue.append(task)
+            return
+        target = cfs[self._rr_cfs % len(cfs)]
+        self._rr_cfs += 1
+        task.vruntime = max(task.vruntime, target.min_vruntime)
+        target.rq_push(task)
+        self.kick(target, t)
+
+    def on_complete(self, task: Task, t: float) -> None:
+        if self.adapter is not None:
+            self.adapter.record(task.execution, t)
+
+    # -- rightsizing ---------------------------------------------------------
+    def on_timer(self, payload, t: float) -> None:
+        if payload == "rightsize":
+            self._rightsize(t)
+            if self.work_remaining():
+                self._push(t + self.rightsizer.interval_ms, 2, "rightsize")
+            return
+        if isinstance(payload, tuple) and payload[0] == "unlock":
+            self.dispatch(payload[1], t)
+            return
+        super().on_timer(payload, t)
+
+    def _group_util(self, cores: list[Core], t: float, window: float) -> float:
+        if not cores:
+            return 0.0
+        acc = 0.0
+        for core in cores:
+            acc += core.busy_total(t) - getattr(core, "_rs_snap", 0.0)
+        return acc / (len(cores) * window)
+
+    def _rightsize(self, t: float) -> None:
+        rs = self.rightsizer
+        window = rs.interval_ms
+        fifo, cfs = self.fifo_cores, self.cfs_cores
+        u_fifo = self._group_util(fifo, t, window)
+        u_cfs = self._group_util(cfs, t, window)
+        for core in self.cores:
+            core._rs_snap = core.busy_total(t)  # type: ignore[attr-defined]
+        if abs(u_fifo - u_cfs) <= rs.threshold:
+            return
+        if u_fifo > u_cfs and len(cfs) > rs.min_group:
+            self._migrate_core_cfs_to_fifo(t)
+            rs.migrations.append((t, GROUP_CFS, GROUP_FIFO))
+        elif u_cfs > u_fifo and len(fifo) > rs.min_group:
+            self._migrate_core_fifo_to_cfs(t)
+            rs.migrations.append((t, GROUP_FIFO, GROUP_CFS))
+
+    def _migrate_core_cfs_to_fifo(self, t: float) -> None:
+        """Fig. 8 protocol: lock, preempt, migrate queue, transition, unlock."""
+        cfs = self.cfs_cores
+        # Pick the CFS core with the shortest queue to disturb least.
+        core = min(cfs, key=lambda c: c.nr_running)
+        rest = [c for c in cfs if c is not core]
+        if not rest:
+            return
+        # Lock: no new tasks during the transition.
+        core.locked_until = t + self.rightsizer.lock_ms
+        # Preempt the running task into another CFS core's queue.
+        if core.task is not None:
+            task = self._interrupt(core, t)
+            if task.completion is None:
+                task.preemptions += 1
+                core.preempt_count += 1
+                tgt = min(rest, key=lambda c: c.nr_running)
+                task.vruntime = max(task.vruntime, tgt.min_vruntime)
+                tgt.rq_push(task)
+                self.kick(tgt, t)
+        # Migrate queued tasks to the remaining CFS cores (balance sizes).
+        while core.rq:
+            task = core.rq_pop()
+            tgt = min(rest, key=lambda c: c.nr_running)
+            tgt.rq_push(task)
+            self.kick(tgt, t)
+        # Transition + unlock (dispatch after the lock expires).
+        core.group = GROUP_FIFO
+        self._push(core.locked_until, 2, ("unlock", core))
+
+    def _migrate_core_fifo_to_cfs(self, t: float) -> None:
+        fifo = self.fifo_cores
+        core = min(fifo, key=lambda c: 0 if c.task is None else 1)
+        core.group = GROUP_CFS
+        # A running FIFO task keeps its CPU but is re-chunked under CFS
+        # rules (it will be preempted "when we schedule a new task", which
+        # under CFS means at its next slice boundary).
+        if core.task is not None:
+            task = self._interrupt(core, t)
+            if task.completion is None:
+                task.vruntime = max(task.vruntime, core.min_vruntime)
+                core.rq_push(task)
+        # Steal tasks from the most loaded CFS cores to balance queues.
+        others = [c for c in self.cfs_cores if c is not core]
+        if others:
+            total = sum(c.nr_running for c in others)
+            target_len = total // (len(others) + 1)
+            donor = max(others, key=lambda c: c.nr_running)
+            while donor.rq and len(core.rq) < target_len:
+                task = donor.rq_pop()
+                core.rq_push(task)
+                donor = max(others, key=lambda c: c.nr_running)
+        self.dispatch(core, t)

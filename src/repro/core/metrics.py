@@ -1,0 +1,103 @@
+"""Result aggregation: the paper's three metrics + CDFs + p99 + cost."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .cost import workload_cost_usd, cost_ladder
+from .events import GROUP_CFS, GROUP_FIFO, Scheduler, Task
+
+
+@dataclass
+class SimResult:
+    policy: str
+    tasks: list[Task]
+    failed: list[Task] = field(default_factory=list)
+    preempt_per_core: Optional[list[int]] = None
+    util_series: Optional[list] = None
+    limit_series: Optional[list] = None
+    migrations: Optional[list] = None
+    total_ctx: int = 0
+
+    # -- metric vectors (ms) ------------------------------------------------
+    def execution(self) -> np.ndarray:
+        return np.array([t.execution for t in self.tasks])
+
+    def response(self) -> np.ndarray:
+        return np.array([t.response for t in self.tasks])
+
+    def turnaround(self) -> np.ndarray:
+        return np.array([t.turnaround for t in self.tasks])
+
+    def service(self) -> np.ndarray:
+        return np.array([t.service for t in self.tasks])
+
+    def p(self, metric: str, pct: float) -> float:
+        return float(np.percentile(getattr(self, metric)(), pct))
+
+    def p99(self) -> dict[str, float]:
+        return {m: self.p(m, 99) / 1000.0  # seconds, as in Table I
+                for m in ("response", "execution", "turnaround")}
+
+    def makespan(self) -> float:
+        return max(t.completion for t in self.tasks)
+
+    def total_preemptions(self) -> int:
+        return sum(t.preemptions for t in self.tasks)
+
+    # -- cost ---------------------------------------------------------------
+    def cost_usd(self, fixed_mem_mb: Optional[float] = None) -> float:
+        if fixed_mem_mb is not None:
+            return workload_cost_usd(self.execution(),
+                                     fixed_mem_mb=fixed_mem_mb)
+        return workload_cost_usd(self.execution(),
+                                 mem_mb=[t.mem_mb for t in self.tasks])
+
+    def cost_ladder(self) -> dict[int, float]:
+        return cost_ladder(self.execution())
+
+    # -- CDF helper -----------------------------------------------------------
+    def cdf(self, metric: str) -> tuple[np.ndarray, np.ndarray]:
+        vals = np.sort(getattr(self, metric)())
+        frac = np.arange(1, len(vals) + 1) / len(vals)
+        return vals, frac
+
+    def summary(self) -> dict:
+        e, r, ta = self.execution(), self.response(), self.turnaround()
+        return {
+            "policy": self.policy,
+            "n": len(self.tasks),
+            "failed": len(self.failed),
+            "mean_execution_s": float(e.mean()) / 1e3,
+            "p50_execution_s": float(np.percentile(e, 50)) / 1e3,
+            "p99_execution_s": float(np.percentile(e, 99)) / 1e3,
+            "p99_response_s": float(np.percentile(r, 99)) / 1e3,
+            "p99_turnaround_s": float(np.percentile(ta, 99)) / 1e3,
+            "makespan_s": self.makespan() / 1e3,
+            "preemptions": self.total_preemptions(),
+            "ctx_switches": self.total_ctx,
+            "cost_usd": self.cost_usd(),
+        }
+
+
+def collect(sched: Scheduler, policy: str) -> SimResult:
+    limit_series = None
+    migrations = None
+    adapter = getattr(sched, "adapter", None)
+    if adapter is not None:
+        limit_series = adapter.series
+    rs = getattr(sched, "rightsizer", None)
+    if rs is not None:
+        migrations = rs.migrations
+    return SimResult(
+        policy=policy,
+        tasks=sched.completed,
+        failed=sched.failed,
+        preempt_per_core=[c.preempt_count for c in sched.cores],
+        util_series=sched.util_series,
+        limit_series=limit_series,
+        migrations=migrations,
+        total_ctx=sched.total_ctx,
+    )

@@ -1,0 +1,14 @@
+"""repro.distributed — sharding resolver, parameter descriptors,
+gradient compression, elastic mesh helpers."""
+from .sharding import (DEFAULT_RULES, ShardingCtx, current_ctx,
+                       named_sharding, resolve_spec, shard, use_mesh)
+from .params import (ParamSpec, abstract_params, count_params, is_spec,
+                     materialize, param_shardings, param_specs_pspec,
+                     tree_map_specs)
+
+__all__ = [
+    "DEFAULT_RULES", "ShardingCtx", "current_ctx", "named_sharding",
+    "resolve_spec", "shard", "use_mesh", "ParamSpec", "abstract_params",
+    "count_params", "is_spec", "materialize", "param_shardings",
+    "param_specs_pspec", "tree_map_specs",
+]

@@ -1,0 +1,72 @@
+"""Elastic scaling + straggler mitigation for long-running jobs.
+
+On real fleets, device loss shows up as a failed collective; the
+recovery path is: checkpoint-restore -> rebuild a smaller/larger mesh ->
+re-lower the step. ``ElasticRunner`` packages that loop; on this CPU
+container the mesh choices are simulated but the re-lowering is real.
+
+``StepWatchdog`` is the training-side straggler detector: step times
+beyond mean + k*std raise a signal the runner treats like a failure
+(re-dispatch / re-mesh), mirroring the serving gateway's request
+re-dispatch.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from .sharding import use_mesh
+
+
+@dataclass
+class StepWatchdog:
+    factor: float = 5.0
+    min_samples: int = 5
+    times: list = field(default_factory=list)
+
+    def record(self, dt: float) -> bool:
+        """Returns True if ``dt`` is a straggler step."""
+        if len(self.times) >= self.min_samples:
+            mu = float(np.mean(self.times))
+            sd = float(np.std(self.times)) + 1e-9
+            if dt > mu + self.factor * sd and dt > 1.5 * mu:
+                return True
+        self.times.append(dt)
+        if len(self.times) > 64:
+            self.times.pop(0)
+        return False
+
+
+def viable_meshes(n_devices: int) -> list[tuple[int, int]]:
+    """(data, model) factorizations, biggest model-parallel first."""
+    out = []
+    for model in range(min(n_devices, 64), 0, -1):
+        if n_devices % model == 0:
+            out.append((n_devices // model, model))
+    return out
+
+
+class ElasticRunner:
+    """Re-mesh + re-lower on device-count changes."""
+
+    def __init__(self, build_step: Callable, checkpoint_mgr=None):
+        self.build_step = build_step      # (mesh_ctx) -> compiled step fn
+        self.ckpt = checkpoint_mgr
+        self.step_fn = None
+        self.mesh = None
+
+    def ensure(self, devices: Optional[list] = None):
+        devices = devices if devices is not None else jax.devices()
+        shape = viable_meshes(len(devices))[-1]
+        dev = np.array(devices).reshape(shape)
+        mesh = jax.sharding.Mesh(dev, ("data", "model"))
+        if self.mesh is not None and mesh.shape == self.mesh.shape:
+            return self.step_fn
+        self.mesh = mesh
+        with use_mesh(mesh) as ctx:
+            self.step_fn = self.build_step(ctx)
+        return self.step_fn

@@ -1,0 +1,78 @@
+"""Parameter descriptors: shapes + logical axes, materialized lazily.
+
+Models build a pytree of :class:`ParamSpec` (pure metadata). The dry-run
+converts it straight to ShapeDtypeStructs with NamedShardings (no
+allocation); tests/examples materialize real arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import ShardingCtx, named_sharding, resolve_spec
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                 # logical axis names (or None), len == ndim
+    init: str = "normal"        # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def abstract_params(tree, ctx: Optional[ShardingCtx] = None):
+    """ParamSpec tree -> ShapeDtypeStruct tree (with shardings if ctx)."""
+    def to_abstract(p: ParamSpec):
+        sharding = named_sharding(p.shape, p.axes, ctx)
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype),
+                                    sharding=sharding)
+    return tree_map_specs(to_abstract, tree)
+
+
+def param_shardings(tree, ctx: Optional[ShardingCtx] = None):
+    return tree_map_specs(lambda p: named_sharding(p.shape, p.axes, ctx),
+                          tree)
+
+
+def param_specs_pspec(tree, ctx: Optional[ShardingCtx] = None):
+    return tree_map_specs(lambda p: resolve_spec(p.shape, p.axes, ctx), tree)
+
+
+def materialize(tree, key, dtype: Optional[str] = None):
+    """Materialize real arrays (tests / examples / training)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, p in zip(keys, leaves):
+        dt = jnp.dtype(dtype or p.dtype)
+        if p.init == "zeros":
+            arr = jnp.zeros(p.shape, dt)
+        elif p.init == "ones":
+            arr = jnp.ones(p.shape, dt)
+        else:
+            fan_in = p.shape[0] if len(p.shape) >= 2 else max(p.shape[-1], 1)
+            std = p.scale / np.sqrt(fan_in)
+            arr = (jax.random.normal(k, p.shape, jnp.float32) * std).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(p.shape))
+               for p in jax.tree.leaves(tree, is_leaf=is_spec))

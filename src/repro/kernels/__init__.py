@@ -1,0 +1,10 @@
+"""repro.kernels — Pallas TPU kernels (+ jnp oracles in ref.py).
+
+Validated in interpret mode on CPU; BlockSpecs sized for v5e VMEM.
+"""
+from . import ref
+from .ops import (decode_attention, flash_attention, fused_rmsnorm,
+                  gqa_flash_attention, rwkv6_scan, ssm_scan)
+
+__all__ = ["ref", "decode_attention", "flash_attention", "fused_rmsnorm",
+           "gqa_flash_attention", "rwkv6_scan", "ssm_scan"]

@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (prefill/train).
+
+Grid (batch*heads, n_q_blocks, n_k_blocks); the k axis is the innermost
+(sequential on TPU), so the online-softmax state (m, l, acc) lives in
+VMEM scratch persisted across k steps. Causal/window blocks that are
+entirely masked are skipped with pl.when. Block shapes are MXU-aligned
+(q_block x head_dim, k_block x head_dim with 128-multiples preferred).
+
+VMEM budget per step: q (qb,hd) + k,v (kb,hd) + acc (qb,hd) f32 +
+scores (qb,kb) f32 — e.g. qb=kb=512, hd=128: ~2.4 MB, well inside the
+16 MB/core v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int, scale: float,
+                  q_block: int, k_block: int, nk: int, sk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * q_block
+    k_lo = ki * k_block
+    run = True
+    if causal:
+        run = k_lo <= q_lo + q_block - 1
+    # (window check depends only on static ids -> python bool is fine
+    #  when blocks are statically skippable; dynamic skip via pl.when)
+    dyn_run = jnp.asarray(run)
+    if window > 0:
+        dyn_run &= (k_lo + k_block - 1) > (q_lo - window)
+
+    @pl.when(dyn_run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale        # (qb, hd)
+        k = k_ref[0].astype(jnp.float32)                # (kb, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                     # (qb, kb)
+        q_idx = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_idx = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_idx < sk
+        if causal:
+            mask &= k_idx <= q_idx
+        if window > 0:
+            mask &= k_idx > q_idx - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 512, k_block: int = 512,
+                    interpret: bool = False):
+    """q: (BH, Sq, hd); k, v: (BH, Sk, hd). Returns (BH, Sq, hd)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    nq = -(-Sq // q_block)
+    nk = -(-Sk // k_block)
+    if nq * q_block != Sq:
+        q = jnp.pad(q, ((0, 0), (0, nq * q_block - Sq), (0, 0)))
+    if nk * k_block != Sk:
+        k = jnp.pad(k, ((0, 0), (0, nk * k_block - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, nk * k_block - Sk), (0, 0)))
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, scale=scale,
+        q_block=q_block, k_block=k_block, nk=nk, sk=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * q_block, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

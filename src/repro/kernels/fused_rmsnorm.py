@@ -1,0 +1,39 @@
+"""Pallas TPU fused RMSNorm (+ scale) over row tiles."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + w_ref[...].astype(jnp.float32))) \
+        .astype(o_ref.dtype)
+
+
+def fused_rmsnorm(x, w, *, eps: float = 1e-6, rows: int = 256,
+                  interpret: bool = False):
+    """x: (N, d); w: (d,). Returns rmsnorm(x) * (1 + w)."""
+    N, d = x.shape
+    rows = min(rows, N)
+    nr = -(-N // rows)
+    if nr * rows != N:
+        x = jnp.pad(x, ((0, nr * rows - N), (0, 0)))
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr * rows, d), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:N]

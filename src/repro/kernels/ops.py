@@ -1,0 +1,71 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret=None`` auto-selects: real TPU lowering on TPU backends,
+interpret mode elsewhere (this CPU container). The wrappers also accept
+the model-layout GQA tensors and flatten them to kernel layout.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode
+from .flash_attention import flash_attention as _flash
+from .fused_rmsnorm import fused_rmsnorm as _rmsnorm
+from .rwkv6_scan import rwkv6_scan as _rwkv
+from .ssm_scan import ssm_scan as _ssm
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                   "k_block", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_block=512,
+                    k_block=512, interpret=None):
+    return _flash(q, k, v, causal=causal, window=window, q_block=q_block,
+                  k_block=k_block, interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("window", "k_block", "interpret"))
+def decode_attention(q, k, v, lengths, *, window=0, k_block=512,
+                     interpret=None):
+    return _decode(q, k, v, lengths, window=window, k_block=k_block,
+                   interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(xbar, B, C, cumlog, *, chunk=64, interpret=None):
+    return _ssm(xbar, B, C, cumlog, chunk=chunk,
+                interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, *, chunk=32, interpret=None):
+    return _rwkv(r, k, v, w, u, chunk=chunk,
+                 interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("eps", "rows", "interpret"))
+def fused_rmsnorm(x, w, *, eps=1e-6, rows=256, interpret=None):
+    return _rmsnorm(x, w, eps=eps, rows=rows,
+                    interpret=_auto_interpret(interpret))
+
+
+def gqa_flash_attention(q, k, v, **kw):
+    """Model-layout wrapper: q (B, KV, G, S, hd), k/v (B, KV, S, hd)."""
+    B, KV, G, S, hd = q.shape
+    qf = q.reshape(B * KV, G * S, hd) if G == 1 else \
+        q.transpose(0, 1, 2, 3, 4).reshape(B * KV * G, S, hd)
+    kf = jnp.repeat(k.reshape(B * KV, -1, hd), G, axis=0) if G > 1 \
+        else k.reshape(B * KV, -1, hd)
+    vf = jnp.repeat(v.reshape(B * KV, -1, hd), G, axis=0) if G > 1 \
+        else v.reshape(B * KV, -1, hd)
+    out = flash_attention(qf, kf, vf, **kw)
+    return out.reshape(B, KV, G, S, hd)

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (BH, Sq, hd); k, v: (BH, Sk, hd) — naive softmax attention."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_idx = jnp.arange(Sq)[:, None]
+    k_idx = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window > 0:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, window: int = 0):
+    """q: (BH, 1, hd); k, v: (BH, S, hd); lengths: (BH,)."""
+    BH, _, hd = q.shape
+    S = k.shape[1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    pos = lengths[:, None] - 1
+    k_idx = jnp.arange(S)[None, :]
+    mask = k_idx <= pos
+    if window > 0:
+        mask &= k_idx > pos - window
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(xbar, B, C, cumlog, *, chunk: int = 64):
+    """Sequential-oracle SSD scan. cumlog resets at chunk boundaries;
+    the underlying per-step decay is a_t = exp(cumlog_t - cumlog_{t-1})
+    (with the reset handled per chunk)."""
+    BH, S, hd = xbar.shape
+    # recover per-step log-decay from the chunked cumsum
+    cl = cumlog.reshape(BH, S // chunk, chunk)
+    step_log = jnp.concatenate(
+        [cl[..., :1], cl[..., 1:] - cl[..., :-1]], axis=-1).reshape(BH, S)
+    a = jnp.exp(step_log.astype(jnp.float32))            # (BH, S)
+
+    def scan_one(xb_b, B_b, C_b, a_b):
+        def step(h, inp):
+            xb_t, B_t, C_t, a_t = inp
+            h = h * a_t + xb_t[:, None] * B_t[None, :]
+            y = h @ C_t
+            return h, y
+        h0 = jnp.zeros((hd, B_b.shape[-1]), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb_b.astype(jnp.float32),
+                                        B_b.astype(jnp.float32),
+                                        C_b.astype(jnp.float32), a_b))
+        return ys
+    return jax.vmap(scan_one)(xbar, B, C, a).astype(xbar.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """Sequential RWKV6 recurrence oracle."""
+    BH, S, hd = r.shape
+
+    def scan_one(r_b, k_b, v_b, w_b, u_b):
+        def step(S_, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[:, None] * v_t[None, :]
+            o = r_t @ (S_ + u_b[:, None] * kv)
+            S_ = w_t[:, None] * S_ + kv
+            return S_, o
+        S0 = jnp.zeros((hd, hd), jnp.float32)
+        _, os = jax.lax.scan(step, S0, (r_b.astype(jnp.float32),
+                                        k_b.astype(jnp.float32),
+                                        v_b.astype(jnp.float32),
+                                        w_b.astype(jnp.float32)))
+        return os
+    return jax.vmap(scan_one)(r, k, v, w, u).astype(r.dtype)
+
+
+def fused_rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,69 @@
+"""Pallas TPU RWKV6 time-mix recurrence (data-dependent decay).
+
+Grid (batch*heads, n_chunks): matrix state S (hd, hd) persists in VMEM
+scratch; within a chunk the recurrence is stepped with a fori_loop
+(chunk is small; each step is rank-1 work on the VPU/MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                 chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)            # (Q, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)            # (Q, hd) decays in (0,1)
+    u = u_ref[0].astype(jnp.float32)            # (hd,) bonus
+
+    def step(t, carry):
+        S, out = carry
+        kv = k[t][:, None] * v[t][None, :]      # (hd, hd)
+        o_t = r[t] @ (S + u[:, None] * kv)      # (hd,)
+        out = out.at[t].set(o_t)
+        S = w[t][:, None] * S + kv
+        return S, out
+
+    S0 = s_ref[...]
+    out0 = jnp.zeros((chunk, r.shape[1]), jnp.float32)
+    S_fin, out = jax.lax.fori_loop(0, chunk, step, (S0, out0))
+    o_ref[0] = out.astype(o_ref.dtype)
+    s_ref[...] = S_fin
+
+
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 32,
+               interpret: bool = False):
+    """r, k, v, w: (BH, S, hd); u: (BH, hd) per-head bonus.
+    Returns o: (BH, S, hd)."""
+    BH, S, hd = r.shape
+    assert S % chunk == 0, "pad sequence to a chunk multiple"
+    nc = S // chunk
+    kernel = functools.partial(_rwkv_kernel, chunk=chunk)
+    o = pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return o

@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: build abstract (ShapeDtypeStruct, no allocation) params /
+optimizer state / caches / inputs with resolved shardings, jit-lower the
+train or serve step against the production mesh, compile, and record
+memory_analysis + cost_analysis + the HLO-parsed roofline terms
+(hlo_analysis handles while-loop trip counts; XLA's own cost model counts
+scan bodies once).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k \
+      --mesh single --out results/
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/]
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def _cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import SHAPES, get_config, shape_applicable
+    from ..configs.base import TrainConfig
+    from ..distributed import abstract_params, count_params, use_mesh
+    from ..models import LM, cache_specs, model_specs
+    from ..training.optimizer import make_train_step, opt_state_specs
+    from .hlo_analysis import analyze
+    from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    lm = LM(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    t0 = time.time()
+
+    with use_mesh(mesh) as ctx:
+        p_specs = model_specs(cfg)
+        params_abs = abstract_params(p_specs, ctx)
+
+        def tok_struct(shp, dtype=jnp.int32, axes=("batch", "seq")):
+            from ..distributed import named_sharding
+            return jax.ShapeDtypeStruct(
+                shp, dtype, sharding=named_sharding(shp, axes, ctx))
+
+        if shape.kind == "train":
+            tcfg = TrainConfig()
+            opt_abs = abstract_params(opt_state_specs(p_specs), ctx)
+            batch = {"tokens": tok_struct((B, S)),
+                     "targets": tok_struct((B, S))}
+            if cfg.modality != "text":
+                batch["embeds"] = tok_struct((B, S, cfg.d_model),
+                                             jnp.bfloat16,
+                                             ("batch", "seq", None))
+            step = make_train_step(lm, tcfg)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_abs, opt_abs, batch)
+        elif shape.kind == "prefill":
+            args = {"tokens": tok_struct((B, S))}
+            if cfg.modality != "text":
+                args["embeds"] = tok_struct((B, S, cfg.d_model),
+                                            jnp.bfloat16,
+                                            ("batch", "seq", None))
+
+            def prefill(params, batch):
+                return lm.prefill(params, batch["tokens"], max_len=S,
+                                  embeds=batch.get("embeds"))
+            lowered = jax.jit(prefill).lower(params_abs, args)
+        else:  # decode
+            cache_abs = abstract_params(cache_specs(cfg, B, S), ctx)
+            token = tok_struct((B,), axes=("batch",))
+            pos = tok_struct((B,), axes=("batch",))
+
+            def decode(params, token, cache, pos):
+                return lm.decode_step(params, token, cache, pos)
+            lowered = jax.jit(decode, donate_argnums=(2,)).lower(
+                params_abs, token, cache_abs, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = analyze(compiled.as_text())
+
+    n_params = count_params(p_specs)
+    # MODEL_FLOPS: 6*N*D for train, 2*N*D per generated/processed token
+    # for serving (N = active params for MoE).
+    n_active = n_params
+    if cfg.n_experts:
+        expert_params = 3 * cfg.d_model * cfg.d_ff
+        n_moe_layers = cfg.n_layers - cfg.first_k_dense
+        n_active = (n_params
+                    - n_moe_layers * cfg.n_experts * expert_params
+                    + n_moe_layers * cfg.top_k * expert_params)
+    tokens = B * S if shape.kind != "decode" else B
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+
+    flops_dev = hlo["flops"]
+    bytes_dev = hlo["bytes"]
+    coll_dev = hlo["collective_bytes"]
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "chips": chips,
+        "n_params": n_params, "n_active_params": n_active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # memory (per device)
+        "mem_temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "mem_arg_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "mem_out_bytes": getattr(mem, "output_size_in_bytes", None),
+        "mem_alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        # xla cost analysis (loops counted once — kept for reference)
+        "xla_flops": cost.get("flops"),
+        "xla_bytes": cost.get("bytes accessed"),
+        # hlo-parsed, per device, trip-count corrected
+        "hlo_flops_dev": flops_dev,
+        "hlo_bytes_dev": bytes_dev,
+        "coll_bytes_dev": coll_dev,
+        "collectives": hlo["collectives"],
+        # roofline terms (seconds)
+        "t_compute": flops_dev / PEAK_FLOPS_BF16,
+        "t_memory": bytes_dev / HBM_BW,
+        "t_collective": coll_dev / ICI_BW,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / (flops_dev * chips)
+                               if flops_dev else None),
+    }
+    terms = {"compute": out["t_compute"], "memory": out["t_memory"],
+             "collective": out["t_collective"]}
+    out["bottleneck"] = max(terms, key=terms.get)
+    out["roofline_fraction"] = (
+        max(terms["compute"], 1e-30) / max(sum(terms.values()), 1e-30))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--overwrite", action="store_true")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from ..configs import ARCHS, SHAPES
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        cells = [(a, s, m) for a in ARCHS for s in SHAPES for m in meshes]
+        failures = 0
+        for a, s, m in cells:
+            tag = f"{a}__{s}__{m}"
+            path = outdir / f"{tag}.json"
+            if path.exists() and not args.overwrite:
+                print(f"[skip-cached] {tag}", flush=True)
+                continue
+            t0 = time.time()
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", a, "--shape", s, "--mesh", m, "--out", args.out],
+                capture_output=True, text=True, timeout=2400)
+            dt = time.time() - t0
+            if r.returncode != 0:
+                failures += 1
+                (outdir / f"{tag}.err").write_text(
+                    r.stdout[-4000:] + "\n---\n" + r.stderr[-8000:])
+                print(f"[FAIL {dt:6.1f}s] {tag}", flush=True)
+            else:
+                print(f"[ok   {dt:6.1f}s] {tag}", flush=True)
+        print(f"done, {failures} failures", flush=True)
+        return
+
+    assert args.arch and args.shape and args.mesh in ("single", "multi")
+    try:
+        res = _cell(args.arch, args.shape, args.mesh == "multi")
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    tag = f"{args.arch}__{args.shape}__{args.mesh}"
+    path = outdir / f"{tag}.json"
+    path.write_text(json.dumps(res, indent=2, default=str))
+    print(json.dumps(
+        {k: res.get(k) for k in
+         ("arch", "shape", "mesh", "status", "reason", "compile_s",
+          "mem_temp_bytes", "hlo_flops_dev", "t_compute", "t_memory",
+          "t_collective", "bottleneck", "useful_flops_ratio")},
+        indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

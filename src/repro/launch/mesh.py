@@ -1,0 +1,38 @@
+"""Production mesh construction (MULTI-POD DRY-RUN spec).
+
+A v5e pod is 16x16 = 256 chips; the multi-pod mesh prepends a "pod" axis
+(2 pods = 512 chips). Functions, not module constants, so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "run under dryrun.py (XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512)")
+    dev = np.array(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (1 device)."""
+    dev = np.array(jax.devices()[:data * model]).reshape((data, model))
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+# Hardware constants (TPU v5e) for the roofline report.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,87 @@
+"""Training driver: real steps on CPU (smoke/reduced configs) with the
+full production substrate — AdamW, remat, checkpoint/restart, straggler
+watchdog, resumable data pipeline.
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+      --smoke --steps 200 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import CheckpointManager
+from ..configs import get_config, get_smoke
+from ..configs.base import TrainConfig
+from ..distributed import materialize
+from ..distributed.elastic import StepWatchdog
+from ..models import LM, model_specs
+from ..training.data import SyntheticLM
+from ..training.optimizer import init_opt_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 10, 1))
+    lm = LM(cfg)
+    params = materialize(model_specs(cfg), jax.random.PRNGKey(tcfg.seed))
+    opt = init_opt_state(params)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                       batch=args.batch, seed=tcfg.seed)
+    step_fn = jax.jit(make_train_step(lm, tcfg), donate_argnums=(0, 1))
+    watchdog = StepWatchdog()
+
+    start = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+        latest, state = ckpt.restore_latest(
+            {"params": params, "opt": opt, "data": data.state_dict()})
+        if latest is not None:
+            params, opt = state["params"], state["opt"]
+            data.load_state(state["data"])
+            start = latest
+            print(f"[train] resumed from step {latest}")
+
+    t_run = time.time()
+    for step in range(start, args.steps):
+        batch = data.next_batch()
+        t0 = time.time()
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        if watchdog.record(dt):
+            print(f"[train] straggler step {step}: {dt:.2f}s")
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt:.2f}s",
+                  flush=True)
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt,
+                                 "data": data.state_dict()})
+    if ckpt:
+        ckpt.save(args.steps, {"params": params, "opt": opt,
+                               "data": data.state_dict()})
+        ckpt.wait()
+    print(f"[train] done in {time.time() - t_run:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

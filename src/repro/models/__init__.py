@@ -1,0 +1,18 @@
+"""repro.models — raw-JAX model zoo for the assigned architectures."""
+from .layers import (attention, attn_specs, attend_cache, bf16,
+                     flash_attention_xla, mlp, mlp_specs, moe, moe_specs,
+                     rmsnorm, apply_rope, apply_mrope)
+from .ssm import ssm_block, ssm_decode, ssm_dims, ssm_init_state, ssm_specs
+from .rwkv import rwkv_block, rwkv_dims, rwkv_init_state, rwkv_specs
+from .transformer import (LM, cache_specs, family_kind, lg_groups,
+                          model_specs, zamba_groups)
+from . import frontends
+
+__all__ = [
+    "attention", "attn_specs", "attend_cache", "bf16",
+    "flash_attention_xla", "mlp", "mlp_specs", "moe", "moe_specs",
+    "rmsnorm", "apply_rope", "apply_mrope", "ssm_block", "ssm_decode",
+    "ssm_dims", "ssm_init_state", "ssm_specs", "rwkv_block", "rwkv_dims",
+    "rwkv_init_state", "rwkv_specs", "LM", "cache_specs", "family_kind",
+    "lg_groups", "model_specs", "zamba_groups", "frontends",
+]

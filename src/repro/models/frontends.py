@@ -1,0 +1,76 @@
+"""Modality frontend STUBS (per assignment: [vlm]/[audio] entries specify
+the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+The stubs document the real interface shape and produce deterministic
+embeddings for tests:
+
+* Qwen2-VL: dynamic-resolution ViT patches -> (B, S_img, d) embeddings +
+  3D M-RoPE position streams (t, h, w) for the image span.
+* MusicGen: EnCodec RVQ tokens, 4 codebooks with the delay pattern ->
+  summed codebook embeddings (B, S, d).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def vision_patch_embeds(cfg: ModelConfig, batch: int, n_patches: int,
+                        key=None):
+    """Stand-in for the Qwen2-VL ViT: (B, n_patches, d_model) embeddings."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.random.normal(key, (batch, n_patches, cfg.d_model),
+                             jnp.bfloat16) * 0.02
+
+
+def mrope_positions(batch: int, n_text: int, n_patches: int, grid_hw=None):
+    """3D position streams for text+image spans (Qwen2-VL Sec. 3).
+
+    Text tokens advance all three streams together; image patches share a
+    time index and advance (h, w) over the patch grid.
+    """
+    h_g = int(n_patches ** 0.5) if grid_hw is None else grid_hw[0]
+    w_g = -(-n_patches // h_g)
+    t_img = jnp.zeros((n_patches,), jnp.int32)
+    h_img = (jnp.arange(n_patches) // w_g).astype(jnp.int32)
+    w_img = (jnp.arange(n_patches) % w_g).astype(jnp.int32)
+    t_txt = jnp.arange(n_text, dtype=jnp.int32) + 1
+    txt = jnp.stack([t_txt, t_txt, t_txt])
+    img = jnp.stack([t_img, h_img, w_img])
+    pos = jnp.concatenate([img, txt], axis=1)          # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, pos.shape[1]))
+
+
+def encodec_token_embeds(params_embed, tokens_4cb):
+    """MusicGen frontend: sum of 4 codebook embeddings with delay pattern.
+
+    tokens_4cb: (B, 4, S) int32 in [0, 2048). The k-th codebook is
+    delayed by k steps (MusicGen's delay interleaving).
+    """
+    B, K, S = tokens_4cb.shape
+    embeds = jnp.zeros((B, S, params_embed.shape[1]), jnp.float32)
+    for k in range(K):
+        shifted = jnp.roll(tokens_4cb[:, k], k, axis=1)
+        shifted = shifted.at[:, :k].set(0)
+        embeds = embeds + jnp.take(params_embed, shifted, axis=0)
+    return embeds / K
+
+
+def input_embeds_for(cfg: ModelConfig, params, tokens, key=None):
+    """Dispatch: text archs embed tokens; vlm/audio stubs build embeds."""
+    if cfg.modality == "vision":
+        B, S = tokens.shape
+        n_img = min(S // 4, 256)
+        img = vision_patch_embeds(cfg, B, n_img, key)
+        txt = jnp.take(params["embed"], tokens[:, n_img:], axis=0)
+        return jnp.concatenate([img, txt.astype(img.dtype)], axis=1)
+    if cfg.modality == "audio":
+        B, S = tokens.shape
+        cb = jnp.stack([tokens, jnp.roll(tokens, 1, 1),
+                        jnp.roll(tokens, 2, 1), jnp.roll(tokens, 3, 1)],
+                       axis=1) % cfg.vocab
+        return encodec_token_embeds(params["embed"], cb)
+    return None

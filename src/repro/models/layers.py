@@ -1,0 +1,407 @@
+"""Transformer building blocks (raw JAX, sharding-annotated).
+
+Attention is implemented blocked ("flash-in-XLA": q-block unrolled,
+k-block scanned with online-softmax carry) so 32k-token prefill never
+materializes an (S, S) score matrix. GQA is computed in grouped layout
+(B, kv, group, S, hd) to avoid repeating KV.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.params import ParamSpec
+from ..distributed.sharding import shard
+
+NEG_INF = -1e30
+
+
+COMPUTE = {"dtype": jnp.bfloat16}
+
+
+def set_compute_dtype(dtype):
+    """Override the model compute dtype (tests use f32 so the
+    prefill/decode-vs-train consistency checks isolate LOGIC errors
+    from bf16 drift)."""
+    COMPUTE["dtype"] = dtype
+
+
+def bf16(w):
+    """Weights are stored fp32 (optimizer master copies); compute in bf16
+    so HLO FLOPs match the v5e bf16 peak used in the roofline."""
+    return w.astype(COMPUTE["dtype"])
+
+
+# -- norms ----------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# -- rotary ------------------------------------------------------------------
+
+def _rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, sections, theta: float = 1e4):
+    """Qwen2-VL M-RoPE: head_dim/2 split into (t, h, w) sections, each
+    rotated by its own position stream. positions_3d: (3, ..., S)."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                      # (hd/2,)
+    sec = jnp.concatenate([jnp.full((s,), i) for i, s in enumerate(sections)])
+    # pick the position stream per frequency slot
+    pos = jnp.take(positions_3d, sec.astype(jnp.int32), axis=0)  # (hd/2,...,S)
+    pos = jnp.moveaxis(pos, 0, -1)                      # (..., S, hd/2)
+    angles = pos.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -- attention ----------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, layers: int = 1) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    lead = (layers,) if layers > 1 else ()
+    lax_ = (None,) if layers > 1 else ()
+    return {
+        "wq": ParamSpec(lead + (d, H * hd), lax_ + ("embed_w", "qkv")),
+        "wk": ParamSpec(lead + (d, KV * hd), lax_ + ("embed_w", "kv")),
+        "wv": ParamSpec(lead + (d, KV * hd), lax_ + ("embed_w", "kv")),
+        "wo": ParamSpec(lead + (H * hd, d), lax_ + ("qkv", "embed_w"),
+                        scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        "norm": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+    }
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    """Project + rope. Returns q: (B,KV,G,S,hd), k/v: (B,KV,S,hd)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    q = (x @ bf16(p["wq"])).reshape(B, S, H, hd)
+    k = (x @ bf16(p["wk"])).reshape(B, S, KV, hd)
+    v = (x @ bf16(p["wv"])).reshape(B, S, KV, hd)
+    if cfg.mrope:
+        pos3 = positions if positions.ndim == 3 else jnp.broadcast_to(
+            positions[None], (3,) + positions.shape)
+        q = apply_mrope(q.swapaxes(1, 2), pos3[:, :, None],
+                        cfg.mrope_sections, cfg.rope_theta).swapaxes(1, 2)
+        k = apply_mrope(k.swapaxes(1, 2), pos3[:, :, None],
+                        cfg.mrope_sections, cfg.rope_theta).swapaxes(1, 2)
+    else:
+        q = apply_rope(q.swapaxes(1, 2), positions[:, None],
+                       cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions[:, None],
+                       cfg.rope_theta).swapaxes(1, 2)
+    q = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    # NOTE: no explicit q/k/v constraints here. The projections inherit
+    # (batch->data, heads*hd->model) from x/w, and GSPMD propagates a
+    # partial head sharding even for non-divisible GQA head counts
+    # (e.g. granite's 24H/8KV on a 16-way model axis becomes an 8-way
+    # head shard with 2-way replication) — measurably better than any
+    # full constraint we can express with NamedSharding (see
+    # EXPERIMENTS.md "involuntary rematerialization" note).
+    return q, k, v
+
+
+def _softcap(logits, cap: float):
+    if cap > 0.0:
+        return jnp.tanh(logits / cap) * cap
+    return logits
+
+
+def flash_attention_xla(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0, softcap: float = 0.0,
+                        q_block: int = 1024, k_block: int = 1024):
+    """Blocked attention with online softmax (pure XLA).
+
+    q: (B, KV, G, Sq, hd); k, v: (B, KV, Sk, hd).
+    ``q_offset``: absolute position of q[...,0,:] relative to k (for
+    caches / chunked prefill). Causal blocks that lie entirely in the
+    future are skipped at trace time (halves prefill FLOPs).
+    """
+    B, KV, G, Sq, hd = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    nq, nk = -(-Sq // q_block), -(-Sk // k_block)
+    # pad to block multiples (padded k columns masked, q rows sliced off)
+    if nq * q_block != Sq:
+        q = jnp.pad(q, ((0, 0),) * 3 + ((0, nq * q_block - Sq), (0, 0)))
+    if nk * k_block != Sk:
+        k = jnp.pad(k, ((0, 0),) * 2 + ((0, nk * k_block - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0),) * 2 + ((0, nk * k_block - Sk), (0, 0)))
+
+    outs = []
+    for qi in range(nq):
+        q_i = jax.lax.dynamic_slice_in_dim(q, qi * q_block, q_block, axis=3)
+        q_lo = q_offset + qi * q_block
+        q_hi = q_lo + q_block - 1
+        acc = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        m = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, KV, G, q_block), jnp.float32)
+
+        for ki in range(nk):
+            k_lo = ki * k_block
+            if causal and k_lo > q_hi:
+                continue                      # entirely in the future
+            if window > 0 and (k_lo + k_block - 1) < q_lo - window + 1 - 1:
+                continue                      # entirely out of the window
+            k_i = jax.lax.dynamic_slice_in_dim(k, k_lo, k_block, axis=2)
+            v_i = jax.lax.dynamic_slice_in_dim(v, k_lo, k_block, axis=2)
+            # bf16 MXU dot, f32 accumulate (keeps operand traffic and
+            # backward collectives in bf16 — EXPERIMENTS.md iter G4)
+            s = jnp.einsum("bkgqh,bkth->bkgqt", q_i, k_i,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            q_idx = q_lo + jnp.arange(q_block)[:, None]
+            k_idx = k_lo + jnp.arange(k_block)[None, :]
+            mask = jnp.ones((q_block, k_block), bool)
+            if causal:
+                mask &= k_idx <= q_idx
+            if window > 0:
+                mask &= k_idx > q_idx - window
+            mask &= k_idx < Sk               # padded k columns
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p_ = jnp.exp(s - m_new[..., None])
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,bkth->bkgqh", p_.astype(v_i.dtype), v_i,
+                preferred_element_type=jnp.float32)
+            l = l * alpha + p_.sum(-1)
+            m = m_new
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    out = jnp.concatenate(outs, axis=3) if len(outs) > 1 else outs[0]
+    return out[..., :Sq, :].astype(q.dtype)
+
+
+def attend_cache(q, k_cache, v_cache, pos, *, window: int = 0,
+                 softcap: float = 0.0, key_positions=None):
+    """Single-token decode attention over a (padded or ring) cache.
+
+    q: (B, KV, G, 1, hd); caches: (B, KV, S, hd); pos: (B,) current
+    ABSOLUTE position. ``key_positions`` (B, S): absolute position of
+    each cache slot (ring-buffer window caches); default = arange(S).
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    # bf16 dot with f32 accumulation: converting the cache to f32 here
+    # makes XLA hoist the convert around the cache update, i.e. the
+    # decode scan would convert the ENTIRE stacked KV cache every layer
+    # (measured 2.7 TB/step on deepseek-67b decode_32k — EXPERIMENTS
+    # iter D2).
+    s = jnp.einsum("bkgqh,bkth->bkgqt", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+    S = k_cache.shape[2]
+    if key_positions is None:
+        key_positions = jnp.broadcast_to(jnp.arange(S)[None, :],
+                                         (q.shape[0], S))
+    valid = (key_positions <= pos[:, None]) & (key_positions >= 0)
+    if window > 0:
+        valid &= key_positions > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,bkth->bkgqh", p.astype(v_cache.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attention(p, x, cfg: ModelConfig, *, positions, window: int = 0,
+              cache: Optional[dict] = None, cache_pos=None,
+              write_pos=None, key_positions=None,
+              update_cache: bool = False):
+    """Full attention sublayer (pre-norm, residual outside).
+
+    Train/prefill: cache=None; update_cache=True returns k/v (bf16).
+    Decode: x is (B, 1, d); cache holds (B, KV, S_cache, hd);
+    ``cache_pos`` (B,) is the ABSOLUTE position, ``write_pos`` the cache
+    slot to write (defaults to cache_pos; ring caches pass pos % W with
+    ``key_positions`` giving slot->absolute-position mapping).
+    Returns (out, new_cache_kv or None).
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, positions)
+    new_cache = None
+    if cache is not None and S == 1:            # decode step
+        pos = cache_pos                          # (B,) absolute
+        wpos = write_pos if write_pos is not None else pos
+        k = k.astype(cache["k"].dtype)
+        v = v.astype(cache["v"].dtype)
+        k_cache = jax.vmap(
+            lambda c, upd, i: jax.lax.dynamic_update_slice_in_dim(
+                c, upd, i, axis=1))(cache["k"], k, wpos)
+        v_cache = jax.vmap(
+            lambda c, upd, i: jax.lax.dynamic_update_slice_in_dim(
+                c, upd, i, axis=1))(cache["v"], v, wpos)
+        out = attend_cache(q, k_cache, v_cache, pos, window=window,
+                           softcap=cfg.attn_logit_softcap,
+                           key_positions=key_positions)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:                                        # train / prefill
+        out = flash_attention_xla(q, k, v, causal=True, window=window,
+                                  softcap=cfg.attn_logit_softcap)
+        if update_cache:
+            new_cache = {"k": k.astype(COMPUTE["dtype"]),
+                         "v": v.astype(COMPUTE["dtype"])}
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H * hd)
+    out = out @ bf16(p["wo"])
+    return shard(out, "batch", "seq", None), new_cache
+
+
+# -- MLP -----------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, layers: int = 1, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    lead = (layers,) if layers > 1 else ()
+    lax_ = (None,) if layers > 1 else ()
+    return {
+        "w_gate": ParamSpec(lead + (d, f), lax_ + ("embed_w", "mlp")),
+        "w_up": ParamSpec(lead + (d, f), lax_ + ("embed_w", "mlp")),
+        "w_down": ParamSpec(lead + (f, d), lax_ + ("mlp", "embed_w"),
+                            scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        "norm": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(h @ bf16(p["w_gate"])) * (h @ bf16(p["w_up"]))
+    h = shard(h, "batch", "seq", "mlp")
+    return shard(h @ bf16(p["w_down"]), "batch", "seq", None)
+
+
+# -- MoE (sort-based dispatch, static shapes, true EP) --------------------------
+
+def moe_specs(cfg: ModelConfig, layers: int = 1):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    lead = (layers,) if layers > 1 else ()
+    lax_ = (None,) if layers > 1 else ()
+    return {
+        "router": ParamSpec(lead + (d, E), lax_ + ("embed_w", None)),
+        "w_gate": ParamSpec(lead + (E, d, f),
+                            lax_ + ("experts", "moe_d", "mlp")),
+        "w_up": ParamSpec(lead + (E, d, f),
+                          lax_ + ("experts", "moe_d", "mlp")),
+        "w_down": ParamSpec(lead + (E, f, d),
+                            lax_ + ("experts", "mlp", "moe_d"),
+                            scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        "norm": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+    }
+
+
+def _dispatch_row(flat, eids, gates, E: int, K: int, C: int):
+    """Per-batch-row sort-based dispatch: (S,D) tokens -> (E,C,D) buffer
+    + combine metadata. Runs UNDER vmap over the (data-sharded) batch
+    dim so the sort never crosses devices. The scatter uses SORTED,
+    UNIQUE flattened (expert*C + slot) indices — without those hints XLA
+    materializes buf-sized u32 sort scratch (measured 4 GB/layer)."""
+    S = flat.shape[0]
+    a_exp = eids.reshape(-1)                               # (S*K,)
+    a_gate = gates.reshape(-1)
+    order = jnp.argsort(a_exp)                             # stable
+    s_exp = a_exp[order]
+    s_tok = (jnp.arange(S * K) // K)[order]
+    s_gate = a_gate[order]
+    # position within expert = rank among same-expert assignments
+    seg_pos = jnp.cumsum(jnp.ones_like(s_exp)) - 1
+    counts = jnp.bincount(s_exp, length=E)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = seg_pos - starts[s_exp]
+    # strictly-increasing flat slot; overflow pushed out of bounds
+    flat_idx = jnp.where(pos_in_e < C, s_exp * C + pos_in_e, E * C)
+    buf = jnp.zeros((E * C, flat.shape[1]), flat.dtype)
+    buf = buf.at[flat_idx].set(flat[s_tok], mode="drop",
+                               unique_indices=True,
+                               indices_are_sorted=True)
+    return buf.reshape(E, C, flat.shape[1]), \
+        (order, flat_idx, s_gate)
+
+
+def _combine_row(yexp, meta, S: int, K: int, D: int):
+    """Scatter-free combine: gather expert outputs back in sorted
+    order, unsort by the inverse permutation, reduce over the K
+    assignments per token."""
+    order, flat_idx, s_gate = meta
+    E, C, _ = yexp.shape
+    gathered = yexp.reshape(E * C, D).at[flat_idx].get(
+        mode="fill", fill_value=0.0, indices_are_sorted=True,
+        unique_indices=True)                               # (S*K, D)
+    contrib = gathered * s_gate[:, None].astype(gathered.dtype)
+    inv = jnp.argsort(order)
+    return contrib.at[inv].get(unique_indices=True) \
+        .reshape(S, K, D).sum(axis=1)
+
+
+def moe(p, x, cfg: ModelConfig):
+    """Top-k MoE with PER-ROW sort-based capacity dispatch.
+
+    Each batch row's tokens are sorted by assigned expert and scattered
+    into a (E, C, d) buffer (overflow dropped — capacity semantics),
+    vmapped over the data-sharded batch dim (sorts stay device-local).
+    Expert FFNs run as batched einsums with E sharded (expert
+    parallelism — GSPMD inserts the all-to-alls); combine weights by
+    renormalized router gates. Returns (y, aux_load_balance_loss).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+
+    logits = (h @ bf16(p["router"])).astype(jnp.float32)   # (B, S, E)
+    probs = jax.nn.softmax(logits, -1)
+    gates, eids = jax.lax.top_k(probs, K)                  # (B, S, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(eids[..., 0], E).reshape(-1, E), axis=0)
+    density_prob = probs.reshape(-1, E).mean(0)
+    aux = E * jnp.sum(density * density_prob)
+
+    C = max(int(S * K / E * cfg.capacity_factor), 1)
+    buf, meta = jax.vmap(
+        lambda f, e, g: _dispatch_row(f, e, g, E, K, C))(h, eids, gates)
+    buf = shard(buf, "batch", "experts", "moe_cap", "moe_d")
+
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    # keep the (possibly partial-sum) expert activations in bf16 so the
+    # contraction all-reduce moves half the bytes (EXPERIMENTS iter G5)
+    hexp = (act(jnp.einsum("becd,edf->becf", buf, bf16(p["w_gate"])))
+            * jnp.einsum("becd,edf->becf", buf, bf16(p["w_up"]))) \
+        .astype(jnp.bfloat16)
+    hexp = shard(hexp, "batch", "experts", "moe_cap", "mlp")
+    yexp = jnp.einsum("becf,efd->becd", hexp, bf16(p["w_down"]))
+    yexp = shard(yexp, "batch", "experts", "moe_cap", "moe_d")
+
+    y = jax.vmap(lambda ye, m: _combine_row(ye, m, S, K, D))(yexp, meta)
+    return shard(y, "batch", "seq", None), aux

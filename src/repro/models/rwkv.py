@@ -1,0 +1,224 @@
+"""RWKV6 ("Finch") block — linear attention with data-dependent decay.
+
+Time-mix: per-channel decay w_t = exp(-exp(lora(x_t))) (the Finch
+feature), multi-head matrix-valued state S: (B, nh, hd, hd) updated as
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t,   o_t = r_t @ (S_{t-1} + u k_t^T v_t)
+Channel-mix: squared-ReLU FFN with token shift.
+
+Train/prefill scans over time in CHUNKS (sequential scan over chunks,
+within-chunk parallel form), so HLO stays small at 32k tokens. Decode is
+a constant-memory state update (what makes rwkv6 long_500k decode cheap).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.params import ParamSpec
+from ..distributed.sharding import shard
+from .layers import bf16
+
+
+def rwkv_dims(cfg: ModelConfig):
+    nh = cfg.d_model // cfg.rwkv_head_dim
+    return nh, cfg.rwkv_head_dim
+
+
+def rwkv_specs(cfg: ModelConfig, layers: int = 1) -> dict:
+    d = cfg.d_model
+    nh, hd = rwkv_dims(cfg)
+    lead = (layers,) if layers > 1 else ()
+    lax_ = (None,) if layers > 1 else ()
+    lora = 64
+    spec = {
+        # time-mix
+        "tm_norm": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "mu_r": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "mu_k": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "mu_v": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "mu_g": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "mu_w": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "w_r": ParamSpec(lead + (d, d), lax_ + ("embed_w", "qkv")),
+        "w_k": ParamSpec(lead + (d, d), lax_ + ("embed_w", "qkv")),
+        "w_v": ParamSpec(lead + (d, d), lax_ + ("embed_w", "qkv")),
+        "w_g": ParamSpec(lead + (d, d), lax_ + ("embed_w", "qkv")),
+        "w_o": ParamSpec(lead + (d, d), lax_ + ("qkv", "embed_w"),
+                         scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        # data-dependent decay LoRA (Finch)
+        "wd_a": ParamSpec(lead + (d, lora), lax_ + ("embed_w", None)),
+        "wd_b": ParamSpec(lead + (lora, d), lax_ + (None, None)),
+        "w_bias": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "u": ParamSpec(lead + (nh, hd), lax_ + (None, None), init="zeros"),
+        "o_norm": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        # channel-mix
+        "cm_norm": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "mu_ck": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "w_ck": ParamSpec(lead + (d, cfg.d_ff), lax_ + ("embed_w", "mlp")),
+        "w_cv": ParamSpec(lead + (cfg.d_ff, d), lax_ + ("mlp", "embed_w"),
+                          scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+    return spec
+
+
+def _token_shift(x, prev):
+    """shifted[t] = x[t-1]; shifted[0] = prev (carry across chunks)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _lerp(x, shifted, mu):
+    return x + (shifted - x) * mu.astype(x.dtype)
+
+
+RWKV_CHUNK = 16           # chunked-parallel block (exponent-safe in f32)
+_LOGW_MIN = -4.0          # clamp per-step log-decay (|cum| <= 64 in-chunk)
+
+
+def _time_mix_projections(p, x, cfg: ModelConfig, state: dict):
+    from .layers import rmsnorm
+    B, S, d = x.shape
+    nh, hd = rwkv_dims(cfg)
+    h = rmsnorm(x, p["tm_norm"], cfg.norm_eps)
+    shifted = _token_shift(h, state["x_tm"])
+    r = _lerp(h, shifted, p["mu_r"]) @ bf16(p["w_r"])
+    k = _lerp(h, shifted, p["mu_k"]) @ bf16(p["w_k"])
+    v = _lerp(h, shifted, p["mu_v"]) @ bf16(p["w_v"])
+    g = jax.nn.silu(_lerp(h, shifted, p["mu_g"]) @ bf16(p["w_g"]))
+    xw = _lerp(h, shifted, p["mu_w"])
+    logw = -jnp.exp(((xw @ bf16(p["wd_a"])) @ bf16(p["wd_b"])
+                     + p["w_bias"]).astype(jnp.float32))
+    logw = jnp.maximum(logw, _LOGW_MIN)
+    rh = r.reshape(B, S, nh, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, nh, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, nh, hd).astype(jnp.float32)
+    lw = logw.reshape(B, S, nh, hd)
+    return h, rh, kh, vh, lw, g
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, state: dict):
+    """Full-sequence time-mix.
+
+    Uses the CHUNKED-PARALLEL form (matrix state advanced once per
+    16-token chunk; intra-chunk term as decay-weighted (Q,Q) matmuls)
+    whenever S is a chunk multiple — the per-timestep sequential scan
+    re-reads the (nh,hd,hd) state from HBM every token, which made
+    rwkv6 train_4k 2488 s memory-bound in the baseline dry-run
+    (EXPERIMENTS.md Sec. Perf, iteration R1). Sequential scan kept as
+    the S==1 / ragged fallback.
+
+    x: (B,S,d). state: {"S": (B,nh,hd,hd), "x_tm": (B,d)}.
+    """
+    from .layers import rmsnorm
+    B, S, d = x.shape
+    nh, hd = rwkv_dims(cfg)
+    h, rh, kh, vh, lw, g = _time_mix_projections(p, x, cfg, state)
+
+    if S % RWKV_CHUNK == 0 and S > 1:
+        S_final, o = _time_mix_chunked(p, rh, kh, vh, lw, state["S"])
+    else:
+        S_final, o = _time_mix_sequential(p, rh, kh, vh, lw, state["S"])
+    o = o.reshape(B, S, d)
+    o = rmsnorm(o.astype(x.dtype), p["o_norm"], cfg.norm_eps) * g
+    out = (o @ bf16(p["w_o"])).astype(x.dtype)
+    new_state = {"S": S_final, "x_tm": h[:, -1].astype(jnp.float32)}
+    return shard(out, "batch", "seq", None), new_state
+
+
+def _time_mix_sequential(p, rh, kh, vh, lw, S0):
+    B, S, nh, hd = rh.shape
+    wh = jnp.exp(lw)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp                         # (B,nh,hd)
+        kv = jnp.einsum("bnk,bnv->bnkv", k_t, v_t)
+        o = jnp.einsum("bnk,bnkv->bnv", r_t,
+                       S_ + p["u"][None, :, :, None] * kv)
+        S_ = w_t[..., None] * S_ + kv
+        return S_, o
+
+    inputs = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+              vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+    S_final, os = jax.lax.scan(step, S0, inputs)
+    return S_final, os.transpose(1, 0, 2, 3)
+
+
+def _time_mix_chunked(p, rh, kh, vh, lw, S0, chunk: int = RWKV_CHUNK):
+    """Exact chunked-parallel RWKV6 (diagonal data-dependent decay):
+
+    with per-chunk cumulative log-decay c_t (reset each chunk),
+      o_t = (r_t * e^{c_{t-1}}) @ S_chunk + sum_{j<t} [(r_t e^{c_{t-1}})
+            . (k_j e^{-c_j})] v_j + (r_t . (u*k_t)) v_t
+      S'  = e^{c_Q} * S_chunk + sum_j (k_j e^{c_Q - c_j})^T v_j
+    All exponents are <= 0 except e^{-c_j} in the score term, bounded by
+    chunk * |LOGW_MIN| (safe in f32 for chunk=16)."""
+    B, S, nh, hd = rh.shape
+    Q = chunk
+    nc = S // Q
+    r_c = rh.reshape(B, nc, Q, nh, hd)
+    k_c = kh.reshape(B, nc, Q, nh, hd)
+    v_c = vh.reshape(B, nc, Q, nh, hd)
+    cum = jnp.cumsum(lw.reshape(B, nc, Q, nh, hd), axis=2)  # c_t
+    cum_prev = cum - lw.reshape(B, nc, Q, nh, hd)           # c_{t-1}
+    r_dec = r_c * jnp.exp(cum_prev)
+    k_dec = k_c * jnp.exp(-cum)                             # bounded
+    k_end = k_c * jnp.exp(cum[:, :, -1:] - cum)             # <= 1
+    # intra-chunk scores (strictly lower-triangular) + u-bonus diagonal
+    scores = jnp.einsum("bcqnh,bctnh->bcnqt", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bcqnh,bcqnh->bcnq", r_c,
+                      p["u"][None, None, None] * k_c)
+    idx = jnp.arange(Q)
+    scores = scores.at[..., idx, idx].add(diag)
+
+    def chunk_step(S_, inp):
+        rd, sc, ke, vv, tot = inp
+        o = jnp.einsum("bqnh,bnhv->bqnv", rd, S_) + \
+            jnp.einsum("bnqt,btnv->bqnv", sc, vv)
+        S_ = jnp.exp(tot)[:, 0, :, :, None] * S_ + \
+            jnp.einsum("bqnh,bqnv->bnhv", ke, vv)
+        return S_, o
+
+    inputs = (r_dec.transpose(1, 0, 2, 3, 4),
+              scores.transpose(1, 0, 2, 3, 4),
+              k_end.transpose(1, 0, 2, 3, 4),
+              v_c.transpose(1, 0, 2, 3, 4),
+              cum[:, :, -1:].transpose(1, 0, 2, 3, 4))
+    S_final, os = jax.lax.scan(chunk_step, S0, inputs)
+    o = os.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+    return S_final, o
+
+
+def rwkv_channel_mix(p, x, cfg: ModelConfig, state: dict):
+    from .layers import rmsnorm
+    h = rmsnorm(x, p["cm_norm"], cfg.norm_eps)
+    shifted = _token_shift(h, state["x_cm"])
+    kx = _lerp(h, shifted, p["mu_ck"])
+    hidden = jnp.square(jax.nn.relu(kx @ bf16(p["w_ck"])))
+    hidden = shard(hidden, "batch", "seq", "mlp")
+    out = (hidden @ bf16(p["w_cv"])).astype(x.dtype)
+    return shard(out, "batch", "seq", None), \
+        {"x_cm": h[:, -1].astype(jnp.float32)}
+
+
+def rwkv_block(p, x, cfg: ModelConfig, state: Optional[dict] = None):
+    B = x.shape[0]
+    if state is None:
+        state = rwkv_init_state(cfg, B)
+    tm_out, tm_state = rwkv_time_mix(p, x, cfg, state)
+    x = x + tm_out
+    cm_out, cm_state = rwkv_channel_mix(p, x, cfg, state)
+    x = x + cm_out
+    return x, {**tm_state, **cm_state}
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int) -> dict:
+    nh, hd = rwkv_dims(cfg)
+    return {
+        "S": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "x_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }

@@ -1,0 +1,151 @@
+"""Mamba2 (SSD) block — chunked selective state-space layer.
+
+Implements the SSD chunked algorithm: intra-chunk quadratic term +
+inter-chunk recurrence over chunk states (lax.scan over chunks). Decode
+is a single recurrent state update (constant memory — this is what makes
+zamba2 long_500k decode cheap).
+
+Layout: d_inner = expand * d_model, nh = d_inner / ssm_head_dim heads,
+scalar decay per head (Mamba2's A), single B/C group.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.params import ParamSpec
+from ..distributed.sharding import shard
+from .layers import bf16
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssm_specs(cfg: ModelConfig, layers: int = 1) -> dict:
+    d = cfg.d_model
+    d_in, nh, hd, ds = ssm_dims(cfg)
+    lead = (layers,) if layers > 1 else ()
+    lax_ = (None,) if layers > 1 else ()
+    return {
+        "w_xz": ParamSpec(lead + (d, 2 * d_in), lax_ + ("embed_w", "mlp")),
+        "w_B": ParamSpec(lead + (d, ds), lax_ + ("embed_w", None)),
+        "w_C": ParamSpec(lead + (d, ds), lax_ + ("embed_w", None)),
+        "w_dt": ParamSpec(lead + (d, nh), lax_ + ("embed_w", None)),
+        "dt_bias": ParamSpec(lead + (nh,), lax_ + (None,), init="zeros"),
+        "A_log": ParamSpec(lead + (nh,), lax_ + (None,), init="zeros"),
+        "D": ParamSpec(lead + (nh,), lax_ + (None,), init="ones"),
+        "w_out": ParamSpec(lead + (d_in, d), lax_ + ("mlp", "embed_w"),
+                           scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+        "norm": ParamSpec(lead + (d,), lax_ + (None,), init="zeros"),
+        "out_norm": ParamSpec(lead + (d_in,), lax_ + (None,), init="zeros"),
+    }
+
+
+def _proj(p, x, cfg: ModelConfig):
+    """Shared projections. Returns xh (B,S,nh,hd), z, B_, C_, loga."""
+    from .layers import rmsnorm
+    d_in, nh, hd, ds = ssm_dims(cfg)
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xz = h @ bf16(p["w_xz"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    B_ = h @ bf16(p["w_B"])                                    # (B,S,ds)
+    C_ = h @ bf16(p["w_C"])                                    # (B,S,ds)
+    dt = jax.nn.softplus((h @ bf16(p["w_dt"])) + p["dt_bias"]) # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (nh,)
+    loga = dt.astype(jnp.float32) * A                    # log decay, <=0
+    xh = xin.reshape(x.shape[0], x.shape[1], nh, hd)
+    # dt-weighted input (Mamba2: x_bar = x * dt)
+    xbar = xh.astype(jnp.float32) * dt[..., None]
+    return xbar, xh, z, B_, C_, loga
+
+
+def ssm_block(p, x, cfg: ModelConfig, *, state: Optional[dict] = None):
+    """Train/prefill: full sequence, chunked scan.
+
+    Returns (out, final_state) where state = {"h": (B,nh,hd,ds),
+    "last": unused placeholder}.
+    """
+    from .layers import rmsnorm
+    B, S, _ = x.shape
+    d_in, nh, hd, ds = ssm_dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    nchunks = -(-S // Q)
+    pad = nchunks * Q - S
+    xbar, xh, z, B_, C_, loga = _proj(p, x, cfg)
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+
+    # (B, nc, Q, ...) chunked views
+    xbar_c = xbar.reshape(B, nchunks, Q, nh, hd)
+    B_c = B_.reshape(B, nchunks, Q, ds)
+    C_c = C_.reshape(B, nchunks, Q, ds)
+    loga_c = loga.reshape(B, nchunks, Q, nh)
+    cum = jnp.cumsum(loga_c, axis=2)                     # (B,nc,Q,nh)
+    total = cum[:, :, -1]                                # (B,nc,nh)
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, nh, hd, ds), jnp.float32))
+
+    def chunk_step(h, inp):
+        xb, Bc, Cc, cm, tot = inp                        # per-chunk slices
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j <= i
+        diff = cm[:, :, None, :] - cm[:, None, :, :]     # (B,Q,Q,nh)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        sBB = jnp.einsum("bqs,bts->bqt", Cc, Bc)         # (B,Q,Q)
+        y_intra = jnp.einsum("bqt,bqtn,btnh->bqnh", sBB, L, xb)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqs,bnhs,bqn->bqnh", Cc, h,
+                             jnp.exp(cm))
+        # state update: decay old + within-chunk outer products
+        decay_to_end = jnp.exp(tot[:, None, :] - cm)     # (B,Q,nh)
+        dstate = jnp.einsum("bqnh,bqs,bqn->bnhs", xb, Bc, decay_to_end)
+        h_new = h * jnp.exp(tot)[:, :, None, None] + dstate
+        return h_new, y_intra + y_inter
+
+    inputs = (xbar_c.transpose(1, 0, 2, 3, 4), B_c.transpose(1, 0, 2, 3),
+              C_c.transpose(1, 0, 2, 3), cum.transpose(1, 0, 2, 3),
+              total.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(chunk_step, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nchunks * Q, nh, hd)[:, :S]
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm(y.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ bf16(p["w_out"])
+    return shard(out, "batch", "seq", None), {"h": h_final}
+
+
+def ssm_decode(p, x, cfg: ModelConfig, state: dict):
+    """Single-token recurrent update. x: (B,1,d)."""
+    from .layers import rmsnorm
+    B = x.shape[0]
+    d_in, nh, hd, ds = ssm_dims(cfg)
+    xbar, xh, z, B_, C_, loga = _proj(p, x, cfg)
+    xb = xbar[:, 0]                                      # (B,nh,hd)
+    Bc, Cc = B_[:, 0], C_[:, 0]                          # (B,ds)
+    a = jnp.exp(loga[:, 0])                              # (B,nh)
+    h = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bnh,bs->bnhs", xb, Bc)
+    y = jnp.einsum("bnhs,bs->bnh", h, Cc)
+    y = y + xh[:, 0].astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in)
+    y = rmsnorm(y.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ bf16(p["w_out"])
+    return out, {"h": h}
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d_in, nh, hd, ds = ssm_dims(cfg)
+    return {"h": jnp.zeros((batch, nh, hd, ds), jnp.float32)}

@@ -1,0 +1,572 @@
+"""Decoder-only LM assembly for all assigned architecture families.
+
+Families:
+* uniform      — dense / MoE / vlm / audio stacks (identical layers,
+                 optional leading dense-MLP layers), lax.scan over layers
+* local_global — gemma3: scanned super-blocks of (R local + 1 global)
+                 attention with SEPARATE window/full KV cache trees
+                 (window caches are ring buffers in decode)
+* zamba        — Mamba2 backbone scanned as super-blocks of
+                 ``shared_attn_every`` SSM layers + one WEIGHT-SHARED
+                 attention block (its own per-application KV cache)
+* rwkv         — RWKV6 time-mix/channel-mix stack
+
+Three entry points per model: ``loss`` (train, chunked CE — never
+materializes (B,S,V)), ``prefill`` (returns last-token logits + cache),
+``decode_step`` (one token, updates the cache).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.params import ParamSpec
+from ..distributed.sharding import shard
+from .layers import attention, attn_specs, mlp, mlp_specs, moe, moe_specs, \
+    rmsnorm
+from .rwkv import rwkv_block, rwkv_dims, rwkv_specs
+from .ssm import ssm_block, ssm_decode, ssm_dims, ssm_specs
+
+CE_CHUNK = 256
+
+
+def family_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "ssm":
+        return "rwkv"
+    if cfg.family == "hybrid":
+        return "zamba"
+    if cfg.local_global_ratio > 0:
+        return "local_global"
+    return "uniform"
+
+
+def _stack(specs, *lead: int):
+    """Add leading stacking axes to every ParamSpec in a tree."""
+    extra = tuple(lead)
+    return jax.tree.map(
+        lambda p: ParamSpec(extra + p.shape, (None,) * len(extra) + p.axes,
+                            p.init, p.scale, p.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def zamba_groups(cfg: ModelConfig) -> tuple[int, int]:
+    """(#super-blocks, #tail ssm layers)."""
+    every = cfg.shared_attn_every or cfg.n_layers + 1
+    return divmod(cfg.n_layers, every)
+
+
+def lg_groups(cfg: ModelConfig) -> tuple[int, int]:
+    return divmod(cfg.n_layers, cfg.local_global_ratio + 1)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def model_specs(cfg: ModelConfig) -> dict:
+    kind = family_kind(cfg)
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_w"),
+                           scale=1.0),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                     ("embed_w", "vocab"))
+    if kind == "uniform":
+        n_body = cfg.n_layers - cfg.first_k_dense
+        body = {"attn": _stack(attn_specs(cfg), n_body)}
+        if cfg.n_experts > 0:
+            body["moe"] = _stack(moe_specs(cfg), n_body)
+        else:
+            body["mlp"] = _stack(mlp_specs(cfg), n_body)
+        specs["blocks"] = body
+        if cfg.first_k_dense:
+            d_ff_head = (cfg.top_k * cfg.d_ff
+                         if cfg.n_experts else cfg.d_ff)
+            specs["head_layers"] = {
+                "attn": _stack(attn_specs(cfg), cfg.first_k_dense),
+                "mlp": _stack(mlp_specs(cfg, d_ff=d_ff_head),
+                              cfg.first_k_dense),
+            }
+    elif kind == "local_global":
+        R = cfg.local_global_ratio
+        G, tail = lg_groups(cfg)
+        specs["blocks"] = {
+            "local": _stack(attn_specs(cfg), G, R),
+            "local_mlp": _stack(mlp_specs(cfg), G, R),
+            "global": {"attn": _stack(attn_specs(cfg), G),
+                       "mlp": _stack(mlp_specs(cfg), G)},
+        }
+        if tail:
+            specs["tail"] = {"attn": _stack(attn_specs(cfg), tail),
+                             "mlp": _stack(mlp_specs(cfg), tail)}
+    elif kind == "zamba":
+        G, tail = zamba_groups(cfg)
+        every = cfg.shared_attn_every
+        specs["blocks"] = _stack(ssm_specs(cfg), G, every)
+        if tail:
+            specs["tail"] = _stack(ssm_specs(cfg), tail)
+        specs["shared_attn"] = attn_specs(cfg)
+        specs["shared_mlp"] = mlp_specs(cfg)
+    elif kind == "rwkv":
+        specs["blocks"] = _stack(rwkv_specs(cfg), cfg.n_layers)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# cache specs (shapes + logical axes, consumed by the dry-run)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    kind = family_kind(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+
+    def kv(length, *lead):
+        axes = (None,) * len(lead) + ("batch", "kv_heads", "kv_seq", None)
+        shape = tuple(lead) + (batch, KV, length, hd)
+        return {"k": ParamSpec(shape, axes, init="zeros", dtype="bfloat16"),
+                "v": ParamSpec(shape, axes, init="zeros", dtype="bfloat16")}
+
+    if kind == "uniform":
+        out = {"body": kv(max_len, cfg.n_layers - cfg.first_k_dense)}
+        if cfg.first_k_dense:
+            out["head"] = kv(max_len, cfg.first_k_dense)
+        return out
+    if kind == "local_global":
+        R = cfg.local_global_ratio
+        G, tail = lg_groups(cfg)
+        W = min(cfg.local_window, max_len)
+        out = {"local": kv(W, G, R), "global": kv(max_len, G)}
+        if tail:
+            out["tail"] = kv(W, tail)
+        return out
+    if kind == "zamba":
+        d_in, nh, shd, ds = ssm_dims(cfg)
+        G, tail = zamba_groups(cfg)
+        every = cfg.shared_attn_every
+        h_axes = ("batch", None, None, None)
+        out = {
+            "ssm_h": ParamSpec((G, every, batch, nh, shd, ds),
+                               (None, None) + h_axes, init="zeros"),
+            "shared": kv(max_len, G),
+        }
+        if tail:
+            out["tail_h"] = ParamSpec((tail, batch, nh, shd, ds),
+                                      (None,) + h_axes, init="zeros")
+        return out
+    if kind == "rwkv":
+        nh, rhd = rwkv_dims(cfg)
+        L, d = cfg.n_layers, cfg.d_model
+        return {
+            "S": ParamSpec((L, batch, nh, rhd, rhd),
+                           (None, "batch", None, None, None), init="zeros"),
+            "x_tm": ParamSpec((L, batch, d), (None, "batch", None),
+                              init="zeros"),
+            "x_cm": ParamSpec((L, batch, d), (None, "batch", None),
+                              init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LM:
+    cfg: ModelConfig
+
+    # -- embeddings -----------------------------------------------------
+    def embed(self, params, tokens):
+        from .layers import COMPUTE
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x * math.sqrt(self.cfg.d_model)
+        return shard(x.astype(COMPUTE["dtype"]), "batch", "seq", None)
+
+    def embed_vectors(self, params, embeds):
+        """Modality-frontend stub entry: precomputed patch/frame embeds."""
+        from .layers import COMPUTE
+        return shard(embeds.astype(COMPUTE["dtype"]), "batch", "seq", None)
+
+    def unembed(self, params, h):
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        logits = h.astype(jnp.float32) @ head.astype(jnp.float32)
+        return shard(logits, "batch", "seq", "vocab")
+
+    # -- one attention+mlp/moe layer --------------------------------------
+    def _layer(self, p, x, positions, *, window=0, cache=None,
+               cache_pos=None, write_pos=None, key_positions=None,
+               update_cache=False, mlp_p=None):
+        cfg = self.cfg
+        a, new_kv = attention(p["attn"], x, cfg, positions=positions,
+                              window=window, cache=cache,
+                              cache_pos=cache_pos, write_pos=write_pos,
+                              key_positions=key_positions,
+                              update_cache=update_cache)
+        x = x + a
+        aux = 0.0
+        if "moe" in p:
+            mo, aux = moe(p["moe"], x, cfg)
+            x = x + mo
+        else:
+            mp = mlp_p if mlp_p is not None else p["mlp"]
+            x = x + mlp(mp, x, cfg)
+        return x, new_kv, aux
+
+    # ======================== TRAIN =====================================
+    def hidden_train(self, params, x, positions, remat: bool = True):
+        cfg = self.cfg
+        kind = family_kind(cfg)
+        ck = jax.checkpoint if remat else (lambda f: f)
+        aux_total = 0.0
+
+        if kind == "uniform":
+            if cfg.first_k_dense:
+                def head_body(xc, p_l):
+                    xc, _, _ = self._layer({"attn": p_l["attn"]}, xc,
+                                           positions, mlp_p=p_l["mlp"])
+                    return xc, None
+                x, _ = jax.lax.scan(ck(head_body), x, params["head_layers"])
+
+            def body(carry, p_l):
+                xc, aux = carry
+                xc, _, a = self._layer(p_l, xc, positions)
+                return (xc, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(ck(body), (x, 0.0),
+                                             params["blocks"])
+
+        elif kind == "local_global":
+            W = cfg.local_window
+
+            def group(carry, p_g):
+                xc, aux = carry
+
+                def loc(xc, p_l):
+                    p_a, p_m = p_l
+                    xc, _, _ = self._layer({"attn": p_a}, xc, positions,
+                                           window=W, mlp_p=p_m)
+                    return xc, None
+                xc, _ = jax.lax.scan(loc, xc,
+                                     (p_g["local"], p_g["local_mlp"]))
+                xc, _, _ = self._layer(
+                    {"attn": p_g["global"]["attn"]}, xc, positions,
+                    mlp_p=p_g["global"]["mlp"])
+                return (xc, aux), None
+            (x, aux_total), _ = jax.lax.scan(ck(group), (x, 0.0),
+                                             params["blocks"])
+            if "tail" in params:
+                def tail(xc, p_l):
+                    xc, _, _ = self._layer({"attn": p_l[0]}, xc, positions,
+                                           window=W, mlp_p=p_l[1])
+                    return xc, None
+                x, _ = jax.lax.scan(ck(tail), x, (params["tail"]["attn"],
+                                                  params["tail"]["mlp"]))
+
+        elif kind == "zamba":
+            def group(xc, p_g):
+                def ssm_l(xc, p_l):
+                    out, _ = ssm_block(p_l, xc, cfg)
+                    return xc + out, None
+                xc, _ = jax.lax.scan(ssm_l, xc, p_g)
+                xc, _, _ = self._layer({"attn": params["shared_attn"]}, xc,
+                                       positions,
+                                       mlp_p=params["shared_mlp"])
+                return xc, None
+            x, _ = jax.lax.scan(ck(group), x, params["blocks"])
+            if "tail" in params:
+                def ssm_t(xc, p_l):
+                    out, _ = ssm_block(p_l, xc, cfg)
+                    return xc + out, None
+                x, _ = jax.lax.scan(ck(ssm_t), x, params["tail"])
+
+        elif kind == "rwkv":
+            def body(xc, p_l):
+                xc, _ = rwkv_block(p_l, xc, cfg)
+                return xc, None
+            x, _ = jax.lax.scan(ck(body), x, params["blocks"])
+
+        return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux_total
+
+    # -- loss (chunked CE) -----------------------------------------------
+    def loss(self, params, tokens, targets, z_loss: float = 1e-4,
+             embeds=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = (self.embed(params, tokens) if embeds is None
+             else self.embed_vectors(params, embeds))
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, aux = self.hidden_train(params, x, positions)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        n_chunk = max(S // CE_CHUNK, 1)
+        cs = S // n_chunk
+
+        def ce_chunk(carry, idx):
+            h_c = jax.lax.dynamic_slice_in_dim(h, idx * cs, cs, axis=1)
+            t_c = jax.lax.dynamic_slice_in_dim(targets, idx * cs, cs,
+                                               axis=1)
+            logits = h_c.astype(jnp.float32) @ head.astype(jnp.float32)
+            logits = shard(logits, "batch", "ce_seq", "vocab")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(logits, t_c[..., None],
+                                      axis=-1)[..., 0]
+            ce = (lse - tgt).sum() + z_loss * jnp.square(lse).sum()
+            return carry + ce, None
+        total, _ = jax.lax.scan(ce_chunk, 0.0, jnp.arange(n_chunk))
+        loss = total / (B * n_chunk * cs)
+        if cfg.n_experts:
+            loss = loss + 0.01 * aux / max(cfg.n_layers, 1)
+        return loss
+
+    def logits_train(self, params, tokens):
+        """Full logits — small inputs only (tests)."""
+        B, S = tokens.shape
+        x = self.embed(params, tokens)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, _ = self.hidden_train(params, x, positions, remat=False)
+        return self.unembed(params, h)
+
+    # ======================== PREFILL =====================================
+    def prefill(self, params, tokens, max_len: int, embeds=None):
+        cfg = self.cfg
+        kind = family_kind(cfg)
+        B, S = tokens.shape
+        x = (self.embed(params, tokens) if embeds is None
+             else self.embed_vectors(params, embeds))
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        W = cfg.local_window
+
+        def clip_window(kv_):
+            """Last-W slice (ring-aligned when S % W == 0), padded if S<W."""
+            def f(a):
+                if a.shape[2] >= W:
+                    return a[:, :, -W:]
+                return jnp.pad(a, ((0, 0), (0, 0), (0, W - a.shape[2]),
+                                   (0, 0)))
+            return {k: f(v) for k, v in kv_.items()}
+
+        if kind == "uniform":
+            cache = {}
+            if cfg.first_k_dense:
+                def head_body(xc, p_l):
+                    xc, kv_, _ = self._layer({"attn": p_l["attn"]}, xc,
+                                             positions, mlp_p=p_l["mlp"],
+                                             update_cache=True)
+                    return xc, kv_
+                x, head_kv = jax.lax.scan(head_body, x,
+                                          params["head_layers"])
+                cache["head"] = head_kv
+
+            def body(xc, p_l):
+                xc, kv_, _ = self._layer(p_l, xc, positions,
+                                         update_cache=True)
+                return xc, kv_
+            x, body_kv = jax.lax.scan(body, x, params["blocks"])
+            cache["body"] = body_kv
+
+        elif kind == "local_global":
+            def group(xc, p_g):
+                def loc(xc, p_l):
+                    p_a, p_m = p_l
+                    xc, kv_, _ = self._layer({"attn": p_a}, xc, positions,
+                                             window=W, mlp_p=p_m,
+                                             update_cache=True)
+                    return xc, clip_window(kv_)
+                xc, loc_kv = jax.lax.scan(loc, xc,
+                                          (p_g["local"], p_g["local_mlp"]))
+                xc, glob_kv, _ = self._layer(
+                    {"attn": p_g["global"]["attn"]}, xc, positions,
+                    mlp_p=p_g["global"]["mlp"], update_cache=True)
+                return xc, (loc_kv, glob_kv)
+            x, (loc, glob) = jax.lax.scan(group, x, params["blocks"])
+            cache = {"local": loc, "global": glob}
+            if "tail" in params:
+                def tail(xc, p_l):
+                    xc, kv_, _ = self._layer({"attn": p_l[0]}, xc,
+                                             positions, window=W,
+                                             mlp_p=p_l[1],
+                                             update_cache=True)
+                    return xc, clip_window(kv_)
+                x, tail_kv = jax.lax.scan(tail, x, (params["tail"]["attn"],
+                                                    params["tail"]["mlp"]))
+                cache["tail"] = tail_kv
+
+        elif kind == "zamba":
+            def group(xc, p_g):
+                def ssm_l(xc, p_l):
+                    out, st = ssm_block(p_l, xc, cfg)
+                    return xc + out, st["h"]
+                xc, hs = jax.lax.scan(ssm_l, xc, p_g)
+                xc, kv_, _ = self._layer({"attn": params["shared_attn"]},
+                                         xc, positions,
+                                         mlp_p=params["shared_mlp"],
+                                         update_cache=True)
+                return xc, (hs, kv_)
+            x, (ssm_h, shared_kv) = jax.lax.scan(group, x, params["blocks"])
+            cache = {"ssm_h": ssm_h, "shared": shared_kv}
+            if "tail" in params:
+                def ssm_t(xc, p_l):
+                    out, st = ssm_block(p_l, xc, cfg)
+                    return xc + out, st["h"]
+                x, tail_h = jax.lax.scan(ssm_t, x, params["tail"])
+                cache["tail_h"] = tail_h
+
+        elif kind == "rwkv":
+            def body(xc, p_l):
+                xc, st = rwkv_block(p_l, xc, cfg)
+                return xc, st
+            x, cache = jax.lax.scan(body, x, params["blocks"])
+
+        h = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = self.unembed(params, h)
+        return logits, _pad_cache(cache, cfg, max_len)
+
+    # ======================== DECODE =====================================
+    def decode_step(self, params, token, cache, pos):
+        """token: (B,) int32; pos: (B,) absolute positions.
+        Returns (logits (B,1,V), new_cache)."""
+        cfg = self.cfg
+        kind = family_kind(cfg)
+        x = self.embed(params, token[:, None])
+        positions = pos[:, None]
+        W = cfg.local_window
+
+        if kind == "uniform":
+            new_cache = {}
+            if cfg.first_k_dense:
+                def head_body(xc, inp):
+                    p_l, kv_in = inp
+                    xc, kv_, _ = self._layer({"attn": p_l["attn"]}, xc,
+                                             positions, cache=kv_in,
+                                             cache_pos=pos,
+                                             mlp_p=p_l["mlp"])
+                    return xc, kv_
+                x, head_kv = jax.lax.scan(
+                    head_body, x, (params["head_layers"], cache["head"]))
+                new_cache["head"] = head_kv
+
+            def body(xc, inp):
+                p_l, kv_in = inp
+                xc, kv_, _ = self._layer(p_l, xc, positions, cache=kv_in,
+                                         cache_pos=pos)
+                return xc, kv_
+            x, body_kv = jax.lax.scan(body, x,
+                                      (params["blocks"], cache["body"]))
+            new_cache["body"] = body_kv
+
+        elif kind == "local_global":
+            slot = pos % W
+            key_pos = _ring_positions(pos, W)
+
+            def group(xc, inp):
+                p_g, (loc_in, glob_in) = inp
+
+                def loc(xc, inp2):
+                    (p_a, p_m), kv_l = inp2
+                    xc, kv_, _ = self._layer(
+                        {"attn": p_a}, xc, positions, window=W,
+                        cache=kv_l, cache_pos=pos, write_pos=slot,
+                        key_positions=key_pos, mlp_p=p_m)
+                    return xc, kv_
+                xc, loc_out = jax.lax.scan(
+                    loc, xc, ((p_g["local"], p_g["local_mlp"]), loc_in))
+                xc, glob_out, _ = self._layer(
+                    {"attn": p_g["global"]["attn"]}, xc, positions,
+                    cache=glob_in, cache_pos=pos,
+                    mlp_p=p_g["global"]["mlp"])
+                return xc, (loc_out, glob_out)
+            x, (loc, glob) = jax.lax.scan(
+                group, x,
+                (params["blocks"], (cache["local"], cache["global"])))
+            new_cache = {"local": loc, "global": glob}
+            if "tail" in params:
+                def tail(xc, inp):
+                    (p_a, p_m), kv_l = inp
+                    xc, kv_, _ = self._layer(
+                        {"attn": p_a}, xc, positions, window=W,
+                        cache=kv_l, cache_pos=pos, write_pos=slot,
+                        key_positions=key_pos, mlp_p=p_m)
+                    return xc, kv_
+                x, tail_kv = jax.lax.scan(
+                    tail, x, ((params["tail"]["attn"],
+                               params["tail"]["mlp"]), cache["tail"]))
+                new_cache["tail"] = tail_kv
+
+        elif kind == "zamba":
+            def group(xc, inp):
+                p_g, h_in, kv_in = inp
+
+                def ssm_l(xc, inp2):
+                    p_l, h_l = inp2
+                    out, st = ssm_decode(p_l, xc, cfg, {"h": h_l})
+                    return xc + out, st["h"]
+                xc, h_out = jax.lax.scan(ssm_l, xc, (p_g, h_in))
+                xc, kv_, _ = self._layer({"attn": params["shared_attn"]},
+                                         xc, positions, cache=kv_in,
+                                         cache_pos=pos,
+                                         mlp_p=params["shared_mlp"])
+                return xc, (h_out, kv_)
+            x, (ssm_h, shared_kv) = jax.lax.scan(
+                group, x,
+                (params["blocks"], cache["ssm_h"], cache["shared"]))
+            new_cache = {"ssm_h": ssm_h, "shared": shared_kv}
+            if "tail" in params:
+                def ssm_t(xc, inp):
+                    p_l, h_l = inp
+                    out, st = ssm_decode(p_l, xc, cfg, {"h": h_l})
+                    return xc + out, st["h"]
+                x, tail_h = jax.lax.scan(
+                    ssm_t, x, (params["tail"], cache["tail_h"]))
+                new_cache["tail_h"] = tail_h
+
+        elif kind == "rwkv":
+            def body(xc, inp):
+                p_l, st = inp
+                xc, st2 = rwkv_block(p_l, xc, cfg, state=st)
+                return xc, st2
+            x, new_cache = jax.lax.scan(body, x,
+                                        (params["blocks"], cache))
+
+        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return self.unembed(params, h), new_cache
+
+
+def _ring_positions(pos, W: int):
+    """Absolute key positions held by a ring-buffer window cache."""
+    slots = jnp.arange(W)[None, :]
+    offset = (pos[:, None] % W - slots) % W
+    return pos[:, None] - offset                       # (B, W); <0 = unwritten
+
+
+def _pad_cache(cache, cfg: ModelConfig, max_len: int):
+    """Pad full-length KV caches out to max_len along the seq axis.
+    Window (ring) caches and recurrent states pass through unchanged."""
+    kind = family_kind(cfg)
+
+    def pad_kv(tree):
+        def f(a):
+            if a.ndim >= 4 and a.shape[-2] < max_len:
+                pads = [(0, 0)] * a.ndim
+                pads[-2] = (0, max_len - a.shape[-2])
+                return jnp.pad(a, pads)
+            return a
+        return jax.tree.map(f, tree)
+
+    if kind == "uniform":
+        return {k: pad_kv(v) for k, v in cache.items()}
+    if kind == "local_global":
+        out = dict(cache)
+        out["global"] = pad_kv(cache["global"])
+        return out
+    if kind == "zamba":
+        out = dict(cache)
+        out["shared"] = pad_kv(cache["shared"])
+        return out
+    return cache

@@ -1,0 +1,12 @@
+"""repro.serving — FaaS-for-models gateway + real-model engine."""
+from .request import (RequestSpec, kv_bytes, preemption_penalty_ms,
+                      service_ms)
+from .gateway import (GatewayResult, SlotCFS, SlotHybridScheduler,
+                      requests_from_trace, run_gateway)
+from .engine import LiveRequest, ServingEngine
+
+__all__ = [
+    "RequestSpec", "kv_bytes", "preemption_penalty_ms", "service_ms",
+    "GatewayResult", "SlotCFS", "SlotHybridScheduler",
+    "requests_from_trace", "run_gateway", "LiveRequest", "ServingEngine",
+]

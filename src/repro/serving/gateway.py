@@ -1,0 +1,158 @@
+"""FaaS-for-models gateway: the paper's hybrid two-group scheduler over
+DEVICE SLOTS (decode-batch lanes) instead of CPU cores.
+
+Requests (= serverless functions) arrive with Azure-trace statistics;
+slots are partitioned into a FIFO group (run-to-completion, no KV swaps)
+and a fair-share group (vruntime time-slicing where every preemption
+pays the KV offload/restore penalty — the TPU context switch). The
+paper's time-limit adaptation (percentile of the last 100 request
+durations) and slot-group rightsizing are inherited unchanged from
+repro.core. Billing is wall-clock execution x per-ms-per-GB.
+
+A straggler-mitigation hook re-dispatches requests whose execution span
+exceeds ``straggler_factor`` x the expected service time (models a slow
+or failed device lane — Sec. "fault tolerance" in DESIGN.md).
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.events import GROUP_CFS, Task
+from ..core.hybrid import HybridScheduler, Rightsizer, TimeLimitAdapter
+from ..core.metrics import SimResult, collect
+from ..core.policies import CFS, FIFO
+from ..core.cost import PRICE_PER_GB_SECOND, PRICE_PER_REQUEST
+from ..traces.azure import TraceSpec
+from ..traces.workload import generate_workload
+from .request import RequestSpec, preemption_penalty_ms, service_ms
+
+
+def _serving_quanta(penalty_ms: float) -> dict:
+    """Fair-share quanta must dominate the KV-swap penalty or the
+    fair group livelocks (every slice adds more swap work than it
+    retires). Real serving engines use second-scale slices for exactly
+    this reason."""
+    q = max(4.0 * penalty_ms, 250.0)
+    return {"sched_latency_ms": 2 * q, "min_granularity_ms": q}
+
+
+class SlotHybridScheduler(HybridScheduler):
+    """Hybrid scheduler whose preemptions carry the KV-swap penalty."""
+
+    name = "slot_hybrid"
+
+    def __init__(self, cfg: ModelConfig, seq_len: int = 4096,
+                 straggler_factor: float = 0.0, **kw):
+        penalty = preemption_penalty_ms(cfg, seq_len)
+        kw.update(_serving_quanta(penalty))
+        super().__init__(**kw)
+        self.model_cfg = cfg
+        self.penalty_ms = penalty
+        self.straggler_factor = straggler_factor
+        self.redispatches = 0
+
+    def on_chunk_limit(self, core, task, t):
+        # A preemption swaps the request's KV out and back in — but only
+        # when another request actually displaces it (FIFO->CFS
+        # migration always does; a fair-share slice expiry with an empty
+        # queue keeps the cache resident).
+        from ..core.events import GROUP_FIFO
+        if core.group == GROUP_FIFO or core.rq:
+            task.remaining += self.penalty_ms
+        super().on_chunk_limit(core, task, t)
+
+    def on_complete(self, task, t):
+        super().on_complete(task, t)
+        if (self.straggler_factor > 0
+                and task.execution > self.straggler_factor * task.service):
+            self.redispatches += 1
+
+
+class SlotCFS(CFS):
+    name = "slot_cfs"
+
+    def __init__(self, cfg: ModelConfig, seq_len: int = 4096, **kw):
+        penalty = preemption_penalty_ms(cfg, seq_len)
+        kw.update(_serving_quanta(penalty))
+        super().__init__(**kw)
+        self.penalty_ms = penalty
+
+    def on_chunk_limit(self, core, task, t):
+        if core.rq:
+            task.remaining += self.penalty_ms
+        super().on_chunk_limit(core, task, t)
+
+
+@dataclass
+class GatewayResult:
+    sim: SimResult
+    arch: str
+    policy: str
+    redispatches: int = 0
+
+    def cost_usd(self) -> float:
+        total = 0.0
+        for t in self.sim.tasks:
+            total += (t.execution / 1000.0) * (t.mem_mb / 1024.0) \
+                * PRICE_PER_GB_SECOND + PRICE_PER_REQUEST
+        return total
+
+    def summary(self) -> dict:
+        s = self.sim.summary()
+        s["arch"] = self.arch
+        s["cost_usd"] = self.cost_usd()
+        s["redispatches"] = self.redispatches
+        return s
+
+
+def requests_from_trace(cfg: ModelConfig, spec: Optional[TraceSpec] = None,
+                        seed: int = 0) -> list[Task]:
+    """Map the Azure-like workload onto inference requests: the task's
+    CPU service time becomes (prefill + decode) token budgets with the
+    per-arch tokens/s model; memory = weights share + KV footprint."""
+    w = generate_workload(spec or TraceSpec())
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for t in w.tasks:
+        decode = max(int(t.service / cfg.ms_per_token_decode), 1)
+        prompt = int(min(decode * rng.uniform(2.0, 8.0), 8192))
+        svc = service_ms(cfg, prompt, decode)
+        mem_mb = t.mem_mb  # Azure memory-size distribution (billing)
+        tasks.append(Task(tid=t.tid, arrival=t.arrival, service=svc,
+                          mem_mb=mem_mb, func_id=t.func_id,
+                          bucket=t.bucket, deadline=t.deadline))
+    return tasks
+
+
+def run_gateway(cfg: ModelConfig, policy: str = "hybrid", *,
+                n_slots: int = 50, n_fifo: int = 25,
+                requests: Optional[list[Task]] = None,
+                adapt_pct: Optional[float] = 95.0,
+                rightsize: bool = True,
+                seq_len: int = 4096,
+                straggler_factor: float = 0.0,
+                trace: Optional[TraceSpec] = None) -> GatewayResult:
+    reqs = copy.deepcopy(requests) if requests is not None \
+        else requests_from_trace(cfg, trace)
+    if policy == "hybrid":
+        sched = SlotHybridScheduler(
+            cfg, seq_len=seq_len, n_cores=n_slots, n_fifo=n_fifo,
+            adapter=(TimeLimitAdapter(pct=adapt_pct)
+                     if adapt_pct else None),
+            rightsizer=Rightsizer() if rightsize else None,
+            straggler_factor=straggler_factor)
+    elif policy == "cfs":
+        sched = SlotCFS(cfg, seq_len=seq_len, n_cores=n_slots)
+    elif policy == "fifo":
+        sched = FIFO(n_cores=n_slots)
+    else:
+        raise KeyError(policy)
+    sched.run(reqs)
+    res = collect(sched, policy)
+    return GatewayResult(sim=res, arch=cfg.name, policy=policy,
+                         redispatches=getattr(sched, "redispatches", 0))

@@ -1,0 +1,7 @@
+"""repro.training — optimizer, train step, data pipeline."""
+from .optimizer import (adamw_update, init_opt_state, lr_at,
+                        make_train_step, opt_state_specs)
+from .data import SyntheticLM
+
+__all__ = ["adamw_update", "init_opt_state", "lr_at", "make_train_step",
+           "opt_state_specs", "SyntheticLM"]

@@ -1,0 +1,45 @@
+"""Deterministic, resumable synthetic token pipeline.
+
+State = (seed, step); ``state_dict``/``load_state`` make it
+checkpointable alongside the model, so restart resumes the exact batch
+sequence (fault tolerance includes the data order).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class SyntheticLM:
+    """Zipf-distributed token stream with local n-gram structure so the
+    loss actually decreases (repeating motif + noise)."""
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    step: int = 0
+
+    def next_batch(self) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, self.step]))
+        self.step += 1
+        # zipf base stream
+        ranks = rng.zipf(1.3, size=(self.batch, self.seq_len + 1))
+        toks = np.minimum(ranks, self.vocab - 1).astype(np.int32)
+        # inject learnable motif: every 8th position repeats position 0
+        toks[:, ::8] = toks[:, :1]
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:]),
+        }
+
+    def state_dict(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def load_state(self, state: dict) -> None:
+        self.seed = int(state["seed"])
+        self.step = int(state["step"])

@@ -1,0 +1,113 @@
+"""AdamW + cosine schedule + global-norm clipping (raw JAX).
+
+Optimizer state mirrors the parameter tree (same sharding), so the
+dry-run's memory analysis reflects a real training footprint:
+params + grads + m + v in fp32.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+from ..distributed.params import ParamSpec, is_spec
+
+
+def opt_state_specs(param_specs) -> dict:
+    """ParamSpec tree for (m, v) matching the parameter sharding."""
+    def z(p: ParamSpec):
+        return ParamSpec(p.shape, p.axes, init="zeros", dtype=p.dtype)
+    zero = jax.tree.map(z, param_specs, is_leaf=is_spec)
+    return {"m": zero, "v": jax.tree.map(z, param_specs, is_leaf=is_spec),
+            "step": ParamSpec((), (), init="zeros", dtype="int32")}
+
+
+def init_opt_state(params) -> dict:
+    return {"m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def lr_at(step, tcfg: TrainConfig):
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tcfg.warmup_steps) /
+                    jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads, opt, params, tcfg: TrainConfig):
+    step = opt["step"] + 1
+    lr = lr_at(step, tcfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9))
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        new_p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def make_train_step(lm, tcfg: TrainConfig):
+    """(params, opt, batch) -> (params, opt, metrics). Supports gradient
+    accumulation over leading microbatch splits of the batch."""
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch["tokens"], batch["targets"],
+                       z_loss=tcfg.z_loss, embeds=batch.get("embeds"))
+
+    def single(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, opt, batch):
+        if tcfg.microbatches > 1:
+            mb = tcfg.microbatches
+
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+            batch_mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                loss_acc, g_acc = carry
+                loss, g = single(params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (loss_acc + loss, g_acc), None
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (0.0, g0), batch_mb)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = single(params, batch)
+        params, opt, stats = adamw_update(grads, opt, params, tcfg)
+        return params, opt, {"loss": loss, **stats}
+
+    return train_step

@@ -1,0 +1,26 @@
+import numpy as np
+import pytest
+
+from repro.core.events import Task
+from repro.traces import TraceSpec, generate_workload
+
+
+@pytest.fixture(scope="session")
+def small_workload():
+    """Downscaled 30s Azure-like workload (fast enough for CFS sims)."""
+    spec = TraceSpec(minutes=1, invocations_per_min=1500, n_functions=80,
+                     seed=7)
+    w = generate_workload(spec)
+    return [t for t in w.tasks if t.arrival < 30_000]
+
+
+def mk_tasks(specs):
+    """specs: list of (arrival, service[, mem]) tuples."""
+    out = []
+    for i, s in enumerate(specs):
+        arrival, service = s[0], s[1]
+        mem = s[2] if len(s) > 2 else 256
+        out.append(Task(tid=i, arrival=float(arrival),
+                        service=float(service), mem_mb=mem,
+                        deadline=arrival + 2.0 * service))
+    return out

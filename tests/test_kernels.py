@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (decode_attention, flash_attention,
+                           fused_rmsnorm, ref, rwkv6_scan, ssm_scan)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,sq,sk,hd,qb,kb", [
+    (2, 128, 128, 64, 64, 64),
+    (1, 96, 96, 64, 64, 64),      # non-multiple of block
+    (3, 256, 256, 128, 128, 64),
+    (2, 64, 192, 64, 64, 64),     # cross-attn shaped (sq != sk)
+])
+def test_flash_attention_sweep(dtype, bh, sq, sk, hd, qb, kb):
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (bh, sq, hd), dtype)
+    k = rand(ks[1], (bh, sk, hd), dtype)
+    v = rand(ks[2], (bh, sk, hd), dtype)
+    causal = sq == sk
+    out = flash_attention(q, k, v, causal=causal, q_block=qb, k_block=kb,
+                          interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(exp, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (2, 128, 64), jnp.float32)
+    k = rand(ks[1], (2, 128, 64), jnp.float32)
+    v = rand(ks[2], (2, 128, 64), jnp.float32)
+    out = flash_attention(q, k, v, window=window, q_block=32, k_block=32,
+                          interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.array(out), np.array(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,kb", [(128, 64), (96, 64), (512, 128)])
+def test_decode_attention_sweep(dtype, s, kb):
+    ks = jax.random.split(KEY, 3)
+    bh, hd = 4, 64
+    q = rand(ks[0], (bh, 1, hd), dtype)
+    k = rand(ks[1], (bh, s, hd), dtype)
+    v = rand(ks[2], (bh, s, hd), dtype)
+    lengths = jnp.array([s, max(s // 2, 1), 7, 1], jnp.int32)
+    out = decode_attention(q, k, v, lengths, k_block=kb, interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(exp, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+@pytest.mark.parametrize("hd,ds", [(64, 16), (64, 64), (128, 32)])
+def test_ssm_scan_sweep(chunk, hd, ds):
+    bh, s = 2, 256
+    ks = jax.random.split(KEY, 4)
+    xb = rand(ks[0], (bh, s, hd), jnp.float32, 0.5)
+    B = rand(ks[1], (bh, s, ds), jnp.float32, 0.5)
+    C = rand(ks[2], (bh, s, ds), jnp.float32, 0.5)
+    loga = -jnp.abs(rand(ks[3], (bh, s), jnp.float32, 0.2))
+    cum = loga.reshape(bh, s // chunk, chunk).cumsum(-1).reshape(bh, s)
+    out = ssm_scan(xb, B, C, cum, chunk=chunk, interpret=True)
+    exp = ref.ssm_scan_ref(xb, B, C, cum, chunk=chunk)
+    np.testing.assert_allclose(np.array(out), np.array(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_rwkv6_scan_sweep(chunk):
+    bh, s, hd = 2, 128, 64
+    ks = jax.random.split(KEY, 5)
+    r = rand(ks[0], (bh, s, hd), jnp.float32, 0.3)
+    k = rand(ks[1], (bh, s, hd), jnp.float32, 0.3)
+    v = rand(ks[2], (bh, s, hd), jnp.float32, 0.3)
+    w = jax.nn.sigmoid(rand(ks[3], (bh, s, hd), jnp.float32))
+    u = rand(ks[4], (bh, hd), jnp.float32, 0.1)
+    out = rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    exp = ref.rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.array(out), np.array(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,rows", [(100, 128, 32), (256, 512, 256)])
+def test_fused_rmsnorm_sweep(dtype, n, d, rows):
+    x = rand(KEY, (n, d), dtype)
+    w = rand(jax.random.PRNGKey(1), (d,), jnp.float32, 0.1)
+    out = fused_rmsnorm(x, w, rows=rows, interpret=True)
+    exp = ref.fused_rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(exp, np.float32), **TOL[dtype])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.sampled_from([64, 128, 160]),
+       st.sampled_from([64, 128]), st.integers(0, 3))
+def test_flash_attention_property(bh, s, hd, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(ks[0], (bh, s, hd), jnp.float32)
+    k = rand(ks[1], (bh, s, hd), jnp.float32)
+    v = rand(ks[2], (bh, s, hd), jnp.float32)
+    out = flash_attention(q, k, v, q_block=64, k_block=64, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.array(out), np.array(exp),
+                               rtol=3e-5, atol=3e-5)
+    # attention output is a convex combination of values
+    assert np.array(out).max() <= np.array(v).max() + 1e-4
+    assert np.array(out).min() >= np.array(v).min() - 1e-4

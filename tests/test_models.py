@@ -1,0 +1,118 @@
+"""Per-arch smoke tests + prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke, SHAPES, \
+    shape_applicable
+from repro.distributed import materialize
+from repro.models import LM, cache_specs, model_specs
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_smoke(arch)
+            params = materialize(model_specs(cfg), KEY)
+            cache[arch] = (cfg, LM(cfg), params)
+        return cache[arch]
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_shapes_and_finite(built, arch):
+    cfg, lm, params = built(arch)
+    B, S = 2, 32
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    loss = lm.loss(params, toks, jnp.roll(toks, -1, 1))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    logits = lm.logits_train(params, toks)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(built, arch):
+    """Teacher-forced decode must reproduce the parallel (train) logits —
+    exercises every cache type incl. ring buffers and shared-attn KV.
+    Runs in f32 compute so the check isolates LOGIC errors from bf16
+    drift (production uses bf16)."""
+    from repro.models.layers import set_compute_dtype
+    cfg, lm, params = built(arch)
+    B, S, extra = 2, 32, 4
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S + extra),
+                              0, cfg.vocab)
+    set_compute_dtype(jnp.float32)
+    try:
+        full = lm.logits_train(params, toks)       # (B, S+extra, V)
+        logits_p, cache = lm.prefill(params, toks[:, :S],
+                                     max_len=S + extra)
+        np.testing.assert_allclose(
+            np.array(logits_p[:, 0]), np.array(full[:, S - 1]),
+            rtol=2e-3, atol=2e-3)
+        pos = jnp.full((B,), S, jnp.int32)
+        for i in range(extra):
+            logits_d, cache = lm.decode_step(params, toks[:, S + i],
+                                             cache, pos + i)
+            np.testing.assert_allclose(
+                np.array(logits_d[:, 0]), np.array(full[:, S + i]),
+                rtol=2e-3, atol=2e-3)
+    finally:
+        set_compute_dtype(jnp.bfloat16)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cache_specs_match_runtime_cache(built, arch):
+    cfg, lm, params = built(arch)
+    B, S = 2, 32
+    specs = cache_specs(cfg, B, S)
+    toks = jax.random.randint(KEY, (B, S // 2), 0, cfg.vocab)
+    _, cache = lm.prefill(params, toks, max_len=S)
+    spec_shapes = jax.tree.map(
+        lambda p: tuple(p.shape), specs,
+        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape"))
+    got_shapes = jax.tree.map(lambda a: tuple(a.shape), cache)
+    assert jax.tree.leaves(spec_shapes) == jax.tree.leaves(got_shapes)
+
+
+def test_full_configs_match_pool_spec():
+    spec = {
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "rwkv6-1.6b": (24, 2048, 0, 0, 7168, 65536),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    }
+    for arch, (L, d, H, KV, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, H, KV, ff, V), arch
+    assert get_config("granite-moe-3b-a800m").n_experts == 40
+    assert get_config("granite-moe-3b-a800m").top_k == 8
+    assert get_config("moonshot-v1-16b-a3b").n_experts == 64
+    assert get_config("moonshot-v1-16b-a3b").top_k == 6
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("qwen2-vl-2b").mrope
+
+
+def test_long_500k_applicability_rules():
+    ok = {a: shape_applicable(get_config(a), SHAPES["long_500k"])[0]
+          for a in ARCHS}
+    assert ok["rwkv6-1.6b"] and ok["zamba2-1.2b"]
+    assert ok["gemma3-27b"] and ok["gemma3-12b"]
+    for a in ("granite-moe-3b-a800m", "moonshot-v1-16b-a3b",
+              "qwen2-vl-2b", "deepseek-67b", "deepseek-7b",
+              "musicgen-large"):
+        assert not ok[a], a

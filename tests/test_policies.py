@@ -1,0 +1,111 @@
+"""Unit tests: scheduling policies on hand-checkable workloads."""
+import numpy as np
+import pytest
+
+from repro.core import (CFS, EDF, FIFO, FIFOPreempt, HybridScheduler,
+                        Rightsizer, TimeLimitAdapter, run_policy)
+from repro.core.hybrid import percentile
+
+from conftest import mk_tasks
+
+
+def test_fifo_runs_to_completion_in_order():
+    # one core, three tasks: strict FCFS, exec == service
+    tasks = mk_tasks([(0, 100), (1, 50), (2, 10)])
+    sched = FIFO(n_cores=1, ctx_switch_ms=0.0).run(tasks)
+    done = sorted(sched.completed, key=lambda t: t.tid)
+    assert [t.completion for t in done] == [100, 150, 160]
+    for t in done:
+        assert t.execution == pytest.approx(t.service)
+        assert t.preemptions == 0
+
+
+def test_fifo_head_of_line_blocking():
+    # monster in front blocks the short task (the paper's Obs. 2)
+    tasks = mk_tasks([(0, 10_000), (1, 10)])
+    sched = FIFO(n_cores=1, ctx_switch_ms=0.0).run(tasks)
+    short = sched.completed[-1]
+    assert short.response == pytest.approx(9_999)
+
+
+def test_fifo_preempt_moves_to_queue_end():
+    # FIFO_100ms: long task cycles, short task gets in after one quantum
+    tasks = mk_tasks([(0, 250), (1, 50)])
+    sched = FIFOPreempt(quantum_ms=100, n_cores=1,
+                        ctx_switch_ms=0.0).run(tasks)
+    long_t, short_t = sched.completed[-1], sched.completed[0]
+    assert short_t.tid == 1 and short_t.response == pytest.approx(99)
+    assert long_t.preemptions == 2
+
+
+def test_cfs_fairness_slices():
+    # two equal tasks on one core finish at ~the same time under CFS
+    tasks = mk_tasks([(0, 300), (0.5, 300)])
+    sched = CFS(n_cores=1, ctx_switch_ms=0.0).run(tasks)
+    c = sorted(t.completion for t in sched.completed)
+    assert c[1] - c[0] < 30.0          # within ~one slice of each other
+    assert all(t.execution > 1.5 * t.service for t in sched.completed)
+
+
+def test_cfs_response_beats_fifo_under_load(small_workload):
+    f = run_policy("fifo", small_workload, n_cores=10)
+    c = run_policy("cfs", small_workload, n_cores=10)
+    assert c.p("response", 99) < f.p("response", 99)
+    assert c.p("execution", 99) > f.p("execution", 99)
+
+
+def test_edf_prioritizes_deadlines():
+    tasks = mk_tasks([(0, 1000), (1, 10)])   # deadlines 2000 / 21
+    sched = EDF(n_cores=1, ctx_switch_ms=0.0).run(tasks)
+    short = next(t for t in sched.completed if t.tid == 1)
+    assert short.response == pytest.approx(0.0)   # preempted the monster
+    monster = next(t for t in sched.completed if t.tid == 0)
+    assert monster.preemptions == 1
+
+
+def test_hybrid_migrates_over_limit():
+    tasks = mk_tasks([(0, 500), (0, 50)])
+    sched = HybridScheduler(n_cores=2, n_fifo=1, time_limit_ms=100,
+                            ctx_switch_ms=0.0).run(tasks)
+    long_t = next(t for t in sched.completed if t.tid == 0)
+    short_t = next(t for t in sched.completed if t.tid == 1)
+    assert long_t.migrations == 1       # moved FIFO -> CFS at 100ms
+    assert short_t.migrations == 0
+    assert short_t.execution == pytest.approx(short_t.service)
+
+
+def test_hybrid_short_tasks_uninterrupted(small_workload):
+    r = run_policy("hybrid", small_workload, n_cores=10,
+                   time_limit_ms=1633.0)
+    short = [t for t in r.tasks if t.service < 1000]
+    assert short, "workload should contain short tasks"
+    frac_clean = np.mean([t.preemptions == 0 for t in short])
+    assert frac_clean > 0.95
+
+
+def test_percentile_interpolation():
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == pytest.approx(2.5)
+    assert percentile([5.0], 99) == 5.0
+    with pytest.raises(ValueError):
+        percentile([], 50)
+
+
+def test_adapter_window_is_bounded():
+    a = TimeLimitAdapter(pct=90, window=100)
+    for i in range(250):
+        a.record(float(i), now=float(i))
+    assert len(a.window) == 100
+    assert a.limit() >= 150.0           # only the recent 100 matter
+
+
+def test_rightsizer_migrates_cores(small_workload):
+    r = run_policy("hybrid", small_workload, n_cores=10,
+                   adapt_pct=95.0, rightsize=True)
+    assert r.migrations is not None and len(r.migrations) > 0
+
+
+def test_ghost_mode_inflates_execution(small_workload):
+    ideal = run_policy("fifo", small_workload, n_cores=10)
+    ghost = run_policy("fifo", small_workload, n_cores=10,
+                       ghost_mode=True)
+    assert ghost.execution().mean() > ideal.execution().mean()

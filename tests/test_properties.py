@@ -1,0 +1,83 @@
+"""Property-based tests (hypothesis): scheduler + cost invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import run_policy
+from repro.core.cost import cost_ladder, invocation_cost_usd
+from repro.core.events import Task
+from repro.core.hybrid import percentile
+
+task_lists = st.lists(
+    st.tuples(st.floats(0, 5_000), st.floats(0.5, 3_000)),
+    min_size=1, max_size=60,
+)
+
+
+def _mk(specs):
+    return [Task(tid=i, arrival=a, service=s, deadline=a + 2 * s)
+            for i, (a, s) in enumerate(specs)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(task_lists, st.sampled_from(["fifo", "cfs", "hybrid", "rr", "edf"]))
+def test_scheduler_invariants(specs, policy):
+    tasks = _mk(specs)
+    res = run_policy(policy, tasks, n_cores=4)
+    # no task lost, none duplicated
+    assert len(res.tasks) == len(tasks)
+    assert sorted(t.tid for t in res.tasks) == list(range(len(tasks)))
+    for t in res.tasks:
+        assert t.completion >= t.arrival
+        assert t.first_run >= t.arrival - 1e-6
+        assert t.response >= -1e-6
+        # execution can never beat pure service time
+        assert t.execution >= t.service - 1e-6
+        assert t.remaining <= 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(task_lists)
+def test_fifo_is_execution_optimal(specs):
+    tasks = _mk(specs)
+    res = run_policy("fifo", tasks, n_cores=4, ctx_switch_ms=0.0)
+    for t in res.tasks:
+        assert t.execution == np.float64(t.service) or \
+            abs(t.execution - t.service) < 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(task_lists)
+def test_work_conservation_no_idle_with_backlog(specs):
+    """Makespan >= total work / cores (no scheduler can beat it)."""
+    tasks = _mk(specs)
+    res = run_policy("fifo", tasks, n_cores=4, ctx_switch_ms=0.0)
+    lower = sum(t.service for t in tasks) / 4
+    makespan = max(t.completion for t in res.tasks)
+    assert makespan >= lower - 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0.1, 1e6), min_size=1, max_size=200),
+       st.floats(0, 100))
+def test_percentile_bounds(vals, pct):
+    v = sorted(vals)
+    p = percentile(v, pct)
+    assert v[0] - 1e-9 <= p <= v[-1] + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1.0, 1e7), st.sampled_from([128, 256, 512, 1024, 10240]))
+def test_cost_monotone_in_duration_and_memory(ms, mem):
+    c1 = invocation_cost_usd(ms, mem)
+    assert c1 > 0
+    assert invocation_cost_usd(ms * 2, mem) > c1
+    assert invocation_cost_usd(ms, mem * 2) > c1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(1.0, 1e5), min_size=1, max_size=50))
+def test_cost_ladder_ordering(execs):
+    ladder = cost_ladder(execs)
+    sizes = sorted(ladder)
+    for a, b in zip(sizes, sizes[1:]):
+        assert ladder[a] < ladder[b]

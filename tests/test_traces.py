@@ -1,0 +1,56 @@
+"""Workload synthesis: paper anchors + IAT construction (Sec. V-B)."""
+import numpy as np
+import pytest
+
+from repro.traces import (BUCKET_MS, FIB_N, P90_ANCHOR_MS, PHI, TraceSpec,
+                          generate_workload, workload_file)
+
+
+def test_fibonacci_ladder_golden_ratio():
+    for a, b in zip(BUCKET_MS, BUCKET_MS[1:]):
+        assert b / a == pytest.approx(PHI)
+    assert FIB_N[0] == 36
+
+
+def test_volume_matches_paper():
+    w = generate_workload(TraceSpec(minutes=2))
+    # 12,442 invocations in the first two minutes (paper Sec. II)
+    assert abs(len(w.tasks) - 12_442) / 12_442 < 0.05
+
+
+def test_p90_calibrated_to_anchor():
+    w = generate_workload(TraceSpec(minutes=2))
+    assert w.p90_service() == pytest.approx(P90_ANCHOR_MS, rel=1e-6)
+
+
+def test_duration_distribution_shape():
+    w = generate_workload(TraceSpec(minutes=2))
+    sv = np.array([t.service for t in w.tasks])
+    assert np.percentile(sv, 80) < 1_000.0       # 80% under a second
+    assert sv.max() > 30_000.0                   # minute-scale tail
+    share = sv[sv > P90_ANCHOR_MS].sum() / sv.sum()
+    assert 0.3 < share < 0.8                     # tail carries the work
+
+
+def test_functions_have_consistent_buckets():
+    w = generate_workload(TraceSpec(minutes=2))
+    by_func = {}
+    for t in w.tasks:
+        by_func.setdefault(t.func_id, set()).add(t.bucket)
+    assert all(len(b) == 1 for b in by_func.values())
+
+
+def test_iat_construction():
+    w = generate_workload(TraceSpec(minutes=1))
+    rows = workload_file(w)
+    arrivals = np.cumsum([r["iat_ms"] for r in rows])
+    assert np.all(np.diff(arrivals) >= -1e-9)    # sorted
+    assert len(rows) == len(w.tasks)
+    assert all(36 <= r["fib_n"] <= 51 for r in rows)
+
+
+def test_deterministic_given_seed():
+    a = generate_workload(TraceSpec(minutes=1, seed=3))
+    b = generate_workload(TraceSpec(minutes=1, seed=3))
+    assert [t.arrival for t in a.tasks] == [t.arrival for t in b.tasks]
+    assert [t.service for t in a.tasks] == [t.service for t in b.tasks]
