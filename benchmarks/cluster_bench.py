@@ -1,0 +1,66 @@
+"""Cluster benchmark: dispatcher x node-policy x fleet-size cost matrix.
+
+Runs the full grid (5 dispatchers x {cfs, hybrid} x {2, 4} nodes) on a
+downscaled Azure-like trace via the parallel sweep runner, and times the
+same grid serially to report the speedup. Emits one JSON payload:
+
+    {"meta": {"serial_s": ..., "parallel_s": ..., "speedup": ...},
+     "matrix": [{"node_policy": ..., "dispatcher": ..., "n_nodes": ...,
+                 "cost_usd": ..., "p99_slowdown": ..., ...}, ...]}
+
+Standalone: ``python -m benchmarks.cluster_bench [--smoke]``; also
+registered as ``cluster_matrix`` in ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.cluster import build_grid, compare_serial
+from repro.cluster import DISPATCHERS as _DISPATCHER_REGISTRY
+from repro.cluster.sweep import print_rows
+
+from .common import RESULTS
+
+DISPATCHERS = tuple(sorted(_DISPATCHER_REGISTRY))
+NODE_POLICIES = ("cfs", "hybrid")
+FLEET_SIZES = (2, 4)
+
+
+def _grid(smoke: bool = False):
+    return build_grid(
+        NODE_POLICIES, DISPATCHERS, FLEET_SIZES,
+        cores_per_node=8, minutes=1,
+        invocations_per_min=300.0 if smoke else 1200.0,
+        n_functions=40 if smoke else 80, seed=0)
+
+
+def cluster_matrix(smoke: bool = None) -> list[dict]:
+    # ``benchmarks.run`` calls benches with no arguments; CI selects the
+    # small-trace grid through the environment instead.
+    if smoke is None:
+        smoke = bool(os.environ.get("CLUSTER_BENCH_SMOKE"))
+    cmp = compare_serial(_grid(smoke))
+    rows = cmp.pop("rows")
+    # ``benchmarks.run`` persists the return value as <name>.json, so
+    # fold the serial-vs-parallel timing meta into the first row.
+    if rows:
+        rows[0] = {**rows[0], **{f"sweep_{k}": v for k, v in cmp.items()}}
+    return rows
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    rows = cluster_matrix(smoke=smoke)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "cluster_matrix.json").write_text(
+        json.dumps({"matrix": rows}, indent=2))
+    print_rows(rows)
+    speedup = rows[0].get("sweep_speedup") if rows else None
+    if speedup:
+        print(f"# sweep speedup {speedup:.2f}x", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import sys
 
+from . import cluster_bench as C
 from . import paper_figures as F
 from . import serving_bench as S
 from .common import emit, timed
@@ -25,6 +26,7 @@ BENCHES = [
     ("fig23_pareto", F.fig23_pareto),
     ("serving_gateway", S.serving_gateway),
     ("roofline_table", S.roofline_table),
+    ("cluster_matrix", C.cluster_matrix),
 ]
 
 

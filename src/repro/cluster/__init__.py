@@ -1,0 +1,24 @@
+"""repro.cluster — multi-node fleet simulation over per-node schedulers.
+
+The paper stops at one 50-core host; a provider runs fleets, and the
+cluster dispatcher decides which node an invocation lands on before the
+node-level FIFO+CFS hybrid ever sees it. This package composes the
+single-node simulators into a fleet: pluggable front-end dispatch
+(``dispatch``), the interleaved multi-node event loop (``sim``),
+fleet-level roll-ups (``metrics``), and a parallel grid runner
+(``sweep``).
+"""
+from .dispatch import (DISPATCHERS, AffinityDispatch, Dispatcher,
+                       JoinIdleQueueDispatch, LeastLoadedDispatch,
+                       RandomDispatch, RoundRobinDispatch, make_dispatcher)
+from .metrics import ClusterResult
+from .sim import ClusterNode, ClusterSim, run_cluster
+from .sweep import Cell, build_grid, compare_serial, run_cell, run_sweep
+
+__all__ = [
+    "DISPATCHERS", "AffinityDispatch", "Dispatcher",
+    "JoinIdleQueueDispatch", "LeastLoadedDispatch", "RandomDispatch",
+    "RoundRobinDispatch", "make_dispatcher", "ClusterResult",
+    "ClusterNode", "ClusterSim", "run_cluster", "Cell", "build_grid",
+    "compare_serial", "run_cell", "run_sweep",
+]

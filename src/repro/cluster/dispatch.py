@@ -1,0 +1,165 @@
+"""Cluster front-end dispatch policies.
+
+The node-level FIFO+CFS hybrid only sees the invocations the cluster
+dispatcher hands it, so the routing layer bounds how much money the
+per-node scheduler can save. Five policies spanning the design space of
+the related work:
+
+random          -- seeded uniform choice (the strawman baseline).
+round_robin     -- cyclic assignment, oblivious to node state.
+least_loaded    -- route to the node with the fewest admitted-but-
+                   unfinished tasks per core (power-of-d with d = N).
+join_idle_queue -- pull-based dispatch a la Hiku: nodes advertise
+                   idleness; an invocation goes to the idle node that
+                   has waited longest, falling back to least-loaded
+                   when the idle queue is empty.
+affinity        -- consistent-hash function affinity a la Kaffes et al.:
+                   invocations of one function land on one node (warm
+                   containers, code locality), with a virtual-node ring
+                   so node add/remove only remaps ~1/N of functions.
+
+All policies are deterministic under a fixed seed. ``select`` sees the
+live node handles and the cluster clock; node state is whatever the
+scheduler's ``load_snapshot`` reports at that instant.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import random
+from collections import OrderedDict
+from typing import TYPE_CHECKING, Sequence
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .sim import ClusterNode
+
+from ..core.events import Task
+
+
+class Dispatcher:
+    name = "base"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.rng = random.Random(seed)
+
+    def select(self, task: Task, nodes: Sequence["ClusterNode"],
+               t: float) -> int:
+        """Return the index into ``nodes`` this task is routed to."""
+        raise NotImplementedError
+
+    def on_topology_change(self, nodes: Sequence["ClusterNode"]) -> None:
+        """Called when nodes join or leave the fleet."""
+
+
+class RandomDispatch(Dispatcher):
+    name = "random"
+
+    def select(self, task, nodes, t):
+        return self.rng.randrange(len(nodes))
+
+
+class RoundRobinDispatch(Dispatcher):
+    name = "round_robin"
+
+    def __init__(self, seed: int = 0):
+        super().__init__(seed)
+        self._next = 0
+
+    def select(self, task, nodes, t):
+        i = self._next % len(nodes)
+        self._next += 1
+        return i
+
+
+class LeastLoadedDispatch(Dispatcher):
+    name = "least_loaded"
+
+    def select(self, task, nodes, t):
+        return min(range(len(nodes)),
+                   key=lambda i: (nodes[i].snapshot()["load"], i))
+
+
+class JoinIdleQueueDispatch(Dispatcher):
+    """Pull-based: an ordered set of idle node ids, longest-idle first.
+
+    A real Hiku-style worker pulls work when it idles; in the
+    simulation the equivalent information arrives with the snapshot we
+    take at each dispatch decision, so the idle queue is refreshed then.
+    """
+
+    name = "join_idle_queue"
+
+    def __init__(self, seed: int = 0):
+        super().__init__(seed)
+        self._idle: OrderedDict[int, None] = OrderedDict()
+
+    def select(self, task, nodes, t):
+        snaps = [n.snapshot() for n in nodes]
+        for i, s in enumerate(snaps):
+            if s["idle"]:
+                if i not in self._idle:
+                    self._idle[i] = None
+            else:
+                self._idle.pop(i, None)
+        if self._idle:
+            i, _ = self._idle.popitem(last=False)
+            return i
+        return min(range(len(nodes)), key=lambda i: (snaps[i]["load"], i))
+
+    def on_topology_change(self, nodes):
+        self._idle.clear()
+
+
+def _hash64(key: str) -> int:
+    return int.from_bytes(hashlib.blake2b(key.encode(),
+                                          digest_size=8).digest(), "big")
+
+
+class AffinityDispatch(Dispatcher):
+    """Consistent-hash ring over (node id, virtual replica) points keyed
+    by ``func_id``: the per-function-invocation affinity scheduler of
+    Kaffes et al., made elastic."""
+
+    name = "affinity"
+
+    def __init__(self, seed: int = 0, vnodes: int = 64):
+        super().__init__(seed)
+        self.vnodes = vnodes
+        self._ring: list[tuple[int, int]] = []  # (point, node index)
+        self._points: list[int] = []
+
+    def _build(self, nodes) -> None:
+        self._ring = sorted(
+            (_hash64(f"{n.node_id}:{v}:{self.seed}"), i)
+            for i, n in enumerate(nodes) for v in range(self.vnodes))
+        self._points = [p for p, _ in self._ring]
+
+    def on_topology_change(self, nodes):
+        self._build(nodes)
+
+    def select(self, task, nodes, t):
+        return self.owner(task.func_id, nodes)
+
+    def owner(self, func_id: int, nodes) -> int:
+        """Ring lookup without dispatching (affinity-stability tests)."""
+        if len(self._ring) != len(nodes) * self.vnodes:
+            self._build(nodes)
+        j = bisect.bisect_right(self._points, _hash64(f"f{func_id}"))
+        return self._ring[j % len(self._ring)][1]
+
+
+DISPATCHERS = {
+    "random": RandomDispatch,
+    "round_robin": RoundRobinDispatch,
+    "least_loaded": LeastLoadedDispatch,
+    "join_idle_queue": JoinIdleQueueDispatch,
+    "affinity": AffinityDispatch,
+}
+
+
+def make_dispatcher(name: str, **kw) -> Dispatcher:
+    if name not in DISPATCHERS:
+        raise KeyError(f"unknown dispatcher {name!r}; "
+                       f"have {sorted(DISPATCHERS)}")
+    return DISPATCHERS[name](**kw)

@@ -1,0 +1,119 @@
+"""Fleet-level metric and cost roll-ups.
+
+A cluster run is judged on three axes the single-node ``SimResult``
+cannot express:
+
+* balance  — per-node utilization spread (a dispatcher that piles work
+             on one node wastes the rest of the fleet);
+* latency  — fleet-wide slowdown (turnaround / service) percentiles,
+             which normalize across the heavy-tailed duration mix;
+* money    — total $ via the same AWS Lambda model as the paper
+             (``core.cost``), summed over every node.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import cached_property
+
+import numpy as np
+
+from ..core.cost import workload_cost_usd
+from ..core.metrics import SimResult
+
+
+@dataclass
+class ClusterResult:
+    node_results: list[SimResult]
+    node_ids: list[str]
+    node_policies: list[str]
+    dispatcher: str
+    cores_per_node: int
+    assignments: list = field(default_factory=list)
+    redispatches: int = 0  # straggler re-dispatches (serving fleets)
+    n_retired: int = 0  # trailing node_results rows removed mid-run
+
+    # -- task views (cached: summary() walks these repeatedly) --------------
+    @cached_property
+    def tasks(self) -> list:
+        return [t for r in self.node_results for t in r.tasks]
+
+    @cached_property
+    def failed(self) -> list:
+        return [t for r in self.node_results for t in r.failed]
+
+    def execution(self) -> np.ndarray:
+        return np.array([t.execution for t in self.tasks])
+
+    def slowdown(self) -> np.ndarray:
+        return np.array([t.turnaround / t.service for t in self.tasks])
+
+    # -- balance ------------------------------------------------------------
+    def makespan(self) -> float:
+        return max(t.completion for t in self.tasks)
+
+    @property
+    def live_results(self) -> list[SimResult]:
+        """Nodes still in the fleet (retired rows sort last)."""
+        n = len(self.node_results) - self.n_retired
+        return self.node_results[:n]
+
+    def node_utilization(self, horizon: float = None) -> np.ndarray:
+        """Busy fraction per LIVE node over the fleet makespan — a node
+        removed mid-run would otherwise read as dispatcher imbalance."""
+        if horizon is None:
+            horizon = self.makespan()
+        out = []
+        for r in self.live_results:
+            busy = sum(t.cpu_time for t in r.tasks)
+            out.append(busy / (self.cores_per_node * horizon))
+        return np.array(out)
+
+    def utilization_spread(self) -> dict[str, float]:
+        u = self.node_utilization()
+        return {"min": float(u.min()), "max": float(u.max()),
+                "range": float(u.max() - u.min()), "std": float(u.std())}
+
+    def assignment_counts(self) -> list[int]:
+        """Per-node assignment totals, in ``node_results`` order.
+        Assignments are keyed by node id, which survives add/remove
+        churn (result rows reorder: live nodes first, retired last)."""
+        pos = {nid: k for k, nid in enumerate(self.node_ids)}
+        counts = [0] * len(self.node_ids)
+        for _, nid in self.assignments:
+            counts[pos[nid]] += 1
+        return counts
+
+    # -- latency / money ----------------------------------------------------
+    def p_slowdown(self, pct: float) -> float:
+        return float(np.percentile(self.slowdown(), pct))
+
+    def cost_usd(self) -> float:
+        return workload_cost_usd(self.execution(),
+                                 mem_mb=[t.mem_mb for t in self.tasks])
+
+    def summary(self) -> dict:
+        # Compute each derived array once: this runs per sweep cell on
+        # the grid-runner hot path.
+        slowdown = self.slowdown()
+        horizon = self.makespan()
+        util = self.node_utilization(horizon)
+        turnaround = [t.turnaround for t in self.tasks]
+        out = {
+            "dispatcher": self.dispatcher,
+            "node_policies": list(dict.fromkeys(self.node_policies)),
+            "n_nodes": len(self.live_results),
+            "cores_per_node": self.cores_per_node,
+            "n": len(self.tasks),
+            "failed": len(self.failed),
+            "p50_slowdown": float(np.percentile(slowdown, 50)),
+            "p99_slowdown": float(np.percentile(slowdown, 99)),
+            "p99_turnaround_s": float(np.percentile(turnaround, 99)) / 1e3,
+            "makespan_s": horizon / 1e3,
+            "util_mean": float(util.mean()),
+            "util_range": float(util.max() - util.min()),
+            "util_std": float(util.std()),
+            "cost_usd": self.cost_usd(),
+        }
+        if self.redispatches:
+            out["redispatches"] = self.redispatches
+        return out

@@ -1,0 +1,170 @@
+"""Multi-node fleet simulation composing per-node schedulers.
+
+``ClusterSim`` owns N ``ClusterNode`` handles, each wrapping one
+single-node :class:`~repro.core.events.Scheduler` (any policy from
+``core.simulate.POLICIES``; heterogeneous mixes allowed). The cluster
+loop walks the workload in arrival order: before each routing decision
+every node is stepped to the invocation's arrival time, so state-aware
+dispatchers (least-loaded, join-idle-queue) observe exactly what a
+heartbeat at that instant would report. After the last arrival the
+nodes drain independently — their event streams no longer interact.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Union
+
+from ..core.events import Scheduler, Task
+from ..core.metrics import collect
+from ..core.simulate import make_scheduler
+from .dispatch import Dispatcher, make_dispatcher
+from .metrics import ClusterResult
+
+
+class ClusterNode:
+    """One host in the fleet: a scheduler plus dispatch bookkeeping."""
+
+    def __init__(self, node_id: str, sched: Scheduler, policy: str):
+        self.node_id = node_id
+        self.sched = sched
+        self.policy = policy
+        self.assigned = 0
+
+    def prime(self) -> None:
+        self.sched.prime([])
+
+    def inject(self, task: Task, t: float) -> None:
+        self.assigned += 1
+        self.sched.inject(task, t)
+
+    def step(self, until: float) -> None:
+        self.sched.step(until)
+
+    def drain(self) -> None:
+        self.sched.drain()
+
+    def snapshot(self) -> dict:
+        return self.sched.load_snapshot()
+
+
+NodeSpec = Union[str, tuple]  # "hybrid" or ("hybrid", {kwargs})
+
+
+def _make_node(i: int, spec: NodeSpec, cores_per_node: int,
+               node_factory=None) -> ClusterNode:
+    if isinstance(spec, str):
+        policy, kw = spec, {}
+    else:
+        policy, kw = spec[0], dict(spec[1])
+    if node_factory is not None:
+        sched = node_factory(policy, n_cores=cores_per_node, **kw)
+    else:
+        sched = make_scheduler(policy, n_cores=cores_per_node, **kw)
+    return ClusterNode(f"node{i}", sched, policy)
+
+
+class ClusterSim:
+    """Fleet of nodes behind a pluggable front-end dispatcher.
+
+    ``node_policies`` is either one policy applied fleet-wide or a
+    per-node list (heterogeneous fleets — e.g. half hybrid, half CFS).
+    ``node_factory`` overrides scheduler construction for domains whose
+    schedulers need extra arguments (the serving gateway's slot
+    schedulers).
+    """
+
+    def __init__(self,
+                 n_nodes: int = 4,
+                 cores_per_node: int = 16,
+                 node_policies: Union[NodeSpec, Sequence[NodeSpec]] = "hybrid",
+                 dispatcher: Union[str, Dispatcher] = "least_loaded",
+                 seed: int = 0,
+                 node_factory=None):
+        if n_nodes < 1:
+            raise ValueError("a fleet needs at least one node")
+        if isinstance(node_policies, (str, tuple)):
+            node_policies = [node_policies] * n_nodes
+        if len(node_policies) != n_nodes:
+            raise ValueError(
+                f"{len(node_policies)} node policies for {n_nodes} nodes")
+        self.node_factory = node_factory
+        self.nodes = [_make_node(i, spec, cores_per_node, node_factory)
+                      for i, spec in enumerate(node_policies)]
+        # Monotonic id counter: node ids must stay unique across
+        # add/remove churn or the affinity ring maps two nodes to the
+        # same hash points.
+        self._next_node_id = n_nodes
+        self.cores_per_node = cores_per_node
+        if isinstance(dispatcher, str):
+            dispatcher = make_dispatcher(dispatcher, seed=seed)
+        self.dispatcher = dispatcher
+        self.dispatcher.on_topology_change(self.nodes)
+        # (tid, node_id): ids stay valid across add/remove churn, where
+        # live-list indices shift.
+        self.assignments: list[tuple[int, str]] = []
+        self._retired: list[ClusterNode] = []
+
+    # -- elasticity --------------------------------------------------------
+    def add_node(self, spec: NodeSpec = "hybrid") -> ClusterNode:
+        node = _make_node(self._next_node_id, spec, self.cores_per_node,
+                          self.node_factory)
+        self._next_node_id += 1
+        node.prime()
+        self.nodes.append(node)
+        self.dispatcher.on_topology_change(self.nodes)
+        return node
+
+    def remove_node(self, index: int) -> ClusterNode:
+        """Drain and detach a node (its in-flight work completes and is
+        still counted in the fleet roll-up via ``_retired``)."""
+        node = self.nodes.pop(index)
+        node.drain()
+        self._retired.append(node)
+        self.dispatcher.on_topology_change(self.nodes)
+        return node
+
+    # -- simulation --------------------------------------------------------
+    def run(self, workload: list[Task], *,
+            fresh_tasks: bool = True) -> ClusterResult:
+        tasks = copy.deepcopy(workload) if fresh_tasks else workload
+        tasks = sorted(tasks, key=lambda x: (x.arrival, x.tid))
+        for node in self.nodes:
+            node.prime()
+        for task in tasks:
+            t = task.arrival
+            for node in self.nodes:
+                node.step(t)
+            i = self.dispatcher.select(task, self.nodes, t)
+            self.assignments.append((task.tid, self.nodes[i].node_id))
+            self.nodes[i].inject(task, t)
+        for node in self.nodes:
+            node.drain()
+        return self.result()
+
+    def result(self) -> ClusterResult:
+        everything = self.nodes + getattr(self, "_retired", [])
+        per_node = [collect(n.sched, n.policy) for n in everything]
+        return ClusterResult(
+            node_results=per_node,
+            node_ids=[n.node_id for n in everything],
+            node_policies=[n.policy for n in everything],
+            dispatcher=self.dispatcher.name,
+            cores_per_node=self.cores_per_node,
+            assignments=list(self.assignments),
+            n_retired=len(getattr(self, "_retired", [])),
+        )
+
+
+def run_cluster(workload: list[Task], *,
+                n_nodes: int = 4,
+                cores_per_node: int = 16,
+                node_policy: Union[NodeSpec, Sequence[NodeSpec]] = "hybrid",
+                dispatcher: str = "least_loaded",
+                seed: int = 0,
+                node_factory=None) -> ClusterResult:
+    """One-call analogue of ``core.simulate.run_policy`` for fleets."""
+    sim = ClusterSim(n_nodes=n_nodes, cores_per_node=cores_per_node,
+                     node_policies=node_policy, dispatcher=dispatcher,
+                     seed=seed, node_factory=node_factory)
+    return sim.run(workload)

@@ -1,0 +1,155 @@
+"""Parallel experiment runner: policy x dispatcher x fleet-size grids.
+
+Every cell is an independent ``ClusterSim`` run, so the grid is
+embarrassingly parallel; ``run_sweep`` fans cells out over a
+``multiprocessing`` pool and a paper-style comparison that takes serial
+minutes finishes in seconds. Workers regenerate the workload from its
+``TraceSpec`` (cheap, deterministic) instead of pickling task lists
+across process boundaries.
+
+CLI::
+
+    python -m repro.cluster.sweep --nodes 2,4 --policies cfs,hybrid \
+        --dispatchers random,least_loaded --minutes 1 --compare-serial
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import multiprocessing as mp
+import os
+import sys
+import time
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+from ..traces.azure import TraceSpec
+from ..traces.workload import generate_workload, scale_load
+from .dispatch import DISPATCHERS
+from .sim import run_cluster
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One grid point; fully describes a reproducible cluster run."""
+    node_policy: str
+    dispatcher: str
+    n_nodes: int
+    cores_per_node: int = 16
+    load_scale: float = 1.0
+    minutes: int = 1
+    invocations_per_min: float = 1500.0
+    n_functions: int = 80
+    seed: int = 0
+
+
+def run_cell(cell: Cell) -> dict:
+    """Execute one grid point and return its summary row."""
+    spec = TraceSpec(minutes=cell.minutes,
+                     invocations_per_min=cell.invocations_per_min,
+                     n_functions=cell.n_functions, seed=cell.seed)
+    tasks = generate_workload(spec).tasks
+    if cell.load_scale != 1.0:
+        tasks = scale_load(tasks, cell.load_scale)
+    res = run_cluster(tasks, n_nodes=cell.n_nodes,
+                      cores_per_node=cell.cores_per_node,
+                      node_policy=cell.node_policy,
+                      dispatcher=cell.dispatcher, seed=cell.seed,
+                      node_factory=None)
+    row = asdict(cell)
+    row.update(res.summary())
+    return row
+
+
+def build_grid(node_policies, dispatchers, n_nodes, load_scales=(1.0,),
+               **common) -> list[Cell]:
+    return [Cell(node_policy=p, dispatcher=d, n_nodes=n, load_scale=ls,
+                 **common)
+            for p, d, n, ls in itertools.product(
+                node_policies, dispatchers, n_nodes, load_scales)]
+
+
+def run_sweep(grid: list[Cell], *, parallel: bool = True,
+              processes: Optional[int] = None) -> list[dict]:
+    if not parallel or len(grid) <= 1:
+        return [run_cell(c) for c in grid]
+    processes = processes or min(len(grid), os.cpu_count() or 2)
+    with mp.Pool(processes) as pool:
+        return pool.map(run_cell, grid)
+
+
+def compare_serial(grid: list[Cell],
+                   processes: Optional[int] = None) -> dict:
+    """Time the same grid serially and in parallel; returns timings and
+    the speedup (the sweep-runner acceptance check)."""
+    t0 = time.time()
+    run_sweep(grid, parallel=False)
+    serial_s = time.time() - t0
+    t0 = time.time()
+    rows = run_sweep(grid, parallel=True, processes=processes)
+    parallel_s = time.time() - t0
+    return {"serial_s": serial_s, "parallel_s": parallel_s,
+            "speedup": serial_s / max(parallel_s, 1e-9), "rows": rows}
+
+
+def _csv(vals, cast=str):
+    return [cast(v) for v in vals.split(",") if v]
+
+
+SUMMARY_COLS = ("node_policy", "dispatcher", "n_nodes", "load_scale",
+                "cost_usd", "p99_slowdown", "util_range")
+
+
+def print_rows(rows: list[dict], cols=SUMMARY_COLS) -> None:
+    """CSV-print summary rows (shared by the sweep CLI and benches)."""
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float)
+                       else str(r[c]) for c in cols))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--policies", default="cfs,hybrid")
+    ap.add_argument("--dispatchers", default=",".join(sorted(DISPATCHERS)))
+    ap.add_argument("--nodes", default="2,4")
+    ap.add_argument("--load-scales", default="1.0")
+    ap.add_argument("--cores-per-node", type=int, default=16)
+    ap.add_argument("--minutes", type=int, default=1)
+    ap.add_argument("--invocations-per-min", type=float, default=1500.0)
+    ap.add_argument("--n-functions", type=int, default=80)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--serial", action="store_true",
+                    help="disable the multiprocessing pool")
+    ap.add_argument("--compare-serial", action="store_true",
+                    help="time serial vs parallel and report the speedup")
+    ap.add_argument("--out", default=None, help="write rows as JSON here")
+    args = ap.parse_args(argv)
+
+    grid = build_grid(
+        _csv(args.policies), _csv(args.dispatchers),
+        _csv(args.nodes, int), _csv(args.load_scales, float),
+        cores_per_node=args.cores_per_node, minutes=args.minutes,
+        invocations_per_min=args.invocations_per_min,
+        n_functions=args.n_functions, seed=args.seed)
+
+    meta = {}
+    if args.compare_serial:
+        meta = compare_serial(grid)
+        rows = meta.pop("rows")
+        print(f"# serial {meta['serial_s']:.2f}s  "
+              f"parallel {meta['parallel_s']:.2f}s  "
+              f"speedup {meta['speedup']:.2f}x", file=sys.stderr)
+    else:
+        rows = run_sweep(grid, parallel=not args.serial)
+
+    print_rows(rows)
+    if args.out:
+        payload = {"meta": meta, "rows": rows}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -155,6 +155,8 @@ class Scheduler:
         self.total_ctx = 0
         self.util_series: list = []  # (t, per-group {group: util})
         self._timers: list[tuple[float, Callable]] = []
+        self._primed = False
+        self._parked_timers: dict = {}  # payload -> interval, revived on inject
 
     # -- event machinery ------------------------------------------------
     def _push(self, t: float, kind: int, payload, gen: int = 0) -> None:
@@ -162,26 +164,117 @@ class Scheduler:
         self.seq += 1
 
     def run(self, tasks: list[Task]) -> "Scheduler":
-        self.total_tasks = len(tasks) + len(self.completed) + \
-            len(self.failed)
+        self.prime(tasks)
+        return self.drain()
+
+    # -- stepping interface ----------------------------------------------
+    #
+    # A cluster-level dispatcher interleaves N node schedulers: it primes
+    # each node once, injects tasks as the front-end routes them, and
+    # advances every node to the current cluster time with step().
+
+    def prime(self, tasks: list[Task] = ()) -> "Scheduler":
+        """Register initial arrivals and start timers without running."""
+        # First prime: count pre-populated completed/failed (the microvm
+        # admission path appends rejects before run()). Later primes:
+        # ACCUMULATE, so injected in-flight tasks keep counting and
+        # work_remaining() cannot go false mid-run.
+        base = getattr(self, "total_tasks", None)
+        if base is None:
+            base = len(self.completed) + len(self.failed)
+        self.total_tasks = base + len(tasks)
         for task in tasks:
-            self._push(task.arrival, ARRIVAL, task)
-        if self.trace_util:
-            self._push(self.util_sample_ms, TIMER, "util")
-        self.on_start()
-        while self.heap:
-            t, _, kind, payload, gen = heapq.heappop(self.heap)
-            self.now = t
-            if kind == ARRIVAL:
-                self.on_arrival(payload, t)
-            elif kind == CORE_EVT:
-                core: Core = payload
-                if gen != core.gen:
-                    continue  # stale decision point
-                self._finish_chunk(core, t)
-            else:  # TIMER
-                self.on_timer(payload, t)
+            self._push(max(self.now, task.arrival), ARRIVAL, task)
+        if not self._primed:
+            self._primed = True
+            if self.trace_util:
+                self._push(self.util_sample_ms, TIMER, "util")
+            self.on_start()
+        else:
+            # A re-run (e.g. run() called again with more work): the
+            # periodic timers parked when the first batch finished must
+            # come back with the new work.
+            self._revive_parked_timers(self.now)
         return self
+
+    def _revive_parked_timers(self, at: float) -> None:
+        for payload, interval in self._parked_timers.items():
+            self._push(at + interval, TIMER, payload)
+        self._parked_timers.clear()
+
+    def inject(self, task: Task, t: Optional[float] = None) -> None:
+        """Feed one task in at time ``t`` (>= now); used by cluster
+        dispatch, where arrival times are decided by the front end. The
+        arrival EVENT is clamped to now (the clock never rewinds); the
+        task's ``arrival`` field keeps its original value so queueing
+        delay is still measured from true arrival."""
+        self.total_tasks = getattr(self, "total_tasks", 0) + 1
+        ta = task.arrival if t is None else max(t, task.arrival)
+        self._push(max(self.now, ta), ARRIVAL, task)
+        self._revive_parked_timers(max(self.now, ta))
+
+    def next_event_time(self) -> float:
+        """Time of the earliest pending event (inf when drained)."""
+        return self.heap[0][0] if self.heap else float("inf")
+
+    def _pop_event(self) -> None:
+        t, _, kind, payload, gen = heapq.heappop(self.heap)
+        self.now = t
+        if kind == ARRIVAL:
+            self.on_arrival(payload, t)
+        elif kind == CORE_EVT:
+            core: Core = payload
+            if gen == core.gen:
+                self._finish_chunk(core, t)
+            # else: stale decision point
+        else:  # TIMER
+            self.on_timer(payload, t)
+
+    def step(self, until: float) -> "Scheduler":
+        """Process every event with timestamp <= ``until`` and advance
+        the clock there, so snapshots taken by a dispatcher see node
+        state as of the cluster-wide current time."""
+        while self.heap and self.heap[0][0] <= until:
+            self._pop_event()
+        self.now = max(self.now, until)
+        return self
+
+    def drain(self) -> "Scheduler":
+        """Run the event loop to exhaustion."""
+        while self.heap:
+            self._pop_event()
+        return self
+
+    # -- load snapshot (cluster dispatch) ---------------------------------
+    def n_running(self) -> int:
+        return sum(1 for c in self.cores if c.task is not None)
+
+    def global_queue_len(self) -> int:
+        """Length of the policy's centralized queue, if it keeps one.
+        Policies with a global queue MUST override this or heartbeat
+        load reports undercount and state-aware dispatch misroutes."""
+        return 0
+
+    def n_queued(self) -> int:
+        """Tasks admitted but not currently on a core: per-core
+        runqueues plus the policy's global queue."""
+        return sum(len(c.rq) for c in self.cores) + self.global_queue_len()
+
+    def has_idle_core(self) -> bool:
+        return self.idle_core() is not None
+
+    def load_snapshot(self) -> dict:
+        """Instantaneous occupancy — what a least-loaded or pull-based
+        front end would learn from a node heartbeat."""
+        running, queued = self.n_running(), self.n_queued()
+        return {
+            "running": running,
+            "queued": queued,
+            "load": (running + queued) / self.n_cores,
+            # A rightsizer-locked core cannot start work, so it does not
+            # make the node "idle" to a pull-based dispatcher.
+            "idle": queued == 0 and self.has_idle_core(),
+        }
 
     # -- chunk lifecycle -------------------------------------------------
     def _start_chunk(self, core: Core, task: Task, t: float,
@@ -276,13 +369,23 @@ class Scheduler:
         done = len(self.completed) + len(self.failed)
         return done < getattr(self, "total_tasks", 0)
 
+    def _reschedule_timer(self, payload, interval: float) -> None:
+        """Keep a periodic timer alive while work remains; otherwise PARK
+        it so a later ``inject`` revives it. A cluster node is often
+        momentarily quiescent between dispatched invocations — letting
+        the timer chain die there would silently disable util tracing /
+        rightsizing for the rest of the run."""
+        if self.work_remaining():
+            self._push(self.now + interval, TIMER, payload)
+        else:
+            self._parked_timers[payload] = interval
+
     def on_timer(self, payload, t: float) -> None:
         if payload == "util":
             util = self.sample_util(t)
             self.util_series.append(
                 (t, util, sum(1 for c in self.cores if c.group == GROUP_FIFO)))
-            if self.work_remaining():
-                self._push(t + self.util_sample_ms, TIMER, "util")
+            self._reschedule_timer("util", self.util_sample_ms)
 
     # -- policy hooks -------------------------------------------------------
     def on_start(self) -> None:  # pragma: no cover - trivial

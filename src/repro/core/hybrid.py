@@ -107,6 +107,15 @@ class HybridScheduler(Scheduler):
             return self.adapter.limit()
         return self.static_limit_ms
 
+    def global_queue_len(self) -> int:
+        return len(self.fifo_queue)
+
+    def has_idle_core(self) -> bool:
+        # New arrivals enter through the FIFO group (Fig. 7): an idle
+        # CFS core cannot start them, so it must not make the node look
+        # "idle" to a pull-based cluster dispatcher.
+        return self.idle_core(self.fifo_cores) is not None
+
     # -- event hooks -------------------------------------------------------
     def on_start(self) -> None:
         if self.rightsizer is not None:
@@ -169,8 +178,7 @@ class HybridScheduler(Scheduler):
     def on_timer(self, payload, t: float) -> None:
         if payload == "rightsize":
             self._rightsize(t)
-            if self.work_remaining():
-                self._push(t + self.rightsizer.interval_ms, 2, "rightsize")
+            self._reschedule_timer("rightsize", self.rightsizer.interval_ms)
             return
         if isinstance(payload, tuple) and payload[0] == "unlock":
             self.dispatch(payload[1], t)

@@ -30,6 +30,9 @@ class FIFO(Scheduler):
         if core is not None:
             self.dispatch(core, t)
 
+    def global_queue_len(self) -> int:
+        return len(self.queue)
+
     def pick_next(self, core: Core, t: float):
         if self.queue:
             return self.queue.popleft(), None
@@ -143,6 +146,9 @@ class EDF(Scheduler):
     def _qpush(self, task: Task) -> None:
         self._heapq.heappush(self.queue, (task.deadline, self._qseq, task))
         self._qseq += 1
+
+    def global_queue_len(self) -> int:
+        return len(self.queue)
 
     def on_arrival(self, task: Task, t: float) -> None:
         core = self.idle_core()

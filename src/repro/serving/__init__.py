@@ -2,11 +2,12 @@
 from .request import (RequestSpec, kv_bytes, preemption_penalty_ms,
                       service_ms)
 from .gateway import (GatewayResult, SlotCFS, SlotHybridScheduler,
-                      requests_from_trace, run_gateway)
+                      requests_from_trace, run_gateway, run_gateway_fleet)
 from .engine import LiveRequest, ServingEngine
 
 __all__ = [
     "RequestSpec", "kv_bytes", "preemption_penalty_ms", "service_ms",
     "GatewayResult", "SlotCFS", "SlotHybridScheduler",
-    "requests_from_trace", "run_gateway", "LiveRequest", "ServingEngine",
+    "requests_from_trace", "run_gateway", "run_gateway_fleet",
+    "LiveRequest", "ServingEngine",
 ]

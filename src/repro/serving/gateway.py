@@ -139,20 +139,69 @@ def run_gateway(cfg: ModelConfig, policy: str = "hybrid", *,
                 trace: Optional[TraceSpec] = None) -> GatewayResult:
     reqs = copy.deepcopy(requests) if requests is not None \
         else requests_from_trace(cfg, trace)
-    if policy == "hybrid":
-        sched = SlotHybridScheduler(
-            cfg, seq_len=seq_len, n_cores=n_slots, n_fifo=n_fifo,
-            adapter=(TimeLimitAdapter(pct=adapt_pct)
-                     if adapt_pct else None),
-            rightsizer=Rightsizer() if rightsize else None,
-            straggler_factor=straggler_factor)
-    elif policy == "cfs":
-        sched = SlotCFS(cfg, seq_len=seq_len, n_cores=n_slots)
-    elif policy == "fifo":
-        sched = FIFO(n_cores=n_slots)
-    else:
-        raise KeyError(policy)
+    factory = _slot_node_factory(cfg, seq_len, 0.5, adapt_pct, rightsize,
+                                 straggler_factor=straggler_factor)
+    sched = factory(policy, n_cores=n_slots,
+                    **({"n_fifo": n_fifo} if policy == "hybrid" else {}))
     sched.run(reqs)
     res = collect(sched, policy)
     return GatewayResult(sim=res, arch=cfg.name, policy=policy,
                          redispatches=getattr(sched, "redispatches", 0))
+
+
+# -- fleet gateway ------------------------------------------------------------
+
+def _slot_node_factory(cfg: ModelConfig, seq_len: int, n_fifo_frac: float,
+                       adapt_pct: Optional[float], rightsize: bool,
+                       straggler_factor: float = 0.0):
+    """Build slot schedulers for one node — the single switch shared by
+    ``run_gateway`` (one big node) and ``run_gateway_fleet``."""
+    def factory(policy: str, n_cores: int, **kw):
+        if policy == "hybrid":
+            # An explicit n_fifo (single-node run_gateway) passes
+            # through untouched so invalid splits still fail loudly.
+            n_fifo = kw.pop("n_fifo", None)
+            if n_fifo is None:
+                n_fifo = max(1, min(n_cores - 1,
+                                    round(n_cores * n_fifo_frac)))
+            return SlotHybridScheduler(
+                cfg, seq_len=seq_len, n_cores=n_cores, n_fifo=n_fifo,
+                adapter=(TimeLimitAdapter(pct=adapt_pct)
+                         if adapt_pct else None),
+                rightsizer=Rightsizer() if rightsize else None,
+                straggler_factor=straggler_factor, **kw)
+        if policy == "cfs":
+            return SlotCFS(cfg, seq_len=seq_len, n_cores=n_cores, **kw)
+        if policy == "fifo":
+            return FIFO(n_cores=n_cores, **kw)
+        raise KeyError(policy)
+    return factory
+
+
+def run_gateway_fleet(cfg: ModelConfig, policy: str = "hybrid", *,
+                      n_nodes: int = 4, slots_per_node: int = 16,
+                      dispatcher: str = "least_loaded",
+                      requests: Optional[list[Task]] = None,
+                      adapt_pct: Optional[float] = 95.0,
+                      rightsize: bool = True,
+                      n_fifo_frac: float = 0.5,
+                      seq_len: int = 4096,
+                      straggler_factor: float = 0.0,
+                      seed: int = 0,
+                      trace: Optional[TraceSpec] = None):
+    """Serve the request stream through a fleet of model-serving nodes,
+    with the cluster front end picking the node per invocation. Returns
+    a ``repro.cluster.ClusterResult`` (serving slots = "cores")."""
+    from ..cluster.sim import ClusterSim
+    reqs = copy.deepcopy(requests) if requests is not None \
+        else requests_from_trace(cfg, trace)
+    sim = ClusterSim(
+        n_nodes=n_nodes, cores_per_node=slots_per_node,
+        node_policies=policy, dispatcher=dispatcher, seed=seed,
+        node_factory=_slot_node_factory(cfg, seq_len, n_fifo_frac,
+                                        adapt_pct, rightsize,
+                                        straggler_factor=straggler_factor))
+    res = sim.run(reqs, fresh_tasks=False)
+    res.redispatches = sum(getattr(n.sched, "redispatches", 0)
+                           for n in sim.nodes)
+    return res

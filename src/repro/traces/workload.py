@@ -11,6 +11,7 @@ difference between adjacent invocations is the inter-arrival time."
 """
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass
 
 import numpy as np
@@ -79,6 +80,52 @@ def generate_workload(spec: TraceSpec | None = None,
             deadline=arrival + spec.edf_slack * expected,
         ))
     return Workload(tasks=tasks, spec=spec, scale=scale)
+
+
+# -- cluster helpers: load scaling + sharding ---------------------------------
+
+def scale_load(tasks: list[Task], factor: float) -> list[Task]:
+    """Compress inter-arrival times by ``factor`` (>1 = heavier load).
+
+    Service demands are untouched — this models more users hitting the
+    same function population, the knob a fleet-size sweep turns. Tasks
+    are copied; deadlines keep their slack relative to arrival.
+    """
+    if factor <= 0:
+        raise ValueError("load factor must be positive")
+    out = []
+    for t in tasks:
+        c = copy.copy(t)
+        slack = t.deadline - t.arrival
+        c.arrival = t.arrival / factor
+        c.deadline = c.arrival + slack
+        out.append(c)
+    return out
+
+
+def shard_tasks(tasks: list[Task], n_shards: int,
+                by: str = "hash") -> list[list[Task]]:
+    """Statically partition a workload across ``n_shards`` nodes.
+
+    ``by='hash'`` keys on ``func_id`` (every invocation of a function
+    lands in one shard — the static analogue of affinity dispatch);
+    ``by='interleave'`` deals arrivals round-robin (load-balanced but
+    affinity-free). Dynamic routing lives in ``repro.cluster.dispatch``;
+    this is for embarrassingly-parallel per-node experiments.
+    """
+    if n_shards < 1:
+        raise ValueError("need at least one shard")
+    shards: list[list[Task]] = [[] for _ in range(n_shards)]
+    ordered = sorted(tasks, key=lambda t: (t.arrival, t.tid))
+    if by == "hash":
+        for t in ordered:
+            shards[t.func_id % n_shards].append(t)
+    elif by == "interleave":
+        for i, t in enumerate(ordered):
+            shards[i % n_shards].append(t)
+    else:
+        raise KeyError(f"unknown shard key {by!r}")
+    return shards
 
 
 def workload_file(w: Workload) -> list[dict]:

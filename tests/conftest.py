@@ -5,6 +5,24 @@ from repro.core.events import Task
 from repro.traces import TraceSpec, generate_workload
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--slow", action="store_true", default=False,
+        help="also run tests marked slow (JAX kernel/model tier)")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Two-tier suite: the default tier must stay fast (<2 min) so it is
+    practical to run on every change; ``--slow`` opts into the JAX
+    kernel/model tier (CI runs it nightly)."""
+    if config.getoption("--slow"):
+        return
+    skip = pytest.mark.skip(reason="slow tier: pass --slow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture(scope="session")
 def small_workload():
     """Downscaled 30s Azure-like workload (fast enough for CFS sims)."""

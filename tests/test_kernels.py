@@ -3,10 +3,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.kernels import (decode_attention, flash_attention,
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="install the [test] extra for property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import (decode_attention, flash_attention,  # noqa: E402
                            fused_rmsnorm, ref, rwkv6_scan, ssm_scan)
+
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 

@@ -11,6 +11,10 @@ from repro.models import LM, cache_specs, model_specs
 
 KEY = jax.random.PRNGKey(0)
 
+# Full-model forward/backward passes dominate suite wall-clock (~110 s);
+# the default tier must stay fast enough to run on every change.
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def built():

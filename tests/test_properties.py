@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis): scheduler + cost invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="install the [test] extra for property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import run_policy
 from repro.core.cost import cost_ladder, invocation_cost_usd
