@@ -1,12 +1,17 @@
-"""Cluster benchmark: dispatcher x node-policy x fleet-size cost matrix.
+"""Cluster benchmark: cold-start-rate x cost matrix over the fleet grid.
 
-Runs the full grid (5 dispatchers x {cfs, hybrid} x {2, 4} nodes) on a
-downscaled Azure-like trace via the parallel sweep runner, and times the
-same grid serially to report the speedup. Emits one JSON payload:
+Runs the full grid (8 dispatchers x {cfs, hybrid} x {2, 4} nodes) with
+the container lifecycle layer attached, via the parallel sweep runner,
+plus a small container-free baseline to show the margin widening: once
+sandboxes are modelled, warm-aware affinity dispatch on hybrid nodes
+beats state-oblivious dispatch on CFS nodes by MORE than scheduler
+choice alone buys, because routing now also controls how often users are
+billed for sandbox boot. Emits one JSON payload whose first row carries
+sweep timing (``sweep_*``) and the headline comparison (``headline_*``):
 
-    {"meta": {"serial_s": ..., "parallel_s": ..., "speedup": ...},
-     "matrix": [{"node_policy": ..., "dispatcher": ..., "n_nodes": ...,
-                 "cost_usd": ..., "p99_slowdown": ..., ...}, ...]}
+    {"matrix": [{"node_policy": ..., "dispatcher": ..., "n_nodes": ...,
+                 "cost_usd": ..., "cold_start_rate": ...,
+                 "warm_hold_usd": ..., ...}, ...]}
 
 Standalone: ``python -m benchmarks.cluster_bench [--smoke]``; also
 registered as ``cluster_matrix`` in ``benchmarks.run``.
@@ -17,7 +22,7 @@ import json
 import os
 import sys
 
-from repro.cluster import build_grid, compare_serial
+from repro.cluster import build_grid, compare_serial, run_sweep
 from repro.cluster import DISPATCHERS as _DISPATCHER_REGISTRY
 from repro.cluster.sweep import print_rows
 
@@ -27,13 +32,69 @@ DISPATCHERS = tuple(sorted(_DISPATCHER_REGISTRY))
 NODE_POLICIES = ("cfs", "hybrid")
 FLEET_SIZES = (2, 4)
 
+# The acceptance pair: warm-aware affinity on hybrid nodes must beat
+# state-oblivious (and even state-aware but container-oblivious)
+# dispatch on CFS nodes.
+WARM_CELL = ("hybrid", "warm_affinity")
+BASE_CELLS = (("cfs", "least_loaded"), ("cfs", "round_robin"))
+HEADLINE_NODES = 4
+
+
+def _trace_kw(smoke: bool) -> dict:
+    return dict(cores_per_node=8, minutes=1,
+                invocations_per_min=300.0 if smoke else 1200.0,
+                n_functions=40 if smoke else 80, seed=0)
+
 
 def _grid(smoke: bool = False):
-    return build_grid(
-        NODE_POLICIES, DISPATCHERS, FLEET_SIZES,
-        cores_per_node=8, minutes=1,
-        invocations_per_min=300.0 if smoke else 1200.0,
-        n_functions=40 if smoke else 80, seed=0)
+    return build_grid(NODE_POLICIES, DISPATCHERS, FLEET_SIZES,
+                      containers="fixed", **_trace_kw(smoke))
+
+
+def _baseline_grid(smoke: bool = False):
+    """Container-free margin baseline: the same acceptance pair without
+    the lifecycle layer ('affinity' stands in for 'warm_affinity' —
+    without containers there is no warm set to route on)."""
+    return build_grid(("cfs", "hybrid"), ("least_loaded", "affinity"),
+                      (HEADLINE_NODES,), containers="off",
+                      **_trace_kw(smoke))
+
+
+def _pick(rows, policy, dispatcher, n_nodes=HEADLINE_NODES):
+    for r in rows:
+        if (r["node_policy"], r["dispatcher"], r["n_nodes"]) == \
+                (policy, dispatcher, n_nodes):
+            return r
+    raise KeyError((policy, dispatcher, n_nodes))
+
+
+def _headline(rows, base_rows) -> dict:
+    """The artifact the tentpole promises: affinity + hybrid beats
+    least-loaded + CFS by a wider margin once containers are modelled."""
+    warm = _pick(rows, *WARM_CELL)
+    out = {
+        "warm_affinity_hybrid_cost_usd": warm["cost_usd"],
+        "warm_affinity_hybrid_cold_rate": warm["cold_start_rate"],
+    }
+    for pol, disp in BASE_CELLS:
+        r = _pick(rows, pol, disp)
+        out[f"{disp}_{pol}_cost_usd"] = r["cost_usd"]
+        out[f"{disp}_{pol}_cold_rate"] = r["cold_start_rate"]
+        out[f"saving_vs_{disp}_{pol}"] = \
+            1.0 - warm["cost_usd"] / r["cost_usd"]
+    # The "does modelling containers widen the routing margin" pair:
+    # the with-containers side is the least_loaded+cfs saving above.
+    base_pol, base_disp = BASE_CELLS[0]
+    out["margin_with_containers"] = \
+        out[f"saving_vs_{base_disp}_{base_pol}"]
+    warm_off = _pick(base_rows, "hybrid", "affinity")
+    base_off = _pick(base_rows, "cfs", "least_loaded")
+    out["margin_without_containers"] = \
+        1.0 - warm_off["cost_usd"] / base_off["cost_usd"]
+    out["cheaper"] = all(
+        warm["cost_usd"] < _pick(rows, pol, disp)["cost_usd"]
+        for pol, disp in BASE_CELLS)
+    return out
 
 
 def cluster_matrix(smoke: bool = None) -> list[dict]:
@@ -43,11 +104,15 @@ def cluster_matrix(smoke: bool = None) -> list[dict]:
         smoke = bool(os.environ.get("CLUSTER_BENCH_SMOKE"))
     cmp = compare_serial(_grid(smoke))
     rows = cmp.pop("rows")
+    base_rows = run_sweep(_baseline_grid(smoke))
     # ``benchmarks.run`` persists the return value as <name>.json, so
-    # fold the serial-vs-parallel timing meta into the first row.
+    # fold the timing + headline meta into the first row.
     if rows:
-        rows[0] = {**rows[0], **{f"sweep_{k}": v for k, v in cmp.items()}}
-    return rows
+        head = _headline(rows, base_rows)
+        rows[0] = {**rows[0],
+                   **{f"sweep_{k}": v for k, v in cmp.items()},
+                   **{f"headline_{k}": v for k, v in head.items()}}
+    return rows + base_rows
 
 
 def main() -> None:
@@ -57,9 +122,17 @@ def main() -> None:
     (RESULTS / "cluster_matrix.json").write_text(
         json.dumps({"matrix": rows}, indent=2))
     print_rows(rows)
-    speedup = rows[0].get("sweep_speedup") if rows else None
+    first = rows[0] if rows else {}
+    speedup = first.get("sweep_speedup")
     if speedup:
         print(f"# sweep speedup {speedup:.2f}x", file=sys.stderr)
+    if "headline_cheaper" in first:
+        print(f"# warm_affinity+hybrid cheaper than "
+              f"state-oblivious cfs baselines: {first['headline_cheaper']} "
+              f"(margin w/ containers "
+              f"{first['headline_margin_with_containers']:.1%}, "
+              f"w/o {first['headline_margin_without_containers']:.1%})",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

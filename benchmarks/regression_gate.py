@@ -1,0 +1,124 @@
+"""Benchmark-regression gate: diff two cluster_matrix JSON artifacts.
+
+CI runs the smoke-size ``cluster_matrix`` bench on every PR and uploads
+the JSON. This gate compares the fresh artifact against the previous
+successful run's and FAILS (exit 1) when any shared grid cell regresses
+by more than ``--threshold`` on either axis:
+
+* cost      — ``cost_usd`` goes UP by more than the threshold;
+* throughput — completed invocations per makespan second goes DOWN by
+  more than the threshold.
+
+Cells are matched on (node_policy, dispatcher, n_nodes, load_scale,
+containers); cells present on only one side are reported but do not
+fail the gate (grids evolve). A missing baseline file passes with a
+note, so the first run after enabling the gate is green.
+
+Usage::
+
+    python -m benchmarks.regression_gate PREV.json NEW.json \
+        [--threshold 0.15]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_rows(path: str) -> list[dict]:
+    """Accept both artifact shapes: ``{"matrix": rows}`` (the standalone
+    CLI) and a bare rows list (``benchmarks.run``)."""
+    payload = json.loads(Path(path).read_text())
+    if isinstance(payload, dict):
+        payload = payload.get("matrix", payload.get("rows", []))
+    return payload
+
+
+def cell_key(row: dict) -> tuple:
+    return (row.get("node_policy"), row.get("dispatcher"),
+            row.get("n_nodes"), row.get("load_scale", 1.0),
+            row.get("containers", "off"))
+
+
+def throughput(row: dict) -> float:
+    makespan = row.get("makespan_s") or 0.0
+    return (row.get("n", 0) / makespan) if makespan > 0 else 0.0
+
+
+def compare(prev_rows: list[dict], new_rows: list[dict],
+            threshold: float) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes)."""
+    prev = {cell_key(r): r for r in prev_rows}
+    new = {cell_key(r): r for r in new_rows}
+    failures, notes = [], []
+    shared = sorted(set(prev) & set(new), key=str)
+    for k in sorted(set(prev) ^ set(new), key=str):
+        side = "baseline" if k in prev else "new run"
+        notes.append(f"cell {k} only in {side}; skipped")
+    if not shared:
+        notes.append("no shared grid cells; nothing to gate")
+        return failures, notes
+    n_cost = n_tp = 0
+    for k in shared:
+        p, n = prev[k], new[k]
+        if p.get("cost_usd") and n.get("cost_usd"):
+            n_cost += 1
+            ratio = n["cost_usd"] / p["cost_usd"]
+            if ratio > 1.0 + threshold:
+                failures.append(
+                    f"cell {k}: cost_usd regressed {ratio - 1.0:+.1%} "
+                    f"({p['cost_usd']:.6g} -> {n['cost_usd']:.6g})")
+        tp, tn = throughput(p), throughput(n)
+        if tp > 0 and tn > 0:
+            n_tp += 1
+            ratio = tn / tp
+            if ratio < 1.0 - threshold:
+                failures.append(
+                    f"cell {k}: throughput regressed {ratio - 1.0:+.1%} "
+                    f"({tp:.4g} -> {tn:.4g} inv/s)")
+    notes.append(f"compared {len(shared)} shared cells "
+                 f"({n_cost} on cost, {n_tp} on throughput)")
+    # Schema drift (renamed cost_usd / makespan_s / n) must not silently
+    # disable an axis of the gate: each axis needs at least one
+    # comparison across the shared cells.
+    if n_cost == 0:
+        failures.append(
+            f"{len(shared)} shared cells but 0 cost comparisons — "
+            "artifact schema drifted? (rows need cost_usd)")
+    if n_tp == 0:
+        failures.append(
+            f"{len(shared)} shared cells but 0 throughput comparisons — "
+            "artifact schema drifted? (rows need n + makespan_s)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="previous run's JSON artifact")
+    ap.add_argument("current", help="this run's JSON artifact")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative regression tolerance (default 0.15)")
+    args = ap.parse_args(argv)
+
+    if not Path(args.baseline).exists():
+        print(f"no baseline at {args.baseline}; gate passes vacuously")
+        return 0
+    prev_rows = load_rows(args.baseline)
+    new_rows = load_rows(args.current)
+    failures, notes = compare(prev_rows, new_rows, args.threshold)
+    for line in notes:
+        print(f"note: {line}")
+    for line in failures:
+        print(f"FAIL: {line}", file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} regression(s) beyond "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print("benchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,17 +8,21 @@ single-node simulators into a fleet: pluggable front-end dispatch
 fleet-level roll-ups (``metrics``), and a parallel grid runner
 (``sweep``).
 """
-from .dispatch import (DISPATCHERS, AffinityDispatch, Dispatcher,
-                       JoinIdleQueueDispatch, LeastLoadedDispatch,
-                       RandomDispatch, RoundRobinDispatch, make_dispatcher)
+from .dispatch import (DISPATCHERS, AffinityDispatch, CostAwareDispatch,
+                       Dispatcher, JoinIdleQueueDispatch,
+                       LeastLoadedDispatch, RandomDispatch,
+                       RoundRobinDispatch, WarmAffinityDispatch,
+                       WarmLeastLoadedDispatch, make_dispatcher)
 from .metrics import ClusterResult
 from .sim import ClusterNode, ClusterSim, run_cluster
-from .sweep import Cell, build_grid, compare_serial, run_cell, run_sweep
+from .sweep import (PRESETS, Cell, build_grid, compare_serial, run_cell,
+                    run_sweep)
 
 __all__ = [
-    "DISPATCHERS", "AffinityDispatch", "Dispatcher",
+    "DISPATCHERS", "AffinityDispatch", "CostAwareDispatch", "Dispatcher",
     "JoinIdleQueueDispatch", "LeastLoadedDispatch", "RandomDispatch",
-    "RoundRobinDispatch", "make_dispatcher", "ClusterResult",
-    "ClusterNode", "ClusterSim", "run_cluster", "Cell", "build_grid",
-    "compare_serial", "run_cell", "run_sweep",
+    "RoundRobinDispatch", "WarmAffinityDispatch",
+    "WarmLeastLoadedDispatch", "make_dispatcher", "ClusterResult",
+    "ClusterNode", "ClusterSim", "run_cluster", "PRESETS", "Cell",
+    "build_grid", "compare_serial", "run_cell", "run_sweep",
 ]

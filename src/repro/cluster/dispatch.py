@@ -2,25 +2,39 @@
 
 The node-level FIFO+CFS hybrid only sees the invocations the cluster
 dispatcher hands it, so the routing layer bounds how much money the
-per-node scheduler can save. Five policies spanning the design space of
+per-node scheduler can save. Eight policies spanning the design space of
 the related work:
 
-random          -- seeded uniform choice (the strawman baseline).
-round_robin     -- cyclic assignment, oblivious to node state.
-least_loaded    -- route to the node with the fewest admitted-but-
-                   unfinished tasks per core (power-of-d with d = N).
-join_idle_queue -- pull-based dispatch a la Hiku: nodes advertise
-                   idleness; an invocation goes to the idle node that
-                   has waited longest, falling back to least-loaded
-                   when the idle queue is empty.
-affinity        -- consistent-hash function affinity a la Kaffes et al.:
-                   invocations of one function land on one node (warm
-                   containers, code locality), with a virtual-node ring
-                   so node add/remove only remaps ~1/N of functions.
+random            -- seeded uniform choice (the strawman baseline).
+round_robin       -- cyclic assignment, oblivious to node state.
+least_loaded      -- route to the node with the fewest admitted-but-
+                     unfinished tasks per core (power-of-d with d = N).
+join_idle_queue   -- pull-based dispatch a la Hiku: nodes advertise
+                     idleness; an invocation goes to the idle node that
+                     has waited longest, falling back to least-loaded
+                     when the idle queue is empty.
+affinity          -- consistent-hash function affinity a la Kaffes et
+                     al.: invocations of one function land on one node
+                     (warm containers, code locality), with a
+                     virtual-node ring so node add/remove only remaps
+                     ~1/N of functions.
+warm_affinity     -- affinity that routes on the ACTUAL warm set from
+                     node heartbeats: any node already holding a warm
+                     sandbox for the function wins; otherwise the ring
+                     owner, spilling to least-loaded past a load bound.
+least_loaded_warm -- least-loaded with warm tie-breaking: among nodes
+                     within a load slack of the minimum, prefer one with
+                     a warm sandbox for the function.
+cost_aware        -- prices each route in dollars: expected cold-start
+                     penalty x the function's per-ms price, plus a
+                     queueing term converting node load into billed-ms
+                     (contention inflates wall-clock execution under
+                     CFS). Routes to the cheapest node.
 
 All policies are deterministic under a fixed seed. ``select`` sees the
 live node handles and the cluster clock; node state is whatever the
-scheduler's ``load_snapshot`` reports at that instant.
+scheduler's ``load_snapshot`` reports at that instant — including the
+warm-set contents when the container lifecycle layer is attached.
 """
 from __future__ import annotations
 
@@ -33,6 +47,8 @@ from typing import TYPE_CHECKING, Sequence
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .sim import ClusterNode
 
+from ..core.containers import expected_cold_ms
+from ..core.cost import price_per_ms
 from ..core.events import Task
 
 
@@ -149,12 +165,105 @@ class AffinityDispatch(Dispatcher):
         return self._ring[j % len(self._ring)][1]
 
 
+class WarmAffinityDispatch(AffinityDispatch):
+    """Affinity routing on observed warm state, not just the hash ring.
+
+    The ring concentrates a function on one node, which is what *builds*
+    warmth — but heartbeats know where warm sandboxes actually are (a
+    node added last minute owns ring ranges it has never served; a
+    capacity eviction can leave the ring owner cold while a spill target
+    is warm). Preference order: warm node (least-loaded among them) >
+    ring owner while its load is below ``spill_load`` > least-loaded.
+    """
+
+    name = "warm_affinity"
+
+    def __init__(self, seed: int = 0, vnodes: int = 64,
+                 spill_load: float = 2.0):
+        super().__init__(seed, vnodes)
+        self.spill_load = spill_load
+
+    def select(self, task, nodes, t):
+        snaps = [n.snapshot() for n in nodes]
+        warm = [i for i, s in enumerate(snaps)
+                if s.get("warm", {}).get(task.func_id)]
+        if warm:
+            return min(warm, key=lambda i: (snaps[i]["load"], i))
+        home = self.owner(task.func_id, nodes)
+        if snaps[home]["load"] <= self.spill_load:
+            return home
+        return min(range(len(nodes)), key=lambda i: (snaps[i]["load"], i))
+
+
+class WarmLeastLoadedDispatch(LeastLoadedDispatch):
+    """Least-loaded with warm tie-breaking: load balance first, but when
+    several nodes are within ``slack`` load of the minimum, take the one
+    already holding a warm sandbox for this function."""
+
+    name = "least_loaded_warm"
+
+    def __init__(self, seed: int = 0, slack: float = 0.5):
+        super().__init__(seed)
+        self.slack = slack
+
+    def select(self, task, nodes, t):
+        snaps = [n.snapshot() for n in nodes]
+        lo = min(s["load"] for s in snaps)
+        cands = [i for i, s in enumerate(snaps)
+                 if s["load"] <= lo + self.slack]
+        warm = [i for i in cands
+                if snaps[i].get("warm", {}).get(task.func_id)]
+        pool = warm or cands
+        return min(pool, key=lambda i: (snaps[i]["load"], i))
+
+
+class CostAwareDispatch(Dispatcher):
+    """Route by estimated marginal dollars, not queue lengths.
+
+    score(node) = cold_penalty_ms x price_per_ms(mem)
+                + load x queue_ms_per_load x price_per_ms(mem)
+
+    The first term is the billed sandbox boot the user pays if the node
+    has no warm container for the function (zero on nodes without a
+    container layer); the second converts node load into an equivalent
+    billed-ms penalty — under fair-share scheduling, contention directly
+    inflates the wall-clock execution the provider meters.
+    """
+
+    name = "cost_aware"
+
+    def __init__(self, seed: int = 0, queue_ms_per_load: float = 1_000.0):
+        super().__init__(seed)
+        self.queue_ms_per_load = queue_ms_per_load
+
+    def select(self, task, nodes, t):
+        p = price_per_ms(task.mem_mb)
+        best, best_score = 0, None
+        for i, node in enumerate(nodes):
+            s = node.snapshot()
+            cold = 0.0
+            if "warm" in s and not s["warm"].get(task.func_id):
+                # Price with the node's advertised cold-start model
+                # (heartbeat), so overridden ContainerConfig knobs are
+                # reflected in routing.
+                base, per_gb = s.get("cold_model", (None, None))
+                cold = expected_cold_ms(task.mem_mb) if base is None \
+                    else expected_cold_ms(task.mem_mb, base, per_gb)
+            score = cold * p + s["load"] * self.queue_ms_per_load * p
+            if best_score is None or score < best_score:
+                best, best_score = i, score
+        return best
+
+
 DISPATCHERS = {
     "random": RandomDispatch,
     "round_robin": RoundRobinDispatch,
     "least_loaded": LeastLoadedDispatch,
     "join_idle_queue": JoinIdleQueueDispatch,
     "affinity": AffinityDispatch,
+    "warm_affinity": WarmAffinityDispatch,
+    "least_loaded_warm": WarmLeastLoadedDispatch,
+    "cost_aware": CostAwareDispatch,
 }
 
 

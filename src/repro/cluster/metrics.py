@@ -8,7 +8,13 @@ cannot express:
 * latency  — fleet-wide slowdown (turnaround / service) percentiles,
              which normalize across the heavy-tailed duration mix;
 * money    — total $ via the same AWS Lambda model as the paper
-             (``core.cost``), summed over every node.
+             (``core.cost``), summed over every node; with containers
+             modelled, split into the cold-start share of the user bill
+             plus the provider-side warm-pool memory-hold cost.
+
+Tasks in these roll-ups come from each node's ``completed`` list, so
+their metrics are defined; ``failed`` invocations are counted
+separately and never enter latency/cost vectors.
 """
 from __future__ import annotations
 
@@ -35,7 +41,8 @@ class ClusterResult:
     # -- task views (cached: summary() walks these repeatedly) --------------
     @cached_property
     def tasks(self) -> list:
-        return [t for r in self.node_results for t in r.tasks]
+        return [t for r in self.node_results for t in r.tasks
+                if t.completion is not None]
 
     @cached_property
     def failed(self) -> list:
@@ -91,6 +98,38 @@ class ClusterResult:
         return workload_cost_usd(self.execution(),
                                  mem_mb=[t.mem_mb for t in self.tasks])
 
+    # -- container lifecycle ------------------------------------------------
+    # Fleet values aggregate the per-node SimResult helpers so the
+    # definitions (what counts as cold, how init is priced) live in
+    # exactly one place: core.metrics.
+
+    def cold_starts(self) -> int:
+        return sum(r.cold_starts() for r in self.node_results)
+
+    def cold_start_rate(self) -> float:
+        return (self.cold_starts() / len(self.tasks)) if self.tasks else 0.0
+
+    def init_cost_usd(self) -> float:
+        """Cold-start share of the fleet's user-facing bill."""
+        return sum(r.init_cost_usd() for r in self.node_results)
+
+    def warm_hold_usd(self) -> float:
+        """Provider-side warm-pool memory-hold cost, fleet-wide."""
+        return sum(r.warm_hold_usd() for r in self.node_results)
+
+    def container_stats(self) -> dict | None:
+        """Fleet-wide pool counters (None when no node has a pool)."""
+        per_node = [r.container_stats for r in self.node_results
+                    if r.container_stats is not None]
+        if not per_node:
+            return None
+        keys = ("warm_hits", "cold_starts", "evictions_ttl",
+                "evictions_capacity", "dropped", "warm_mb_ms")
+        agg = {k: sum(s[k] for s in per_node) for k in keys}
+        total = agg["warm_hits"] + agg["cold_starts"]
+        agg["cold_start_rate"] = (agg["cold_starts"] / total) if total else 0.0
+        return agg
+
     def summary(self) -> dict:
         # Compute each derived array once: this runs per sweep cell on
         # the grid-runner hot path.
@@ -113,6 +152,12 @@ class ClusterResult:
             "util_range": float(util.max() - util.min()),
             "util_std": float(util.std()),
             "cost_usd": self.cost_usd(),
+            # Container economics: zeros when the fleet runs without the
+            # lifecycle layer, so downstream CSV/JSON schemas are stable.
+            "cold_starts": self.cold_starts(),
+            "cold_start_rate": self.cold_start_rate(),
+            "init_cost_usd": self.init_cost_usd(),
+            "warm_hold_usd": self.warm_hold_usd(),
         }
         if self.redispatches:
             out["redispatches"] = self.redispatches

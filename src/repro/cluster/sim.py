@@ -15,6 +15,7 @@ import copy
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Union
 
+from ..core.containers import ContainerConfig
 from ..core.events import Scheduler, Task
 from ..core.metrics import collect
 from ..core.simulate import make_scheduler
@@ -52,11 +53,18 @@ NodeSpec = Union[str, tuple]  # "hybrid" or ("hybrid", {kwargs})
 
 
 def _make_node(i: int, spec: NodeSpec, cores_per_node: int,
-               node_factory=None) -> ClusterNode:
+               node_factory=None,
+               containers: Optional[ContainerConfig] = None,
+               seed: int = 0) -> ClusterNode:
     if isinstance(spec, str):
         policy, kw = spec, {}
     else:
         policy, kw = spec[0], dict(spec[1])
+    if containers is not None:
+        # Fleet-wide container config; per-spec kwargs still win, and
+        # each node's pool gets its own deterministic seed stream.
+        kw.setdefault("containers", containers)
+        kw.setdefault("seed", seed + i)
     if node_factory is not None:
         sched = node_factory(policy, n_cores=cores_per_node, **kw)
     else:
@@ -71,7 +79,9 @@ class ClusterSim:
     per-node list (heterogeneous fleets — e.g. half hybrid, half CFS).
     ``node_factory`` overrides scheduler construction for domains whose
     schedulers need extra arguments (the serving gateway's slot
-    schedulers).
+    schedulers). ``containers`` attaches the sandbox lifecycle layer to
+    every node: each gets its own memory-bounded warm pool, heartbeats
+    report warm-set contents, and warm-aware dispatchers route on them.
     """
 
     def __init__(self,
@@ -80,7 +90,8 @@ class ClusterSim:
                  node_policies: Union[NodeSpec, Sequence[NodeSpec]] = "hybrid",
                  dispatcher: Union[str, Dispatcher] = "least_loaded",
                  seed: int = 0,
-                 node_factory=None):
+                 node_factory=None,
+                 containers: Optional[ContainerConfig] = None):
         if n_nodes < 1:
             raise ValueError("a fleet needs at least one node")
         if isinstance(node_policies, (str, tuple)):
@@ -89,7 +100,10 @@ class ClusterSim:
             raise ValueError(
                 f"{len(node_policies)} node policies for {n_nodes} nodes")
         self.node_factory = node_factory
-        self.nodes = [_make_node(i, spec, cores_per_node, node_factory)
+        self.containers = containers
+        self.seed = seed
+        self.nodes = [_make_node(i, spec, cores_per_node, node_factory,
+                                 containers=containers, seed=seed)
                       for i, spec in enumerate(node_policies)]
         # Monotonic id counter: node ids must stay unique across
         # add/remove churn or the affinity ring maps two nodes to the
@@ -108,7 +122,8 @@ class ClusterSim:
     # -- elasticity --------------------------------------------------------
     def add_node(self, spec: NodeSpec = "hybrid") -> ClusterNode:
         node = _make_node(self._next_node_id, spec, self.cores_per_node,
-                          self.node_factory)
+                          self.node_factory, containers=self.containers,
+                          seed=self.seed)
         self._next_node_id += 1
         node.prime()
         self.nodes.append(node)
@@ -162,9 +177,11 @@ def run_cluster(workload: list[Task], *,
                 node_policy: Union[NodeSpec, Sequence[NodeSpec]] = "hybrid",
                 dispatcher: str = "least_loaded",
                 seed: int = 0,
-                node_factory=None) -> ClusterResult:
+                node_factory=None,
+                containers: Optional[ContainerConfig] = None) -> ClusterResult:
     """One-call analogue of ``core.simulate.run_policy`` for fleets."""
     sim = ClusterSim(n_nodes=n_nodes, cores_per_node=cores_per_node,
                      node_policies=node_policy, dispatcher=dispatcher,
-                     seed=seed, node_factory=node_factory)
+                     seed=seed, node_factory=node_factory,
+                     containers=containers)
     return sim.run(workload)

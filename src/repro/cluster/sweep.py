@@ -21,11 +21,12 @@ import multiprocessing as mp
 import os
 import sys
 import time
-from dataclasses import asdict, dataclass
+from dataclasses import asdict, dataclass, replace
 from typing import Optional
 
+from ..core.containers import ContainerConfig
 from ..traces.azure import TraceSpec
-from ..traces.workload import generate_workload, scale_load
+from ..traces.workload import generate_workload, keepalive_hints, scale_load
 from .dispatch import DISPATCHERS
 from .sim import run_cluster
 
@@ -42,6 +43,25 @@ class Cell:
     invocations_per_min: float = 1500.0
     n_functions: int = 80
     seed: int = 0
+    # Container lifecycle layer: "off" | "fixed" | "histogram".
+    containers: str = "off"
+    container_capacity_mb: float = 4096.0
+    keepalive_ms: float = 30_000.0
+
+
+def _cell_containers(cell: Cell, tasks) -> ContainerConfig | None:
+    if cell.containers == "off":
+        return None
+    cfg = ContainerConfig(policy=cell.containers,
+                          capacity_mb=cell.container_capacity_mb,
+                          keepalive_ms=cell.keepalive_ms)
+    if cell.containers == "histogram":
+        # Per-function keep-alive hints from the trace's own IAT
+        # distribution seed the histogram policy before each node has
+        # observed enough arrivals of its own — computed under the same
+        # config so hints agree with the pool's own estimates.
+        cfg = replace(cfg, prewarm=keepalive_hints(tasks, cfg))
+    return cfg
 
 
 def run_cell(cell: Cell) -> dict:
@@ -56,7 +76,8 @@ def run_cell(cell: Cell) -> dict:
                       cores_per_node=cell.cores_per_node,
                       node_policy=cell.node_policy,
                       dispatcher=cell.dispatcher, seed=cell.seed,
-                      node_factory=None)
+                      node_factory=None,
+                      containers=_cell_containers(cell, tasks))
     row = asdict(cell)
     row.update(res.summary())
     return row
@@ -97,8 +118,28 @@ def _csv(vals, cast=str):
     return [cast(v) for v in vals.split(",") if v]
 
 
+# Named grids. ``heavy_traffic`` is the paper-size nightly preset: the
+# full 2-minute Azure-like trace crossed with load scales and fleet
+# sizes, containers modelled with the Azure-style histogram keep-alive.
+PRESETS: dict[str, dict] = {
+    "heavy_traffic": {
+        "policies": ["cfs", "hybrid"],
+        "dispatchers": ["least_loaded", "affinity", "warm_affinity",
+                        "cost_aware"],
+        "nodes": [4, 8],
+        "load_scales": [1.0, 2.0, 4.0],
+        "minutes": 2,
+        "invocations_per_min": 6221.0,   # paper volume: ~12,442 in 2 min
+        "n_functions": 250,
+        "cores_per_node": 16,
+        "containers": "histogram",
+    },
+}
+
+
 SUMMARY_COLS = ("node_policy", "dispatcher", "n_nodes", "load_scale",
-                "cost_usd", "p99_slowdown", "util_range")
+                "cost_usd", "cold_start_rate", "warm_hold_usd",
+                "p99_slowdown", "util_range")
 
 
 def print_rows(rows: list[dict], cols=SUMMARY_COLS) -> None:
@@ -120,6 +161,13 @@ def main(argv=None) -> None:
     ap.add_argument("--invocations-per-min", type=float, default=1500.0)
     ap.add_argument("--n-functions", type=int, default=80)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--containers", default="off",
+                    choices=("off", "fixed", "histogram"),
+                    help="container lifecycle layer / keep-alive policy")
+    ap.add_argument("--container-capacity-mb", type=float, default=4096.0)
+    ap.add_argument("--keepalive-ms", type=float, default=30_000.0)
+    ap.add_argument("--preset", default=None, choices=sorted(PRESETS),
+                    help="named grid (overrides the grid-shape flags)")
     ap.add_argument("--serial", action="store_true",
                     help="disable the multiprocessing pool")
     ap.add_argument("--compare-serial", action="store_true",
@@ -127,12 +175,26 @@ def main(argv=None) -> None:
     ap.add_argument("--out", default=None, help="write rows as JSON here")
     args = ap.parse_args(argv)
 
-    grid = build_grid(
-        _csv(args.policies), _csv(args.dispatchers),
-        _csv(args.nodes, int), _csv(args.load_scales, float),
-        cores_per_node=args.cores_per_node, minutes=args.minutes,
-        invocations_per_min=args.invocations_per_min,
-        n_functions=args.n_functions, seed=args.seed)
+    if args.preset:
+        p = PRESETS[args.preset]
+        grid = build_grid(
+            p["policies"], p["dispatchers"], p["nodes"], p["load_scales"],
+            cores_per_node=p["cores_per_node"], minutes=p["minutes"],
+            invocations_per_min=p["invocations_per_min"],
+            n_functions=p["n_functions"], seed=args.seed,
+            containers=p["containers"],
+            container_capacity_mb=args.container_capacity_mb,
+            keepalive_ms=args.keepalive_ms)
+    else:
+        grid = build_grid(
+            _csv(args.policies), _csv(args.dispatchers),
+            _csv(args.nodes, int), _csv(args.load_scales, float),
+            cores_per_node=args.cores_per_node, minutes=args.minutes,
+            invocations_per_min=args.invocations_per_min,
+            n_functions=args.n_functions, seed=args.seed,
+            containers=args.containers,
+            container_capacity_mb=args.container_capacity_mb,
+            keepalive_ms=args.keepalive_ms)
 
     meta = {}
     if args.compare_serial:

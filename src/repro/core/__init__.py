@@ -3,6 +3,7 @@
 Discrete-event simulation of OS-level scheduling policies for serverless
 (L1), plus the policy objects reused by the serving gateway (L2).
 """
+from .containers import (ContainerConfig, ContainerPool, expected_cold_ms)
 from .events import Core, Scheduler, Task, GROUP_CFS, GROUP_FIFO
 from .policies import CFS, EDF, FIFO, FIFOPreempt, RoundRobin
 from .hybrid import HybridScheduler, Rightsizer, TimeLimitAdapter, percentile
@@ -11,6 +12,7 @@ from .simulate import POLICIES, make_scheduler, run_policy
 from . import cost
 
 __all__ = [
+    "ContainerConfig", "ContainerPool", "expected_cold_ms",
     "Core", "Scheduler", "Task", "GROUP_CFS", "GROUP_FIFO",
     "CFS", "EDF", "FIFO", "FIFOPreempt", "RoundRobin",
     "HybridScheduler", "Rightsizer", "TimeLimitAdapter", "percentile",

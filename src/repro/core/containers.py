@@ -1,0 +1,314 @@
+"""Container/sandbox lifecycle layer (DESIGN.md Sec. 9).
+
+The paper bills users for wall-clock execution, so every millisecond a
+sandbox spends initializing is money — yet a scheduler-only simulation
+materializes invocations out of thin air. This module gives every
+invocation a cold/warm path: a per-node :class:`ContainerPool` keyed by
+``func_id`` holds warm *idle* sandboxes (memory-bounded), evicts them on
+keep-alive expiry, and charges a cold-start delay (sampled per memory
+size) to invocations that miss.
+
+Keep-alive policies:
+
+``fixed``      -- constant TTL per container (OpenWhisk-style).
+``histogram``  -- Azure-style (Shahrad et al., "Serverless in the Wild"):
+                  per-function keep-alive derived from the observed
+                  inter-arrival-time distribution, so a function invoked
+                  every 2 s is kept warm ~2.5 s while a once-a-minute
+                  function does not pin memory for the full minute.
+                  ``prewarm`` hints (``traces.workload.keepalive_hints``)
+                  seed the per-function estimate before enough arrivals
+                  have been observed.
+
+Accounting is exact per container: a sandbox contributes
+``mem_mb x idle-duration`` to ``warm_mb_ms`` only while it is actually
+held (TTL evictions stop the meter at the expiry instant, even when the
+reaper notices later), which is what the provider-side memory-hold cost
+in :mod:`repro.core.cost` integrates.
+
+Running containers are not tracked here: a running invocation's memory
+is accounted by the billing model; the pool bounds only the *idle* warm
+set a provider keeps speculatively.
+"""
+from __future__ import annotations
+
+import math
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+# Cold-start model defaults: Firecracker-class base boot plus a
+# per-GB image/runtime initialization slope (bigger functions ship
+# bigger runtimes), with lognormal jitter.
+COLD_BASE_MS = 125.0
+COLD_PER_GB_MS = 250.0
+COLD_JITTER_SIGMA = 0.25
+
+
+def expected_cold_ms(mem_mb: float,
+                     base_ms: float = COLD_BASE_MS,
+                     per_gb_ms: float = COLD_PER_GB_MS) -> float:
+    """Mean cold-start delay for a memory size (no jitter) — what a
+    cost-aware dispatcher uses to price a cold route."""
+    return base_ms + per_gb_ms * (mem_mb / 1024.0)
+
+
+def _pct(sorted_vals: list[float], pct: float) -> float:
+    """Linear-interpolated percentile of a pre-sorted list (local copy:
+    importing hybrid.percentile here would cycle events->containers)."""
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    rank = (pct / 100.0) * (len(sorted_vals) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = rank - lo
+    return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+
+
+@dataclass(frozen=True)
+class ContainerConfig:
+    """Per-node sandbox-pool knobs (picklable: sweep cells carry one)."""
+
+    capacity_mb: float = 4096.0       # memory reserved for idle warm set
+    policy: str = "fixed"             # "fixed" | "histogram"
+    keepalive_ms: float = 30_000.0    # fixed TTL / histogram fallback
+    sweep_ms: float = 1_000.0         # reaper timer period (0 = lazy only)
+    cold_base_ms: float = COLD_BASE_MS
+    cold_per_gb_ms: float = COLD_PER_GB_MS
+    cold_jitter: float = COLD_JITTER_SIGMA
+    hist_pct: float = 99.0            # keep-alive = pct of observed IATs
+    hist_margin: float = 1.25         # x safety margin over that pct
+    hist_window: int = 64             # IAT observations kept per function
+    hist_min_ms: float = 2_000.0
+    hist_max_ms: float = 120_000.0
+    prewarm: Optional[dict] = None    # func_id -> keep-alive hint (ms)
+
+
+class _Warm:
+    """One idle warm sandbox."""
+
+    __slots__ = ("func_id", "mem_mb", "idle_since", "expires_at")
+
+    def __init__(self, func_id: int, mem_mb: float, idle_since: float,
+                 expires_at: float):
+        self.func_id = func_id
+        self.mem_mb = mem_mb
+        self.idle_since = idle_since
+        self.expires_at = expires_at
+
+
+class ContainerPool:
+    """Per-node warm-sandbox pool keyed by ``func_id``.
+
+    Invariants (property-tested):
+
+    * the idle warm set never exceeds ``capacity_mb``;
+    * ``acquire`` never returns a warm hit for a container whose
+      keep-alive expired at or before ``now``;
+    * given the same seed and operation sequence, hits/misses, evictions
+      and sampled cold-start delays are bit-identical.
+    """
+
+    def __init__(self, config: Optional[ContainerConfig] = None, *,
+                 seed: int = 0, **overrides):
+        if config is None:
+            config = ContainerConfig(**overrides)
+        elif overrides:
+            raise TypeError("pass either a config or keyword overrides")
+        self.cfg = config
+        self.seed = seed
+        self._rng = random.Random(seed ^ 0x5EED)
+        self._idle: dict[int, list[_Warm]] = {}  # append-ordered by idle_since
+        self.idle_mb = 0.0
+        # histogram policy state
+        self._last_seen: dict[int, float] = {}
+        self._iat: dict[int, deque] = {}
+        # counters
+        self.warm_hits = 0
+        self.cold_starts = 0
+        self.evictions_ttl = 0
+        self.evictions_capacity = 0
+        self.dropped = 0          # releases larger than the whole pool
+        self.warm_mb_ms = 0.0     # integral of idle warm memory over time
+
+    # -- internal -----------------------------------------------------------
+    def _retire(self, c: _Warm, end: float) -> None:
+        """Stop the memory meter for one container and drop it."""
+        self.idle_mb -= c.mem_mb
+        self.warm_mb_ms += max(0.0, end - c.idle_since) * c.mem_mb
+
+    def _keepalive_for(self, func_id: int, now: float) -> float:
+        cfg = self.cfg
+        if cfg.policy != "histogram":
+            return cfg.keepalive_ms
+        hint = (cfg.prewarm or {}).get(func_id)
+        iats = self._iat.get(func_id)
+        if iats is not None and len(iats) >= 3:
+            ka = _pct(sorted(iats), cfg.hist_pct) * cfg.hist_margin
+        elif hint is not None:
+            ka = hint
+        else:
+            ka = cfg.keepalive_ms
+        return min(max(ka, cfg.hist_min_ms), cfg.hist_max_ms)
+
+    def _observe(self, func_id: int, now: float) -> None:
+        last = self._last_seen.get(func_id)
+        if last is not None and now > last:
+            self._iat.setdefault(
+                func_id, deque(maxlen=self.cfg.hist_window)).append(now - last)
+        self._last_seen[func_id] = now
+
+    def _evict_oldest(self, now: float) -> None:
+        fid = min(self._idle,
+                  key=lambda f: (self._idle[f][0].idle_since, f))
+        c = self._idle[fid].pop(0)
+        if not self._idle[fid]:
+            del self._idle[fid]
+        self._retire(c, now)
+        self.evictions_capacity += 1
+
+    # -- lifecycle ----------------------------------------------------------
+    def acquire(self, func_id: int, mem_mb: float, now: float) -> bool:
+        """Claim a warm sandbox sized ``mem_mb`` for an invocation
+        starting at ``now``. Returns True on a warm hit (the container
+        leaves the idle set); False means the caller pays a cold start.
+        A sandbox only satisfies a same-size request — FaaS functions
+        have a fixed memory config, but nothing here assumes it, and a
+        1 GB invocation must not "reuse" a 128 MB sandbox for free."""
+        self._observe(func_id, now)
+        q = self._idle.get(func_id)
+        if q:
+            # Lazily reap the bucket first (the meter stops at expiry
+            # even when the periodic reaper hasn't swept yet).
+            live = []
+            for c in q:
+                if c.expires_at <= now:
+                    self._retire(c, c.expires_at)
+                    self.evictions_ttl += 1
+                else:
+                    live.append(c)
+            hit = None
+            for idx in range(len(live) - 1, -1, -1):
+                # most-recently-idled matching size: warmest caches
+                if live[idx].mem_mb == mem_mb:
+                    hit = live.pop(idx)
+                    break
+            if live:
+                self._idle[func_id] = live
+            else:
+                del self._idle[func_id]
+            if hit is not None:
+                self._retire(hit, now)
+                self.warm_hits += 1
+                return True
+        self.cold_starts += 1
+        return False
+
+    def release(self, func_id: int, mem_mb: float, now: float) -> None:
+        """Return a finished invocation's sandbox to the warm set,
+        evicting to stay within capacity. Reaping is lazy: only under
+        capacity pressure (the meter stops at expiry regardless of when
+        a sweep happens, so eager reaping buys no accounting accuracy
+        on this per-completion hot path). Expired containers reap first
+        — classified as TTL evictions — before any live one is
+        sacrificed for capacity."""
+        if mem_mb > self.cfg.capacity_mb:
+            self.dropped += 1
+            return
+        if self.idle_mb + mem_mb > self.cfg.capacity_mb:
+            self.evict_expired(now)
+            while self.idle_mb + mem_mb > self.cfg.capacity_mb:
+                self._evict_oldest(now)
+        ka = self._keepalive_for(func_id, now)
+        self._idle.setdefault(func_id, []).append(
+            _Warm(func_id, mem_mb, now, now + ka))
+        self.idle_mb += mem_mb
+
+    def evict_expired(self, now: float) -> int:
+        """Reap every container whose keep-alive lapsed; the memory
+        meter stops at the expiry instant, not at ``now``."""
+        n = 0
+        for fid in list(self._idle):
+            q = self._idle[fid]
+            keep = []
+            for c in q:
+                if c.expires_at <= now:
+                    self._retire(c, c.expires_at)
+                    self.evictions_ttl += 1
+                    n += 1
+                else:
+                    keep.append(c)
+            if keep:
+                self._idle[fid] = keep
+            else:
+                del self._idle[fid]
+        return n
+
+    def settle(self, now: float) -> None:
+        """Bring the memory-hold integral current (end-of-run, or before
+        reading stats). Idempotent: still-idle containers re-anchor."""
+        self.evict_expired(now)
+        for q in self._idle.values():
+            for c in q:
+                self.warm_mb_ms += max(0.0, now - c.idle_since) * c.mem_mb
+                c.idle_since = max(c.idle_since, now)
+
+    # -- cold-start model ---------------------------------------------------
+    def cold_start_ms(self, mem_mb: float) -> float:
+        """Sample the init delay a cold invocation pays. Deterministic
+        under a fixed seed and call sequence."""
+        m = expected_cold_ms(mem_mb, self.cfg.cold_base_ms,
+                             self.cfg.cold_per_gb_ms)
+        sigma = self.cfg.cold_jitter
+        if sigma <= 0.0:
+            return m
+        return self._rng.lognormvariate(math.log(m) - 0.5 * sigma * sigma,
+                                        sigma)
+
+    # -- introspection ------------------------------------------------------
+    def warm_counts(self) -> dict[int, int]:
+        """func_id -> number of idle warm sandboxes (heartbeat payload)."""
+        return {fid: len(q) for fid, q in self._idle.items()}
+
+    def live_view(self, now: float) -> tuple[dict[int, int], float]:
+        """(warm counts, warm MB) counting only unexpired sandboxes —
+        the heartbeat payload, computed WITHOUT mutating the pool (this
+        runs per node per routing decision)."""
+        counts: dict[int, int] = {}
+        mb = 0.0
+        for fid, q in self._idle.items():
+            k = 0
+            for c in q:
+                if c.expires_at > now:
+                    k += 1
+                    mb += c.mem_mb
+            if k:
+                counts[fid] = k
+        return counts, mb
+
+    def has_warm(self, func_id: int) -> bool:
+        return bool(self._idle.get(func_id))
+
+    def stats(self) -> dict:
+        total = self.warm_hits + self.cold_starts
+        return {
+            "warm_hits": self.warm_hits,
+            "cold_starts": self.cold_starts,
+            "cold_start_rate": (self.cold_starts / total) if total else 0.0,
+            "evictions_ttl": self.evictions_ttl,
+            "evictions_capacity": self.evictions_capacity,
+            "dropped": self.dropped,
+            "idle_mb": self.idle_mb,
+            "warm_mb_ms": self.warm_mb_ms,
+        }
+
+    def check_invariants(self) -> None:
+        """Raise if internal accounting drifted (test hook)."""
+        total = sum(c.mem_mb for q in self._idle.values() for c in q)
+        assert abs(total - self.idle_mb) < 1e-6, \
+            f"idle_mb gauge {self.idle_mb} != actual {total}"
+        assert self.idle_mb <= self.cfg.capacity_mb + 1e-6, \
+            f"warm set {self.idle_mb} MB over capacity {self.cfg.capacity_mb}"
+        for q in self._idle.values():
+            assert q, "empty per-function bucket left behind"

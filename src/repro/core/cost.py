@@ -6,6 +6,14 @@ function's measured execution time (T_completion - T_firstrun) by the
 per-ms price for its memory size; Table I weights by the Azure-trace
 memory-size distribution, Figs. 1/20 show the cost if ALL functions had a
 given fixed size.
+
+With the container lifecycle layer attached (``core.containers``), the
+execution span of a cold invocation includes its sandbox ``init_ms`` —
+the user is billed for boot time, exactly the economics that make
+warm-container locality worth routing for. Two helpers split that bill
+(`cold_start_cost_usd`) and price the PROVIDER-side cost of holding idle
+warm memory (`warm_pool_hold_cost_usd`): keep-alive is not free, it is a
+bet that a warm hit saves more billed-init than the idle DRAM costs.
 """
 from __future__ import annotations
 
@@ -14,6 +22,11 @@ from typing import Iterable, Optional, Sequence
 # AWS Lambda x86 pricing (https://aws.amazon.com/lambda/pricing/, 2024).
 PRICE_PER_GB_SECOND = 1.66667e-5  # USD
 PRICE_PER_REQUEST = 2.0e-7        # USD ($0.20 per 1M requests)
+
+# Provider-side cost of keeping one GB of warm-but-idle sandbox memory
+# resident for one second. Idle DRAM is far cheaper than billed compute;
+# ~12.5% of the user-facing rate is in line with provider COGS estimates.
+WARM_HOLD_PER_GB_SECOND = PRICE_PER_GB_SECOND / 8.0
 
 # Fig. 1 / Fig. 20 memory ladder (MB).
 MEMORY_LADDER_MB = (128, 256, 512, 1024, 2048, 4096, 10240)
@@ -38,6 +51,20 @@ def price_per_ms(mem_mb: float) -> float:
 
 def invocation_cost_usd(execution_ms: float, mem_mb: float) -> float:
     return execution_ms * price_per_ms(mem_mb) + PRICE_PER_REQUEST
+
+
+def cold_start_cost_usd(init_ms: float, mem_mb: float) -> float:
+    """The share of one invocation's bill attributable to sandbox boot
+    (no per-request fee: the request is billed once, in
+    ``invocation_cost_usd``)."""
+    return init_ms * price_per_ms(mem_mb)
+
+
+def warm_pool_hold_cost_usd(warm_mb_ms: float) -> float:
+    """Provider-side cost of the idle warm set: the integral of resident
+    idle sandbox memory over time (MB x ms), as accumulated by
+    ``ContainerPool.warm_mb_ms``."""
+    return (warm_mb_ms / 1024.0 / 1000.0) * WARM_HOLD_PER_GB_SECOND
 
 
 def workload_cost_usd(execution_ms: Iterable[float],

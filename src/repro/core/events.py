@@ -14,7 +14,9 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
+
+from .containers import ContainerConfig, ContainerPool
 
 ARRIVAL, CORE_EVT, TIMER = 0, 1, 2
 
@@ -30,11 +32,19 @@ class Task:
     """One serverless function invocation.
 
     ``service`` is the pure CPU demand in ms (the Fibonacci run time in the
-    paper). Metrics follow OSTEP (paper Sec. II-B):
+    paper). With a container pool attached, an invocation that misses the
+    warm set additionally occupies its core for ``init_ms`` of sandbox
+    initialization before (conceptually) doing useful work; the wall-clock
+    execution span — what the provider bills — includes it. Metrics follow
+    OSTEP (paper Sec. II-B):
 
-    execution  = completion - first_run
+    execution  = completion - first_run   (includes init_ms when cold)
     response   = first_run - arrival
     turnaround = completion - arrival
+
+    Metric properties return NaN for a task that never ran or never
+    finished (admission failures, mid-run snapshots) so roll-ups can
+    filter instead of crashing on ``None`` arithmetic.
     """
 
     tid: int
@@ -56,21 +66,34 @@ class Task:
     ctx_switches: int = 0
     failed: bool = False
     aux_of: Optional[int] = None  # microVM mode: auxiliary thread's parent
+    # -- container lifecycle ------------------------------------------
+    cold_start: bool = False
+    init_ms: float = 0.0          # sandbox init charged at first dispatch
 
     def __post_init__(self) -> None:
         self.remaining = self.service
 
     # -- metrics ------------------------------------------------------
     @property
+    def finished(self) -> bool:
+        return self.completion is not None
+
+    @property
     def execution(self) -> float:
+        if self.completion is None or self.first_run is None:
+            return float("nan")
         return self.completion - self.first_run
 
     @property
     def response(self) -> float:
+        if self.first_run is None:
+            return float("nan")
         return self.first_run - self.arrival
 
     @property
     def turnaround(self) -> float:
+        if self.completion is None:
+            return float("nan")
         return self.completion - self.arrival
 
 
@@ -134,12 +157,21 @@ class Scheduler:
         util_sample_ms: float = 500.0,
         trace_util: bool = False,
         interference_fn: Optional[Callable[[float], float]] = None,
+        containers: Optional[Union[ContainerPool, ContainerConfig]] = None,
         seed: int = 0,
     ):
         self.n_cores = n_cores
         self.ctx_switch_ms = ctx_switch_ms
         self.util_sample_ms = util_sample_ms
         self.trace_util = trace_util
+        self.seed = seed
+        # Container lifecycle layer (DESIGN.md Sec. 9): None keeps the
+        # historical cold-start-free behaviour; a ContainerConfig builds
+        # a per-node pool seeded from this scheduler's seed.
+        if containers is not None and not isinstance(containers,
+                                                     ContainerPool):
+            containers = ContainerPool(containers, seed=seed)
+        self.containers = containers
         # ghOSt mode: fraction of each enclave core stolen by NATIVE Linux
         # CFS tasks (freshly spawned, not yet pinned to the enclave) as a
         # function of time. The ghOSt scheduling class runs below CFS, so
@@ -189,6 +221,12 @@ class Scheduler:
             self._primed = True
             if self.trace_util:
                 self._push(self.util_sample_ms, TIMER, "util")
+            if self.containers is not None and self.containers.cfg.sweep_ms:
+                # Keep-alive reaper rides the same parked-timer machinery
+                # as util sampling: it parks when the node drains and
+                # revives with the next injected invocation.
+                self._push(self.now + self.containers.cfg.sweep_ms, TIMER,
+                           "keepalive")
             self.on_start()
         else:
             # A re-run (e.g. run() called again with more work): the
@@ -265,9 +303,11 @@ class Scheduler:
 
     def load_snapshot(self) -> dict:
         """Instantaneous occupancy — what a least-loaded or pull-based
-        front end would learn from a node heartbeat."""
+        front end would learn from a node heartbeat. With a container
+        pool attached the heartbeat also carries the warm-set contents,
+        which warm-aware and cost-aware dispatchers route on."""
         running, queued = self.n_running(), self.n_queued()
-        return {
+        snap = {
             "running": running,
             "queued": queued,
             "load": (running + queued) / self.n_cores,
@@ -275,6 +315,19 @@ class Scheduler:
             # make the node "idle" to a pull-based dispatcher.
             "idle": queued == 0 and self.has_idle_core(),
         }
+        if self.containers is not None:
+            # Heartbeats are taken per routing decision: a read-only
+            # live view, never a pool mutation, on the dispatch hot
+            # path (expired-but-unswept sandboxes are excluded).
+            warm, warm_mb = self.containers.live_view(self.now)
+            snap["warm"] = warm
+            snap["warm_mb"] = warm_mb
+            # Advertise this node's configured cold-start model so a
+            # cost-aware front end prices cold routes with the ACTUAL
+            # penalty, not module defaults.
+            snap["cold_model"] = (self.containers.cfg.cold_base_ms,
+                                  self.containers.cfg.cold_per_gb_ms)
+        return snap
 
     # -- chunk lifecycle -------------------------------------------------
     def _start_chunk(self, core: Core, task: Task, t: float,
@@ -282,6 +335,15 @@ class Scheduler:
         ctx = self.ctx_switch_ms if core.last_task is not task else 0.0
         if task.first_run is None:
             task.first_run = t
+            if self.containers is not None and task.aux_of is None:
+                # Cold/warm path decided the instant the invocation first
+                # claims a core: a miss occupies the core for init_ms of
+                # sandbox boot before useful work — wall-clock execution
+                # (what the provider bills) includes it.
+                if not self.containers.acquire(task.func_id, task.mem_mb, t):
+                    task.cold_start = True
+                    task.init_ms = self.containers.cold_start_ms(task.mem_mb)
+                    task.remaining += task.init_ms
         run = task.remaining if limit is None else min(task.remaining, limit)
         run = max(run, _EPS)
         rate = 1.0
@@ -298,6 +360,16 @@ class Scheduler:
             self.total_ctx += 1
         self._push(t + ctx + run / rate, CORE_EVT, core, core.gen)
 
+    def _complete(self, task: Task, t: float) -> None:
+        """Single completion path: record, return the sandbox to the
+        warm pool, and fire the policy hook."""
+        task.remaining = 0.0
+        task.completion = t
+        if self.containers is not None and task.aux_of is None:
+            self.containers.release(task.func_id, task.mem_mb, t)
+        self.completed.append(task)
+        self.on_complete(task, t)
+
     def _interrupt(self, core: Core, t: float) -> Task:
         """Stop the running chunk early; returns the (partially run) task."""
         task = core.task
@@ -310,11 +382,7 @@ class Scheduler:
         core.task = None
         core.last_task = task
         if task.remaining <= _EPS:  # raced with completion
-            task.remaining = 0.0
-            task.completion = t
-            self.completed.append(task)
-            self.on_complete(task, t)
-            return task
+            self._complete(task, t)
         return task
 
     def _finish_chunk(self, core: Core, t: float) -> None:
@@ -325,10 +393,7 @@ class Scheduler:
         core.task = None
         core.last_task = task
         if task.remaining <= _EPS:
-            task.remaining = 0.0
-            task.completion = t
-            self.completed.append(task)
-            self.on_complete(task, t)
+            self._complete(task, t)
         else:
             self.on_chunk_limit(core, task, t)
         self.dispatch(core, t)
@@ -386,6 +451,9 @@ class Scheduler:
             self.util_series.append(
                 (t, util, sum(1 for c in self.cores if c.group == GROUP_FIFO)))
             self._reschedule_timer("util", self.util_sample_ms)
+        elif payload == "keepalive":
+            self.containers.evict_expired(t)
+            self._reschedule_timer("keepalive", self.containers.cfg.sweep_ms)
 
     # -- policy hooks -------------------------------------------------------
     def on_start(self) -> None:  # pragma: no cover - trivial

@@ -1,12 +1,23 @@
-"""Result aggregation: the paper's three metrics + CDFs + p99 + cost."""
+"""Result aggregation: the paper's three metrics + CDFs + p99 + cost.
+
+Failed invocations (admission rejects, injected faults) never ran to
+completion, so their OSTEP metrics are undefined — ``Task`` properties
+return NaN for them and every vector here is computed over *finished*
+tasks only, with the failure count reported separately. With the
+container layer attached, the summary additionally reports cold-start
+counts, the billed-init share of the bill, and the provider-side cost of
+holding the warm pool.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import cached_property
 from typing import Optional
 
 import numpy as np
 
-from .cost import workload_cost_usd, cost_ladder
+from .cost import (cold_start_cost_usd, cost_ladder, warm_pool_hold_cost_usd,
+                   workload_cost_usd)
 from .events import GROUP_CFS, GROUP_FIFO, Scheduler, Task
 
 
@@ -20,19 +31,32 @@ class SimResult:
     limit_series: Optional[list] = None
     migrations: Optional[list] = None
     total_ctx: int = 0
+    container_stats: Optional[dict] = None
+
+    # -- task views ---------------------------------------------------------
+    @cached_property
+    def _finished(self) -> list[Task]:
+        return [t for t in self.tasks if t.completion is not None]
+
+    def finished_tasks(self) -> list[Task]:
+        """Tasks with defined metrics; roll-ups skip the rest (failed
+        invocations that never completed end up in ``failed``, but be
+        defensive against callers who merge the lists). Cached:
+        ``summary()`` walks this ~8 times per sweep cell."""
+        return self._finished
 
     # -- metric vectors (ms) ------------------------------------------------
     def execution(self) -> np.ndarray:
-        return np.array([t.execution for t in self.tasks])
+        return np.array([t.execution for t in self.finished_tasks()])
 
     def response(self) -> np.ndarray:
-        return np.array([t.response for t in self.tasks])
+        return np.array([t.response for t in self.finished_tasks()])
 
     def turnaround(self) -> np.ndarray:
-        return np.array([t.turnaround for t in self.tasks])
+        return np.array([t.turnaround for t in self.finished_tasks()])
 
     def service(self) -> np.ndarray:
-        return np.array([t.service for t in self.tasks])
+        return np.array([t.service for t in self.finished_tasks()])
 
     def p(self, metric: str, pct: float) -> float:
         return float(np.percentile(getattr(self, metric)(), pct))
@@ -42,18 +66,38 @@ class SimResult:
                 for m in ("response", "execution", "turnaround")}
 
     def makespan(self) -> float:
-        return max(t.completion for t in self.tasks)
+        return max(t.completion for t in self.finished_tasks())
 
     def total_preemptions(self) -> int:
         return sum(t.preemptions for t in self.tasks)
 
+    # -- container lifecycle ------------------------------------------------
+    def cold_starts(self) -> int:
+        return sum(1 for t in self.finished_tasks() if t.cold_start)
+
+    def cold_start_rate(self) -> float:
+        done = self.finished_tasks()
+        return (self.cold_starts() / len(done)) if done else 0.0
+
+    def init_cost_usd(self) -> float:
+        """The cold-start share of the user-facing bill."""
+        return sum(cold_start_cost_usd(t.init_ms, t.mem_mb)
+                   for t in self.finished_tasks() if t.cold_start)
+
+    def warm_hold_usd(self) -> float:
+        """Provider-side cost of the idle warm set over the run."""
+        if not self.container_stats:
+            return 0.0
+        return warm_pool_hold_cost_usd(self.container_stats["warm_mb_ms"])
+
     # -- cost ---------------------------------------------------------------
     def cost_usd(self, fixed_mem_mb: Optional[float] = None) -> float:
+        done = self.finished_tasks()
         if fixed_mem_mb is not None:
-            return workload_cost_usd(self.execution(),
+            return workload_cost_usd((t.execution for t in done),
                                      fixed_mem_mb=fixed_mem_mb)
-        return workload_cost_usd(self.execution(),
-                                 mem_mb=[t.mem_mb for t in self.tasks])
+        return workload_cost_usd((t.execution for t in done),
+                                 mem_mb=[t.mem_mb for t in done])
 
     def cost_ladder(self) -> dict[int, float]:
         return cost_ladder(self.execution())
@@ -66,9 +110,9 @@ class SimResult:
 
     def summary(self) -> dict:
         e, r, ta = self.execution(), self.response(), self.turnaround()
-        return {
+        out = {
             "policy": self.policy,
-            "n": len(self.tasks),
+            "n": len(self.finished_tasks()),
             "failed": len(self.failed),
             "mean_execution_s": float(e.mean()) / 1e3,
             "p50_execution_s": float(np.percentile(e, 50)) / 1e3,
@@ -80,6 +124,12 @@ class SimResult:
             "ctx_switches": self.total_ctx,
             "cost_usd": self.cost_usd(),
         }
+        if self.container_stats is not None:
+            out["cold_starts"] = self.cold_starts()
+            out["cold_start_rate"] = self.cold_start_rate()
+            out["init_cost_usd"] = self.init_cost_usd()
+            out["warm_hold_usd"] = self.warm_hold_usd()
+        return out
 
 
 def collect(sched: Scheduler, policy: str) -> SimResult:
@@ -91,6 +141,11 @@ def collect(sched: Scheduler, policy: str) -> SimResult:
     rs = getattr(sched, "rightsizer", None)
     if rs is not None:
         migrations = rs.migrations
+    container_stats = None
+    pool = getattr(sched, "containers", None)
+    if pool is not None:
+        pool.settle(sched.now)  # bring the memory-hold meter current
+        container_stats = pool.stats()
     return SimResult(
         policy=policy,
         tasks=sched.completed,
@@ -100,4 +155,5 @@ def collect(sched: Scheduler, policy: str) -> SimResult:
         limit_series=limit_series,
         migrations=migrations,
         total_ctx=sched.total_ctx,
+        container_stats=container_stats,
     )

@@ -11,6 +11,7 @@ from __future__ import annotations
 import copy
 from typing import Optional
 
+from .containers import ContainerConfig, ContainerPool
 from .events import Scheduler, Task
 from .hybrid import HybridScheduler, Rightsizer, TimeLimitAdapter
 from .metrics import SimResult, collect
@@ -38,6 +39,7 @@ def run_policy(policy: str, workload: list[Task], *,
                rightsize: bool = False,
                microvm: bool = False,
                ghost_mode: bool = False,
+               containers: Optional[ContainerConfig] = None,
                fresh_tasks: bool = True,
                **kw) -> SimResult:
     """Simulate ``policy`` over ``workload`` and aggregate results.
@@ -45,9 +47,15 @@ def run_policy(policy: str, workload: list[Task], *,
     ``adapt_pct``/``rightsize`` only apply to the hybrid policy.
     ``ghost_mode`` enables the native-CFS spawn-storm interference model
     (DESIGN.md Sec. 8): the measured ghOSt system, not an ideal enclave.
-    ``fresh_tasks`` deep-copies the workload so callers can reuse it.
+    ``containers`` attaches the sandbox lifecycle layer (DESIGN.md
+    Sec. 9): invocations take a cold/warm path through a per-node
+    ``ContainerPool`` and cold starts occupy a core for their billed
+    ``init_ms``. ``fresh_tasks`` deep-copies the workload so callers can
+    reuse it.
     """
     tasks = copy.deepcopy(workload) if fresh_tasks else workload
+    if containers is not None:
+        kw.setdefault("containers", containers)
     if policy == "hybrid":
         if adapt_pct is not None:
             kw.setdefault("adapter", TimeLimitAdapter(pct=adapt_pct))

@@ -22,6 +22,7 @@ from typing import Optional
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.containers import ContainerConfig
 from ..core.events import GROUP_CFS, Task
 from ..core.hybrid import HybridScheduler, Rightsizer, TimeLimitAdapter
 from ..core.metrics import SimResult, collect
@@ -136,11 +137,13 @@ def run_gateway(cfg: ModelConfig, policy: str = "hybrid", *,
                 rightsize: bool = True,
                 seq_len: int = 4096,
                 straggler_factor: float = 0.0,
+                containers: Optional[ContainerConfig] = None,
                 trace: Optional[TraceSpec] = None) -> GatewayResult:
     reqs = copy.deepcopy(requests) if requests is not None \
         else requests_from_trace(cfg, trace)
     factory = _slot_node_factory(cfg, seq_len, 0.5, adapt_pct, rightsize,
-                                 straggler_factor=straggler_factor)
+                                 straggler_factor=straggler_factor,
+                                 containers=containers)
     sched = factory(policy, n_cores=n_slots,
                     **({"n_fifo": n_fifo} if policy == "hybrid" else {}))
     sched.run(reqs)
@@ -153,10 +156,17 @@ def run_gateway(cfg: ModelConfig, policy: str = "hybrid", *,
 
 def _slot_node_factory(cfg: ModelConfig, seq_len: int, n_fifo_frac: float,
                        adapt_pct: Optional[float], rightsize: bool,
-                       straggler_factor: float = 0.0):
+                       straggler_factor: float = 0.0,
+                       containers: Optional[ContainerConfig] = None):
     """Build slot schedulers for one node — the single switch shared by
-    ``run_gateway`` (one big node) and ``run_gateway_fleet``."""
+    ``run_gateway`` (one big node) and ``run_gateway_fleet``. With
+    ``containers`` set, each node gets a sandbox pool: the model-serving
+    analogue of a warm container is resident per-function state (loaded
+    adapters / compiled graphs), and a cold slot pays the boot delay on
+    its billed wall-clock span like any other FaaS invocation."""
     def factory(policy: str, n_cores: int, **kw):
+        if containers is not None:
+            kw.setdefault("containers", containers)
         if policy == "hybrid":
             # An explicit n_fifo (single-node run_gateway) passes
             # through untouched so invalid splits still fail loudly.
@@ -187,6 +197,7 @@ def run_gateway_fleet(cfg: ModelConfig, policy: str = "hybrid", *,
                       n_fifo_frac: float = 0.5,
                       seq_len: int = 4096,
                       straggler_factor: float = 0.0,
+                      containers: Optional[ContainerConfig] = None,
                       seed: int = 0,
                       trace: Optional[TraceSpec] = None):
     """Serve the request stream through a fleet of model-serving nodes,
@@ -195,9 +206,12 @@ def run_gateway_fleet(cfg: ModelConfig, policy: str = "hybrid", *,
     from ..cluster.sim import ClusterSim
     reqs = copy.deepcopy(requests) if requests is not None \
         else requests_from_trace(cfg, trace)
+    # Containers go through ClusterSim (not the factory) so each node's
+    # pool gets its own deterministic seed stream (seed + node index).
     sim = ClusterSim(
         n_nodes=n_nodes, cores_per_node=slots_per_node,
         node_policies=policy, dispatcher=dispatcher, seed=seed,
+        containers=containers,
         node_factory=_slot_node_factory(cfg, seq_len, n_fifo_frac,
                                         adapt_pct, rightsize,
                                         straggler_factor=straggler_factor))

@@ -128,6 +128,36 @@ def shard_tasks(tasks: list[Task], n_shards: int,
     return shards
 
 
+def keepalive_hints(tasks: list[Task],
+                    config: "ContainerConfig | None" = None,
+                    ) -> dict[int, float]:
+    """Per-function keep-alive signals for the container layer.
+
+    For each function with >= 2 invocations, suggest holding its sandbox
+    warm for ``hist_margin`` x the ``hist_pct``-th percentile of its
+    observed inter-arrival times (clamped to the config's hist bounds) —
+    the trace-driven analogue of the Azure histogram policy (Shahrad et
+    al.). The knobs come from the SAME ``ContainerConfig`` the hints
+    will feed, so pre-observation hints and the pool's own
+    post-observation estimates agree. Functions seen once get no hint;
+    the pool falls back to its default TTL for them. Feed the result to
+    ``ContainerConfig(prewarm=...)`` (e.g. via ``dataclasses.replace``).
+    """
+    from ..core.containers import ContainerConfig
+    cfg = config if config is not None else ContainerConfig()
+    arrivals: dict[int, list[float]] = {}
+    for t in sorted(tasks, key=lambda x: x.arrival):
+        arrivals.setdefault(t.func_id, []).append(t.arrival)
+    hints: dict[int, float] = {}
+    for fid, at in arrivals.items():
+        if len(at) < 2:
+            continue
+        iats = np.diff(np.asarray(at))
+        ka = float(np.percentile(iats, cfg.hist_pct)) * cfg.hist_margin
+        hints[fid] = min(max(ka, cfg.hist_min_ms), cfg.hist_max_ms)
+    return hints
+
+
 def workload_file(w: Workload) -> list[dict]:
     """The paper's workload-file rows: IAT + Fibonacci argument N."""
     rows = []

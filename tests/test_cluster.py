@@ -220,6 +220,33 @@ def test_periodic_timers_survive_quiescent_gaps():
     assert any(t > 3_000.0 for t, _, _ in s.util_series)
 
 
+def test_parked_timers_revive_when_node_quiescent_mid_run():
+    """A node that goes momentarily quiescent MID-run (batch completes,
+    then more work is injected) must park and revive its periodic
+    timers on every gap, not just before the first arrival."""
+    from repro.core.hybrid import HybridScheduler, Rightsizer
+    s = HybridScheduler(n_cores=4, n_fifo=2, rightsizer=Rightsizer(),
+                        trace_util=True)
+    s.prime([])
+    # batch 1: run to completion, then the node idles past several
+    # timer periods — the chains must park instead of free-running.
+    s.inject(Task(tid=0, arrival=0.0, service=800.0), 0.0)
+    s.step(10_000.0)
+    assert len(s.completed) == 1
+    assert s._parked_timers            # chains parked during the gap
+    n_util_gap = len(s.util_series)
+    s.step(30_000.0)                   # quiescence: nothing fires
+    assert len(s.util_series) == n_util_gap
+    # batch 2: injection revives every parked chain
+    s.inject(Task(tid=1, arrival=40_000.0, service=2_000.0), 40_000.0)
+    s.inject(Task(tid=2, arrival=40_100.0, service=2_000.0), 40_100.0)
+    s.drain()
+    assert len(s.completed) == 3
+    assert any(t > 40_000.0 for t, _, _ in s.util_series)
+    # and they park again once the second batch drains
+    assert s._parked_timers
+
+
 def test_snapshot_not_idle_while_core_locked():
     from repro.core.policies import FIFO
     s = FIFO(n_cores=1)

@@ -1,0 +1,402 @@
+"""Container lifecycle layer: pool invariants, scheduler integration,
+warm-aware dispatch, and cold-start economics."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import run_cluster
+from repro.core import ContainerConfig, ContainerPool, Task, run_policy
+from repro.core.containers import expected_cold_ms
+from repro.core.cost import price_per_ms, warm_pool_hold_cost_usd
+from repro.core.metrics import SimResult
+from repro.core.policies import FIFO
+
+from conftest import mk_tasks
+
+
+def _pool(**kw):
+    kw.setdefault("cold_jitter", 0.0)
+    return ContainerPool(ContainerConfig(**kw), seed=1)
+
+
+# -- pool unit behaviour -------------------------------------------------------
+
+def test_warm_hit_within_keepalive_and_miss_after_expiry():
+    p = _pool(capacity_mb=1024, keepalive_ms=5_000)
+    assert not p.acquire(7, 256, t0 := 0.0)       # nothing warm yet
+    p.release(7, 256, 100.0)
+    assert p.acquire(7, 256, 2_000.0)             # within TTL: warm
+    p.release(7, 256, 3_000.0)
+    assert not p.acquire(7, 256, 9_000.0)         # 3000+5000 < 9000: expired
+    assert p.stats()["evictions_ttl"] == 1
+    assert t0 == 0.0
+
+
+def test_reaper_evicts_and_stops_memory_meter_at_expiry():
+    p = _pool(capacity_mb=1024, keepalive_ms=1_000)
+    p.acquire(1, 512, 0.0)
+    p.release(1, 512, 0.0)
+    p.evict_expired(10_000.0)  # reaper runs late; meter stops at t=1000
+    assert p.idle_mb == 0.0
+    assert p.stats()["warm_mb_ms"] == pytest.approx(512 * 1_000.0)
+    assert warm_pool_hold_cost_usd(p.stats()["warm_mb_ms"]) > 0
+
+
+def test_capacity_never_exceeded_evicts_oldest_idle():
+    p = _pool(capacity_mb=1000, keepalive_ms=1e9)
+    for fid, t in ((1, 0.0), (2, 10.0), (3, 20.0)):
+        p.release(fid, 400, t)
+        p.check_invariants()
+    assert p.idle_mb <= 1000
+    # func 1 (oldest idle) was evicted to make room for func 3
+    assert not p.has_warm(1)
+    assert p.has_warm(2) and p.has_warm(3)
+    assert p.stats()["evictions_capacity"] == 1
+    # a sandbox larger than the whole pool is dropped, not stored
+    p.release(9, 4096, 30.0)
+    assert not p.has_warm(9)
+    p.check_invariants()
+
+
+def test_warm_hit_requires_matching_memory_size():
+    """A sandbox only satisfies a same-size request: a 1 GB invocation
+    must not 'reuse' a 128 MB sandbox for free, and the right-sized
+    container is picked even when other sizes idle for the same func."""
+    p = _pool(capacity_mb=4096, keepalive_ms=1e9)
+    p.release(1, 128, 0.0)
+    assert not p.acquire(1, 1024, 10.0)   # size mismatch: cold
+    p.check_invariants()
+    assert p.has_warm(1)                  # the 128 MB sandbox survives
+    p.release(1, 1024, 20.0)
+    assert p.acquire(1, 1024, 30.0)       # exact match: warm
+    assert p.acquire(1, 128, 40.0)
+    p.check_invariants()
+
+
+def test_pool_deterministic_under_fixed_seed():
+    def run(seed):
+        p = ContainerPool(ContainerConfig(), seed=seed)
+        out = []
+        for i in range(20):
+            fid = i % 3
+            if not p.acquire(fid, 256, i * 50.0):
+                out.append(round(p.cold_start_ms(256), 9))
+            p.release(fid, 256, i * 50.0 + 25.0)
+        return out, p.stats()
+    a, b, c = run(3), run(3), run(4)
+    assert a == b
+    assert a[0] != c[0]  # different seed, different jitter draws
+
+
+def test_cold_start_model_scales_with_memory():
+    assert expected_cold_ms(10_240) > expected_cold_ms(128)
+    p = _pool()  # jitter disabled: sample == mean
+    assert p.cold_start_ms(512) == pytest.approx(expected_cold_ms(512))
+    pj = ContainerPool(ContainerConfig(cold_jitter=0.5), seed=0)
+    draws = [pj.cold_start_ms(512) for _ in range(200)]
+    assert all(d > 0 for d in draws)
+    assert np.mean(draws) == pytest.approx(expected_cold_ms(512), rel=0.25)
+
+
+def test_histogram_keepalive_tracks_interarrival_times():
+    cfg = ContainerConfig(policy="histogram", keepalive_ms=1e9,
+                          hist_min_ms=100.0, hist_max_ms=4_000.0)
+    p = ContainerPool(cfg, seed=0)
+    # a function arriving every 1s: keep-alive settles near ~1.25s
+    for i in range(6):
+        p.acquire(5, 256, i * 1_000.0)
+        p.release(5, 256, i * 1_000.0 + 10.0)
+    ka = p._keepalive_for(5, 6_000.0)
+    assert 1_000.0 <= ka <= 2_000.0
+    # prewarm hints apply before enough arrivals are observed
+    hinted = ContainerPool(ContainerConfig(
+        policy="histogram", prewarm={9: 3_000.0}), seed=0)
+    assert hinted._keepalive_for(9, 0.0) == 3_000.0
+
+
+# -- scheduler integration -----------------------------------------------------
+
+def test_cold_start_occupies_core_and_is_billed():
+    """Back-to-back invocations of one function: first is cold (billed
+    init inflates execution), the second reuses the warm sandbox."""
+    cfg = ContainerConfig(keepalive_ms=60_000, cold_jitter=0.0)
+    tasks = mk_tasks([(0, 500), (2_000, 500)])
+    res = run_policy("fifo", tasks, n_cores=2, ctx_switch_ms=0.0,
+                     containers=cfg)
+    first, second = sorted(res.tasks, key=lambda t: t.tid)
+    assert first.cold_start and not second.cold_start
+    assert first.init_ms == pytest.approx(expected_cold_ms(256))
+    assert first.execution == pytest.approx(500 + first.init_ms)
+    assert second.execution == pytest.approx(500)
+    s = res.summary()
+    assert s["cold_starts"] == 1 and s["cold_start_rate"] == 0.5
+    assert s["init_cost_usd"] == pytest.approx(
+        first.init_ms * price_per_ms(256))
+    assert s["warm_hold_usd"] > 0
+
+
+def test_concurrent_invocations_need_separate_sandboxes():
+    # Two overlapping invocations of the same function cannot share one
+    # container: both start cold.
+    cfg = ContainerConfig(cold_jitter=0.0)
+    tasks = mk_tasks([(0, 1_000), (0, 1_000)])
+    for t in tasks:
+        t.func_id = 1
+    res = run_policy("fifo", tasks, n_cores=2, containers=cfg,
+                     fresh_tasks=False)
+    assert sum(t.cold_start for t in res.tasks) == 2
+
+
+def test_keepalive_reaper_rides_parked_timer_machinery():
+    """A quiescent gap parks the reaper; the next inject revives it, and
+    the sandbox idled past its TTL during the gap is NOT reused."""
+    cfg = ContainerConfig(keepalive_ms=2_000, sweep_ms=500,
+                          cold_jitter=0.0)
+    s = FIFO(n_cores=2, containers=cfg)
+    s.prime([])
+    s.inject(Task(tid=0, arrival=0.0, service=300.0, func_id=4), 0.0)
+    s.step(1_000.0)
+    assert len(s.completed) == 1
+    assert s.containers.has_warm(4)
+    # long quiescent gap >> TTL, then a new invocation of the same func
+    s.inject(Task(tid=1, arrival=60_000.0, service=300.0, func_id=4),
+             60_000.0)
+    s.drain()
+    t1 = next(t for t in s.completed if t.tid == 1)
+    assert t1.cold_start
+    st = s.containers.stats()
+    assert st["evictions_ttl"] >= 1
+    # exact accounting: the gap did not inflate the hold integral beyond
+    # the 2s TTL per idle period
+    assert st["warm_mb_ms"] <= 256 * 2_000.0 * 2 + 1e-6
+
+
+def test_load_snapshot_reports_warm_set():
+    cfg = ContainerConfig(keepalive_ms=60_000)
+    s = FIFO(n_cores=2, containers=cfg)
+    s.prime([])
+    s.inject(Task(tid=0, arrival=0.0, service=100.0, func_id=3,
+                  mem_mb=512), 0.0)
+    s.step(500.0)
+    snap = s.load_snapshot()
+    assert snap["warm"] == {3: 1}
+    assert snap["warm_mb"] == 512
+
+
+def test_hybrid_and_cfs_support_containers(small_workload):
+    cfg = ContainerConfig(keepalive_ms=30_000)
+    w = small_workload[:300]
+    for policy in ("hybrid", "cfs"):
+        res = run_policy(policy, w, n_cores=8, containers=cfg)
+        assert len(res.tasks) == len(w)
+        s = res.summary()
+        assert 0.0 < s["cold_start_rate"] <= 1.0
+        assert s["init_cost_usd"] > 0
+
+
+# -- failed-task metric guards (regression) -----------------------------------
+
+def test_unfinished_task_metrics_are_nan_not_typeerror():
+    t = Task(tid=0, arrival=5.0, service=100.0)
+    assert math.isnan(t.execution)     # used to raise TypeError
+    assert math.isnan(t.response)
+    assert math.isnan(t.turnaround)
+    assert not t.finished
+
+
+def test_metric_rollups_skip_failed_invocations():
+    done = mk_tasks([(0, 100), (0, 200)])
+    for t in done:
+        t.first_run, t.completion = t.arrival + 1.0, t.arrival + 301.0
+    ghost = Task(tid=99, arrival=0.0, service=50.0, failed=True)
+    # defensive: even a failed task merged into ``tasks`` cannot poison
+    # the vectors with NaN
+    res = SimResult(policy="fifo", tasks=done + [ghost], failed=[ghost])
+    assert len(res.execution()) == 2
+    assert not np.isnan(res.execution()).any()
+    s = res.summary()
+    assert s["n"] == 2 and s["failed"] == 1
+    assert not math.isnan(s["cost_usd"])
+    assert res.makespan() == pytest.approx(301.0)
+
+
+def test_microvm_admission_rejects_do_not_break_summaries():
+    tasks = mk_tasks([(i * 10.0, 50.0) for i in range(30)])
+    from repro.core.simulate import admit_microvm
+    admitted, failed = admit_microvm(tasks, cap=20)
+    assert len(failed) == 10
+    res = run_policy("fifo", admitted, n_cores=4)
+    res.failed.extend(failed)
+    s = res.summary()
+    assert s["failed"] == 10 and s["n"] == 20
+
+
+# -- cluster: warm-aware dispatch ---------------------------------------------
+
+@pytest.fixture(scope="module")
+def container_workload():
+    from repro.traces import TraceSpec, generate_workload
+    spec = TraceSpec(minutes=1, invocations_per_min=600, n_functions=40,
+                     seed=5)
+    return generate_workload(spec).tasks
+
+
+def _fleet(workload, policy, dispatcher, **kw):
+    return run_cluster(workload, n_nodes=2, cores_per_node=8,
+                       node_policy=policy, dispatcher=dispatcher,
+                       containers=ContainerConfig(keepalive_ms=30_000),
+                       **kw)
+
+
+def test_warm_affinity_cuts_cold_starts_vs_state_oblivious(
+        container_workload):
+    rates = {d: _fleet(container_workload, "hybrid", d).cold_start_rate()
+             for d in ("round_robin", "warm_affinity")}
+    assert rates["warm_affinity"] < rates["round_robin"] * 0.8
+
+
+def test_warm_affinity_hybrid_cheaper_than_oblivious_cfs(
+        container_workload):
+    """The acceptance headline at test scale: warm-aware affinity on
+    hybrid nodes is strictly cheaper than state-oblivious dispatch on
+    CFS nodes once containers are modelled."""
+    warm = _fleet(container_workload, "hybrid", "warm_affinity")
+    for base_disp in ("round_robin", "least_loaded"):
+        base = _fleet(container_workload, "cfs", base_disp)
+        assert warm.cost_usd() < base.cost_usd()
+
+
+def test_cost_aware_chases_the_warm_node():
+    # Sequential same-function invocations with idle gaps: after the
+    # first lands anywhere, every later one should chase the warm
+    # sandbox instead of paying a cold start elsewhere.
+    tasks = mk_tasks([(i * 3_000.0, 200.0) for i in range(6)])
+    for t in tasks:
+        t.func_id = 1
+    from repro.cluster import ClusterSim
+    sim = ClusterSim(n_nodes=3, cores_per_node=2, node_policies="fifo",
+                     dispatcher="cost_aware",
+                     containers=ContainerConfig(keepalive_ms=60_000,
+                                                cold_jitter=0.0))
+    sim.run(tasks, fresh_tasks=False)
+    assert len({nid for _, nid in sim.assignments[1:]}) == 1
+
+
+def test_cost_aware_prices_with_the_advertised_cold_model():
+    """Routing must use the fleet's CONFIGURED cold-start penalty from
+    node heartbeats, not module defaults: with a huge configured
+    penalty the warm-but-loaded node wins; with a zero penalty the
+    idle cold node wins."""
+    from repro.cluster import CostAwareDispatch
+
+    class FakeNode:
+        def __init__(self, snap):
+            self._snap = snap
+
+        def snapshot(self):
+            return self._snap
+
+    task = Task(tid=0, arrival=0.0, service=10.0, mem_mb=1024, func_id=1)
+    d = CostAwareDispatch()
+
+    def nodes(base_ms):
+        cold_idle = {"load": 0.0, "warm": {}, "cold_model": (base_ms, 0.0)}
+        warm_busy = {"load": 3.0, "warm": {1: 1},
+                     "cold_model": (base_ms, 0.0)}
+        return [FakeNode(cold_idle), FakeNode(warm_busy)]
+
+    # configured penalty (50 s) >> load term (3 x 1000 ms): chase warmth.
+    # Module defaults (~375 ms for 1 GB) would pick the idle node here.
+    assert d.select(task, nodes(50_000.0), 0.0) == 1
+    # zero configured penalty: pure load balancing
+    assert d.select(task, nodes(0.0), 0.0) == 0
+
+
+def test_snapshot_advertises_cold_model():
+    cfg = ContainerConfig(cold_base_ms=2_000.0, cold_per_gb_ms=7.0)
+    s = FIFO(n_cores=1, containers=cfg)
+    s.prime([])
+    assert s.load_snapshot()["cold_model"] == (2_000.0, 7.0)
+
+
+def test_least_loaded_warm_breaks_ties_toward_warm_node():
+    from repro.cluster import ClusterSim
+    tasks = mk_tasks([(0.0, 100.0), (5_000.0, 100.0)])
+    for t in tasks:
+        t.func_id = 2
+    sim = ClusterSim(n_nodes=3, cores_per_node=2, node_policies="fifo",
+                     dispatcher="least_loaded_warm",
+                     containers=ContainerConfig(keepalive_ms=60_000))
+    res = sim.run(tasks, fresh_tasks=False)
+    assert sim.assignments[0][1] == sim.assignments[1][1]
+    assert res.cold_starts() == 1
+
+
+def test_fleet_summary_reports_container_economics(container_workload):
+    res = _fleet(container_workload, "hybrid", "warm_affinity")
+    s = res.summary()
+    assert s["cold_starts"] == res.cold_starts() > 0
+    assert s["warm_hold_usd"] > 0
+    assert s["init_cost_usd"] > 0
+    agg = res.container_stats()
+    assert agg["cold_starts"] + agg["warm_hits"] >= len(container_workload)
+    # without the layer, the schema stays stable at zeros
+    off = run_cluster(container_workload[:100], n_nodes=2,
+                      cores_per_node=8, node_policy="cfs",
+                      dispatcher="least_loaded")
+    s_off = off.summary()
+    assert s_off["cold_start_rate"] == 0.0
+    assert s_off["warm_hold_usd"] == 0.0
+    assert off.container_stats() is None
+
+
+def test_sweep_cell_runs_with_containers():
+    from repro.cluster import Cell, run_cell
+    row = run_cell(Cell(node_policy="hybrid", dispatcher="warm_affinity",
+                        n_nodes=2, cores_per_node=4, minutes=1,
+                        invocations_per_min=120.0, n_functions=12,
+                        containers="histogram"))
+    assert row["containers"] == "histogram"
+    assert 0.0 < row["cold_start_rate"] <= 1.0
+    assert row["warm_hold_usd"] > 0
+
+
+def test_serving_gateway_threads_container_layer():
+    from repro.configs import get_config
+    from repro.serving.gateway import run_gateway
+    from repro.traces import TraceSpec
+    cfg = get_config("zamba2-1.2b")
+    res = run_gateway(cfg, policy="hybrid", n_slots=8, n_fifo=4,
+                      containers=ContainerConfig(keepalive_ms=30_000),
+                      trace=TraceSpec(minutes=1, invocations_per_min=120,
+                                      n_functions=12))
+    assert res.sim.container_stats is not None
+    assert res.sim.cold_start_rate() > 0
+
+
+def test_serving_fleet_pools_get_distinct_seed_streams():
+    """run_gateway_fleet must route containers through ClusterSim so
+    each node's pool jitters with its own seed, not seed=0 fleet-wide."""
+    from repro.configs import get_config
+    from repro.serving.gateway import run_gateway_fleet
+    from repro.traces import TraceSpec
+    cfg = get_config("zamba2-1.2b")
+    seen = []
+    orig = ContainerPool.__init__
+
+    def spy(self, config=None, *, seed=0, **kw):
+        seen.append(seed)
+        orig(self, config, seed=seed, **kw)
+
+    ContainerPool.__init__ = spy
+    try:
+        run_gateway_fleet(cfg, policy="cfs", n_nodes=3, slots_per_node=4,
+                          containers=ContainerConfig(keepalive_ms=30_000),
+                          seed=7,
+                          trace=TraceSpec(minutes=1,
+                                          invocations_per_min=60,
+                                          n_functions=6))
+    finally:
+        ContainerPool.__init__ = orig
+    assert sorted(seen) == [7, 8, 9]

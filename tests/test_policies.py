@@ -63,6 +63,43 @@ def test_edf_prioritizes_deadlines():
     assert monster.preemptions == 1
 
 
+def test_edf_simultaneous_arrivals_preempt_latest_deadline_victim():
+    """A burst arriving at the same instant: cores fill in deadline
+    order, and when the burst exceeds the core count, each extra
+    arrival with a tighter deadline preempts the currently-running task
+    with the LATEST deadline — never a tighter one."""
+    # 2 cores; four tasks all at t=0. Deadlines (= arrival + 2*service):
+    # a:2000, b:1600, c:400, d:100.
+    tasks = mk_tasks([(0, 1000), (0, 800), (0, 200), (0, 50)])
+    sched = EDF(n_cores=2, ctx_switch_ms=0.0).run(tasks)
+    by_tid = {t.tid: t for t in sched.completed}
+    assert len(by_tid) == 4
+    # the two tightest deadlines run first (both effectively at t=0)
+    assert by_tid[3].response == pytest.approx(0.0)
+    assert by_tid[2].response == pytest.approx(0.0)
+    # the loosest-deadline tasks were the preemption victims
+    assert by_tid[0].preemptions >= 1
+    assert by_tid[1].preemptions >= 1
+    assert by_tid[2].preemptions == 0 and by_tid[3].preemptions == 0
+    # work conservation: every task still completes exactly its service
+    for t in sched.completed:
+        assert t.cpu_time == pytest.approx(t.service)
+        assert t.remaining <= 1e-9
+
+
+def test_edf_simultaneous_arrival_does_not_double_preempt():
+    """Two same-instant arrivals on a saturated single core: only the
+    running task with the latest deadline is displaced, and a victim
+    that raced to completion is not re-queued."""
+    tasks = mk_tasks([(0, 500), (0, 100), (0, 100)])  # dls 1000/200/200
+    sched = EDF(n_cores=1, ctx_switch_ms=0.0).run(tasks)
+    assert len(sched.completed) == 3
+    monster = next(t for t in sched.completed if t.tid == 0)
+    # preempted at most once per tight arrival, and finishes last
+    assert monster.completion == pytest.approx(700.0)
+    assert sorted(t.tid for t in sched.completed) == [0, 1, 2]
+
+
 def test_hybrid_migrates_over_limit():
     tasks = mk_tasks([(0, 500), (0, 50)])
     sched = HybridScheduler(n_cores=2, n_fifo=1, time_limit_ms=100,

@@ -7,6 +7,7 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import run_policy
+from repro.core.containers import ContainerConfig, ContainerPool
 from repro.core.cost import cost_ladder, invocation_cost_usd
 from repro.core.events import Task
 from repro.core.hybrid import percentile
@@ -85,3 +86,71 @@ def test_cost_ladder_ordering(execs):
     sizes = sorted(ladder)
     for a, b in zip(sizes, sizes[1:]):
         assert ladder[a] < ladder[b]
+
+
+# -- container pool invariants ------------------------------------------------
+#
+# An op sequence is (dt, func_id, mem, kind): kind 0 = acquire+release
+# (an instantaneous invocation), 1 = acquire only (container leaves the
+# pool and never returns: invocation still running at horizon), 2 =
+# reaper sweep. Time advances monotonically by dt.
+
+pool_ops = st.lists(
+    st.tuples(st.floats(0.0, 10_000.0), st.integers(0, 6),
+              st.sampled_from([128, 256, 512, 1024]),
+              st.integers(0, 2)),
+    min_size=1, max_size=80,
+)
+pool_cfgs = st.builds(
+    ContainerConfig,
+    capacity_mb=st.sampled_from([256.0, 1024.0, 4096.0]),
+    policy=st.sampled_from(["fixed", "histogram"]),
+    keepalive_ms=st.sampled_from([500.0, 5_000.0, 60_000.0]),
+)
+
+
+def _drive(pool: ContainerPool, ops):
+    """Apply an op sequence; returns a trace of observable outcomes."""
+    now, trace = 0.0, []
+    for dt, fid, mem, kind in ops:
+        now += dt
+        if kind == 2:
+            trace.append(("sweep", pool.evict_expired(now)))
+            continue
+        hit = pool.acquire(fid, mem, now)
+        trace.append(("hit", hit))
+        if kind == 0:
+            pool.release(fid, mem, now)
+        pool.check_invariants()
+    pool.settle(now)
+    trace.append(("stats", tuple(sorted(pool.stats().items()))))
+    return trace
+
+
+@settings(max_examples=40, deadline=None)
+@given(pool_cfgs, pool_ops, st.integers(0, 3))
+def test_container_pool_invariants(cfg, ops, seed):
+    """Capacity is never exceeded, accounting never drifts, hit/miss
+    counters reconcile, and the run is deterministic under a seed."""
+    pool = ContainerPool(cfg, seed=seed)
+    trace = _drive(pool, ops)
+    n_acquires = sum(1 for _, _, _, kind in ops if kind in (0, 1))
+    assert pool.warm_hits + pool.cold_starts == n_acquires
+    assert pool.idle_mb <= cfg.capacity_mb + 1e-6
+    assert pool.warm_mb_ms >= 0.0
+    # determinism: same seed + same ops -> identical observable trace
+    assert _drive(ContainerPool(cfg, seed=seed), ops) == trace
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0.0, 20_000.0), st.floats(0.0, 20_000.0))
+def test_no_warm_hit_after_keepalive_expiry(idle_gap, ttl):
+    pool = ContainerPool(ContainerConfig(keepalive_ms=ttl), seed=0)
+    pool.acquire(1, 256, 0.0)
+    pool.release(1, 256, 100.0)
+    hit = pool.acquire(1, 256, 100.0 + idle_gap)
+    # Oracle on the SUMMED floats, exactly as the pool compares them —
+    # `idle_gap < ttl` disagrees on half-ulp pairs where both sums
+    # round to the same value.
+    assert hit == (100.0 + idle_gap < 100.0 + ttl)
+    pool.check_invariants()

@@ -1,0 +1,89 @@
+"""CI benchmark-regression gate: compare logic and CLI exit codes."""
+import importlib.util
+import json
+from pathlib import Path
+
+# The gate is stdlib-only and must stay importable outside the
+# installed package (CI invokes it before any editable install of
+# benchmarks/ exists), so load it by path.
+_SPEC = importlib.util.spec_from_file_location(
+    "regression_gate",
+    Path(__file__).resolve().parent.parent / "benchmarks"
+    / "regression_gate.py")
+gate = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(gate)
+
+
+def _row(cost=1.0, n=100, makespan=10.0, **kw):
+    base = {"node_policy": "hybrid", "dispatcher": "warm_affinity",
+            "n_nodes": 4, "load_scale": 1.0, "containers": "fixed",
+            "cost_usd": cost, "n": n, "makespan_s": makespan}
+    base.update(kw)
+    return base
+
+
+def test_gate_passes_identical_runs():
+    rows = [_row(), _row(dispatcher="least_loaded")]
+    failures, notes = gate.compare(rows, rows, 0.15)
+    assert failures == []
+    assert any("2 shared cells" in n for n in notes)
+
+
+def test_gate_flags_cost_and_throughput_regressions():
+    prev = [_row()]
+    worse_cost = [_row(cost=1.5)]
+    failures, _ = gate.compare(prev, worse_cost, 0.15)
+    assert len(failures) == 1 and "cost_usd" in failures[0]
+    worse_tp = [_row(makespan=20.0)]  # throughput halves
+    failures, _ = gate.compare(prev, worse_tp, 0.15)
+    assert len(failures) == 1 and "throughput" in failures[0]
+    # within tolerance: no failure
+    failures, _ = gate.compare(prev, [_row(cost=1.1)], 0.15)
+    assert failures == []
+
+
+def test_gate_skips_cells_present_on_one_side_only():
+    prev = [_row(), _row(dispatcher="affinity", cost=1.0)]
+    new = [_row(cost=0.9), _row(dispatcher="cost_aware", cost=50.0)]
+    failures, notes = gate.compare(prev, new, 0.15)
+    assert failures == []
+    assert sum("skipped" in n for n in notes) == 2
+
+
+def test_gate_fails_when_schema_drift_disables_an_axis():
+    """Shared cells whose metric keys vanished (renamed cost_usd /
+    makespan_s) must FAIL the gate per axis, not silently pass it."""
+    both_gone = [{k: v for k, v in _row().items()
+                  if k not in ("cost_usd", "makespan_s")}]
+    failures, _ = gate.compare(both_gone, both_gone, 0.15)
+    assert len(failures) == 2
+    assert all("schema" in f for f in failures)
+    # losing ONE axis while the other still compares must also fail
+    no_cost = [{k: v for k, v in _row().items() if k != "cost_usd"}]
+    failures, _ = gate.compare(no_cost, no_cost, 0.15)
+    assert len(failures) == 1 and "cost" in failures[0]
+    no_tp = [{k: v for k, v in _row().items() if k != "makespan_s"}]
+    failures, _ = gate.compare(no_tp, no_tp, 0.15)
+    assert len(failures) == 1 and "throughput" in failures[0]
+
+
+def test_gate_accepts_both_artifact_shapes(tmp_path):
+    rows = [_row()]
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps(rows))
+    wrapped = tmp_path / "wrapped.json"
+    wrapped.write_text(json.dumps({"matrix": rows}))
+    assert gate.load_rows(str(bare)) == rows
+    assert gate.load_rows(str(wrapped)) == rows
+
+
+def test_gate_cli_exit_codes(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps([_row()]))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps([_row(cost=2.0)]))
+    assert gate.main([str(good), str(good)]) == 0
+    assert gate.main([str(good), str(bad)]) == 1
+    assert gate.main([str(good), str(bad), "--threshold", "1.5"]) == 0
+    # missing baseline passes vacuously (first run after enabling)
+    assert gate.main([str(tmp_path / "absent.json"), str(good)]) == 0
