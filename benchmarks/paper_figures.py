@@ -110,7 +110,8 @@ def fig15_17_time_limit():
     rows = []
     for pct in (25, 50, 75, 90, 95):
         res = run_policy("hybrid", w,
-                         adapter=TimeLimitAdapter(pct=float(pct)))
+                         adapter=TimeLimitAdapter(pct=float(pct),
+                                                  record_series=True))
         row = _metrics_row(res, f"ts=p{pct}")
         if res.limit_series:
             ls = res.limit_series

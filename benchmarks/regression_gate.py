@@ -1,18 +1,24 @@
-"""Benchmark-regression gate: diff two cluster_matrix JSON artifacts.
+"""Benchmark-regression gate: diff two benchmark JSON artifacts.
 
-CI runs the smoke-size ``cluster_matrix`` bench on every PR and uploads
-the JSON. This gate compares the fresh artifact against the previous
-successful run's and FAILS (exit 1) when any shared grid cell regresses
-by more than ``--threshold`` on either axis:
+CI runs the smoke-size benches on every PR and uploads the JSON. This
+gate compares a fresh artifact against the previous successful run's
+and FAILS (exit 1) on a regression beyond ``--threshold``. Two artifact
+kinds are understood, auto-detected from the row schema:
 
-* cost      — ``cost_usd`` goes UP by more than the threshold;
-* throughput — completed invocations per makespan second goes DOWN by
-  more than the threshold.
+* ``cluster_matrix`` rows — fail when a shared grid cell's ``cost_usd``
+  goes UP or its completed-invocations-per-makespan-second goes DOWN by
+  more than the threshold. Cells are matched on (node_policy,
+  dispatcher, n_nodes, load_scale, containers).
+* ``BENCH_engine`` rows (``events_per_sec`` present) — fail when a
+  shared engine cell's events/sec drops by more than the threshold.
+  Cells are matched on (policy, containers, n_cores, n_tasks), so the
+  engine throughput from the hot-path overhaul is a tracked trajectory,
+  not a one-off measurement, and smoke-tier runs never cross-compare
+  with full-trace baselines.
 
-Cells are matched on (node_policy, dispatcher, n_nodes, load_scale,
-containers); cells present on only one side are reported but do not
-fail the gate (grids evolve). A missing baseline file passes with a
-note, so the first run after enabling the gate is green.
+Cells present on only one side are reported but do not fail the gate
+(grids evolve). A missing baseline file passes with a note, so the
+first run after enabling the gate is green.
 
 Usage::
 
@@ -45,6 +51,56 @@ def cell_key(row: dict) -> tuple:
 def throughput(row: dict) -> float:
     makespan = row.get("makespan_s") or 0.0
     return (row.get("n", 0) / makespan) if makespan > 0 else 0.0
+
+
+def is_engine_rows(rows: list[dict]) -> bool:
+    return bool(rows) and "events_per_sec" in rows[0]
+
+
+def engine_key(row: dict) -> tuple:
+    # n_tasks keys the trace size, so a smoke-tier artifact never gets
+    # (non-)compared against a full-trace baseline as if same-scale.
+    return (row.get("policy"), row.get("containers"), row.get("n_cores"),
+            row.get("n_tasks"))
+
+
+def compare_engine(prev_rows: list[dict], new_rows: list[dict],
+                   threshold: float) -> tuple[list[str], list[str]]:
+    """Engine-throughput gate: events/sec must not drop > threshold."""
+    prev = {engine_key(r): r for r in prev_rows}
+    new = {engine_key(r): r for r in new_rows}
+    failures, notes = [], []
+    for k in sorted(set(prev) ^ set(new), key=str):
+        side = "baseline" if k in prev else "new run"
+        notes.append(f"engine cell {k} only in {side}; skipped")
+    shared = sorted(set(prev) & set(new), key=str)
+    if not shared:
+        notes.append("no shared engine cells; nothing to gate")
+        return failures, notes
+    n_cmp = 0
+    for k in shared:
+        p, n = prev[k].get("events_per_sec"), new[k].get("events_per_sec")
+        if not p or not n:
+            continue
+        n_cmp += 1
+        ratio = n / p
+        if ratio < 1.0 - threshold:
+            failures.append(
+                f"engine cell {k}: events/sec regressed {ratio - 1.0:+.1%} "
+                f"({p:.0f} -> {n:.0f})")
+        if prev[k].get("events") and new[k].get("events") and \
+                prev[k]["events"] != new[k]["events"]:
+            notes.append(
+                f"engine cell {k}: logical event count changed "
+                f"({prev[k]['events']} -> {new[k]['events']}) — the "
+                "simulation itself changed, not just its speed")
+    notes.append(f"compared {len(shared)} engine cells "
+                 f"({n_cmp} on events/sec)")
+    if n_cmp == 0:
+        failures.append(
+            f"{len(shared)} shared engine cells but 0 comparisons — "
+            "artifact schema drifted? (rows need events_per_sec)")
+    return failures, notes
 
 
 def compare(prev_rows: list[dict], new_rows: list[dict],
@@ -107,7 +163,11 @@ def main(argv=None) -> int:
         return 0
     prev_rows = load_rows(args.baseline)
     new_rows = load_rows(args.current)
-    failures, notes = compare(prev_rows, new_rows, args.threshold)
+    if is_engine_rows(new_rows) or is_engine_rows(prev_rows):
+        failures, notes = compare_engine(prev_rows, new_rows,
+                                         args.threshold)
+    else:
+        failures, notes = compare(prev_rows, new_rows, args.threshold)
     for line in notes:
         print(f"note: {line}")
     for line in failures:

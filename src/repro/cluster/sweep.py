@@ -118,6 +118,32 @@ def _csv(vals, cast=str):
     return [cast(v) for v in vals.split(",") if v]
 
 
+def profile_slowest_cell(grid: list[Cell], top: int = 20) -> dict:
+    """Time every cell serially, then re-run the slowest one under
+    cProfile and print its ``top`` hottest functions (cumulative). One
+    command answers "where did my sweep's wall-clock go" — the next
+    engine hot spot is whatever this prints first."""
+    import cProfile
+    import pstats
+
+    timings = []
+    for cell in grid:
+        t0 = time.time()
+        run_cell(cell)
+        timings.append((time.time() - t0, cell))
+    worst_s, worst = max(timings, key=lambda x: x[0])
+    print(f"# slowest cell ({worst_s:.2f}s serial): {worst}",
+          file=sys.stderr)
+    prof = cProfile.Profile()
+    prof.enable()
+    row = run_cell(worst)
+    prof.disable()
+    stats = pstats.Stats(prof, stream=sys.stderr)
+    stats.sort_stats("cumulative").print_stats(top)
+    return {"slowest_cell": asdict(worst), "serial_s": worst_s,
+            "row": row}
+
+
 # Named grids. ``heavy_traffic`` is the paper-size nightly preset: the
 # full 2-minute Azure-like trace crossed with load scales and fleet
 # sizes, containers modelled with the Azure-style histogram keep-alive.
@@ -172,6 +198,9 @@ def main(argv=None) -> None:
                     help="disable the multiprocessing pool")
     ap.add_argument("--compare-serial", action="store_true",
                     help="time serial vs parallel and report the speedup")
+    ap.add_argument("--profile", action="store_true",
+                    help="run serially, then print a cProfile top-20 of "
+                         "the slowest cell (engine hot-spot hunting)")
     ap.add_argument("--out", default=None, help="write rows as JSON here")
     args = ap.parse_args(argv)
 
@@ -195,6 +224,10 @@ def main(argv=None) -> None:
             containers=args.containers,
             container_capacity_mb=args.container_capacity_mb,
             keepalive_ms=args.keepalive_ms)
+
+    if args.profile:
+        profile_slowest_cell(grid)
+        return
 
     meta = {}
     if args.compare_serial:

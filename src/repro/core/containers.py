@@ -32,6 +32,7 @@ set a provider keeps speculatively.
 """
 from __future__ import annotations
 
+import heapq
 import math
 import random
 from collections import deque
@@ -86,16 +87,25 @@ class ContainerConfig:
 
 
 class _Warm:
-    """One idle warm sandbox."""
+    """One idle warm sandbox.
 
-    __slots__ = ("func_id", "mem_mb", "idle_since", "expires_at")
+    ``live`` is the lazy-deletion flag for the capacity-eviction heap:
+    acquiring or reaping a container just clears it, and the stale heap
+    entry is skipped when it surfaces. ``seq`` is the release order,
+    the heap's final tie-breaker (matching the historical append-order
+    pop within a bucket)."""
+
+    __slots__ = ("func_id", "mem_mb", "idle_since", "expires_at", "live",
+                 "seq")
 
     def __init__(self, func_id: int, mem_mb: float, idle_since: float,
-                 expires_at: float):
+                 expires_at: float, seq: int = 0):
         self.func_id = func_id
         self.mem_mb = mem_mb
         self.idle_since = idle_since
         self.expires_at = expires_at
+        self.live = True
+        self.seq = seq
 
 
 class ContainerPool:
@@ -121,6 +131,15 @@ class ContainerPool:
         self._rng = random.Random(seed ^ 0x5EED)
         self._idle: dict[int, list[_Warm]] = {}  # append-ordered by idle_since
         self.idle_mb = 0.0
+        # Incremental eviction machinery (DESIGN.md Sec. 13): the
+        # capacity victim — min (idle_since, func_id) over every idle
+        # container — comes from a lazy-deletion heap instead of a
+        # min() scan over all buckets per eviction, and the TTL reaper
+        # skips its full walk entirely while nothing can have expired.
+        self._cap_heap: list[tuple[float, int, int, _Warm]] = []
+        self._cap_seq = 0
+        self._n_idle = 0
+        self._min_expiry = float("inf")
         # histogram policy state
         self._last_seen: dict[int, float] = {}
         self._iat: dict[int, deque] = {}
@@ -134,9 +153,12 @@ class ContainerPool:
 
     # -- internal -----------------------------------------------------------
     def _retire(self, c: _Warm, end: float) -> None:
-        """Stop the memory meter for one container and drop it."""
+        """Stop the memory meter for one container and drop it. The
+        capacity-heap entry is tombstoned (live=False), not searched."""
         self.idle_mb -= c.mem_mb
         self.warm_mb_ms += max(0.0, end - c.idle_since) * c.mem_mb
+        c.live = False
+        self._n_idle -= 1
 
     def _keepalive_for(self, func_id: int, now: float) -> float:
         cfg = self.cfg
@@ -160,13 +182,28 @@ class ContainerPool:
         self._last_seen[func_id] = now
 
     def _evict_oldest(self, now: float) -> None:
-        fid = min(self._idle,
-                  key=lambda f: (self._idle[f][0].idle_since, f))
-        c = self._idle[fid].pop(0)
-        if not self._idle[fid]:
+        # Lazy-deletion pop: the heap orders by (idle_since, func_id,
+        # release seq), which selects exactly the container the
+        # historical min-over-buckets scan (then bucket-head pop) chose.
+        heap = self._cap_heap
+        while True:
+            _, fid, _, c = heapq.heappop(heap)
+            if c.live:
+                break
+        q = self._idle[fid]
+        if q[0] is c:
+            q.pop(0)
+        else:  # unreachable while release times are monotone; stay safe
+            q.remove(c)
+        if not q:
             del self._idle[fid]
         self._retire(c, now)
         self.evictions_capacity += 1
+
+    def _rebuild_cap_heap(self) -> None:
+        self._cap_heap = [(c.idle_since, fid, c.seq, c)
+                          for fid, q in self._idle.items() for c in q]
+        heapq.heapify(self._cap_heap)
 
     # -- lifecycle ----------------------------------------------------------
     def acquire(self, func_id: int, mem_mb: float, now: float) -> bool:
@@ -221,14 +258,33 @@ class ContainerPool:
             while self.idle_mb + mem_mb > self.cfg.capacity_mb:
                 self._evict_oldest(now)
         ka = self._keepalive_for(func_id, now)
-        self._idle.setdefault(func_id, []).append(
-            _Warm(func_id, mem_mb, now, now + ka))
+        expires = now + ka
+        c = _Warm(func_id, mem_mb, now, expires, seq=self._cap_seq)
+        self._cap_seq += 1
+        self._idle.setdefault(func_id, []).append(c)
         self.idle_mb += mem_mb
+        self._n_idle += 1
+        heapq.heappush(self._cap_heap, (now, func_id, c.seq, c))
+        if expires < self._min_expiry:
+            self._min_expiry = expires
+        # Compact the lazy heap when tombstones dominate, so a long run
+        # with little capacity pressure cannot accumulate one stale
+        # entry per completed invocation.
+        if len(self._cap_heap) > 64 and \
+                len(self._cap_heap) > 4 * self._n_idle:
+            self._rebuild_cap_heap()
 
     def evict_expired(self, now: float) -> int:
         """Reap every container whose keep-alive lapsed; the memory
-        meter stops at the expiry instant, not at ``now``."""
+        meter stops at the expiry instant, not at ``now``. O(1) while
+        nothing can have expired: ``_min_expiry`` lower-bounds every
+        live keep-alive (conservatively — acquire may remove the
+        minimum without raising it), so the common per-second sweep
+        over a quiet pool skips the walk entirely."""
+        if now < self._min_expiry:
+            return 0
         n = 0
+        nxt = float("inf")
         for fid in list(self._idle):
             q = self._idle[fid]
             keep = []
@@ -239,10 +295,13 @@ class ContainerPool:
                     n += 1
                 else:
                     keep.append(c)
+                    if c.expires_at < nxt:
+                        nxt = c.expires_at
             if keep:
                 self._idle[fid] = keep
             else:
                 del self._idle[fid]
+        self._min_expiry = nxt
         return n
 
     def settle(self, now: float) -> None:
@@ -253,6 +312,10 @@ class ContainerPool:
             for c in q:
                 self.warm_mb_ms += max(0.0, now - c.idle_since) * c.mem_mb
                 c.idle_since = max(c.idle_since, now)
+        # Re-anchoring changed the capacity-eviction keys; rebuild the
+        # heap so later evictions keep selecting the same victim the
+        # rescan implementation would.
+        self._rebuild_cap_heap()
 
     # -- cold-start model ---------------------------------------------------
     def cold_start_ms(self, mem_mb: float) -> float:
@@ -312,3 +375,9 @@ class ContainerPool:
             f"warm set {self.idle_mb} MB over capacity {self.cfg.capacity_mb}"
         for q in self._idle.values():
             assert q, "empty per-function bucket left behind"
+        live = {id(c) for q in self._idle.values() for c in q}
+        heap_live = {id(e[3]) for e in self._cap_heap if e[3].live}
+        assert live == heap_live, \
+            "capacity heap out of sync with the idle set"
+        assert self._n_idle == len(live), \
+            f"_n_idle gauge {self._n_idle} != actual {len(live)}"

@@ -6,28 +6,54 @@ enclave cores of a 2x18C/2T Xeon). Scheduling policies subclass
 :class:`Scheduler` and receive the same "message pump" a ghOSt agent would:
 task arrival, chunk expiry (slice / time-limit), completion, timers.
 
-Time is in milliseconds (float). The simulation is exact (no ticks): every
-core schedules its next decision point; stale decision points are
-invalidated with per-core generation counters.
+Time is in milliseconds (float). The simulation is exact (no ticks) and —
+since the hot-path overhaul (DESIGN.md Sec. 13) — the event loop is
+organized for throughput without changing a single simulated outcome
+(tests/test_engine_equivalence.py locks the results bit-for-bit):
+
+* Heap entries are pooled, mutable records
+  ``[time, class, tie, kind, payload]``; a preempted core's in-flight
+  record is *tombstoned* in place (``kind = DEAD``) and recycled when
+  it surfaces, replacing the old per-core generation counters.
+* Same-instant ordering is CANONICAL: arrivals, then timers, then core
+  expiries in core-id order (the ``class``/``tie`` key fields). The
+  historical engine broke timestamp ties by heap-push order — an
+  emergent property of processing history that no event-eliding
+  optimization can reproduce (eliding a push permutes every later tie
+  on the machine). Value-determined tie order makes simultaneous-expiry
+  semantics explicit, platform-stable, and elision-invariant; it is
+  part of the engine contract (DESIGN.md Sec. 13).
+* When a core's next chunk expiry lands strictly before every other
+  pending event (and inside the ``step()`` horizon), the expiry is
+  processed inline — no heap push/pop, no record allocation.
+* On top of the inline loop, policies that slice with a constant quantum
+  (CFS, the hybrid CFS group, FIFO_100ms) implement
+  :meth:`Scheduler.fast_forward`: an analytic round loop that retires
+  whole slice-expiry cycles with plain arithmetic, replicating the exact
+  float operations the event path would perform (see hybrid.py).
 """
 from __future__ import annotations
 
 import heapq
+from bisect import insort
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Union
 
+import numpy as np
+
 from .containers import ContainerConfig, ContainerPool
 
-ARRIVAL, CORE_EVT, TIMER = 0, 1, 2
+ARRIVAL, CORE_EVT, TIMER, DEAD = 0, 1, 2, 3
 
 # Group tags for two-level policies.
 GROUP_FIFO = 0
 GROUP_CFS = 1
 
 _EPS = 1e-9
+_INF = float("inf")
 
 
-@dataclass
+@dataclass(slots=True)
 class Task:
     """One serverless function invocation.
 
@@ -98,18 +124,25 @@ class Task:
 
 
 class Core:
-    """One CPU core; holds at most one running chunk."""
+    """One CPU core; holds at most one running chunk.
+
+    ``pending`` is the core's in-flight expiry record in the scheduler
+    heap, or None while the chunk is being advanced inline. Interrupting
+    a chunk tombstones the record (lazy deletion) instead of bumping a
+    generation counter.
+    """
 
     __slots__ = (
-        "cid", "task", "gen", "chunk_start", "chunk_work_start", "chunk_len",
-        "chunk_rate", "group", "locked_until", "busy_ms", "last_task", "rq",
-        "rq_seq", "min_vruntime", "preempt_count", "busy_snapshot", "_rs_snap",
+        "cid", "task", "pending", "chunk_start", "chunk_work_start",
+        "chunk_len", "chunk_rate", "group", "locked_until", "busy_ms",
+        "last_task", "rq", "rq_seq", "min_vruntime", "preempt_count",
+        "busy_snapshot", "_rs_snap",
     )
 
     def __init__(self, cid: int, group: int = GROUP_FIFO):
         self.cid = cid
         self.task: Optional[Task] = None
-        self.gen = 0
+        self.pending: Optional[list] = None
         self.chunk_start = 0.0
         self.chunk_work_start = 0.0
         self.chunk_len = 0.0
@@ -135,12 +168,16 @@ class Core:
             return self.busy_ms + max(0.0, now - self.chunk_start)
         return self.busy_ms
 
+    # The runqueue is kept SORTED (insort / pop(0)) rather than heapified:
+    # pop-min semantics are identical, and the analytic fast-forward can
+    # then read and splice the queue in place without re-sorting it on
+    # every batch entry.
     def rq_push(self, task: Task) -> None:
-        heapq.heappush(self.rq, (task.vruntime, self.rq_seq, task))
+        insort(self.rq, (task.vruntime, self.rq_seq, task))
         self.rq_seq += 1
 
     def rq_pop(self) -> Task:
-        vr, _, task = heapq.heappop(self.rq)
+        vr, _, task = self.rq.pop(0)
         self.min_vruntime = max(self.min_vruntime, vr)
         return task
 
@@ -149,6 +186,18 @@ class Scheduler:
     """Base event loop. Policies override the hooks at the bottom."""
 
     name = "base"
+    # Policies with a constant-quantum slice cycle set this and implement
+    # fast_forward() (see hybrid.py / policies.py); the event loop then
+    # retires whole rounds analytically when no interacting event
+    # intervenes.
+    _has_ff = False
+    # Restricts the analytic fast-forward to lone-task cores; see
+    # HybridScheduler._ff_solo_only for the subclass contract.
+    _ff_solo_only = False
+    # Core groups whose chunk expiries can touch OTHER cores' state
+    # (the hybrid FIFO group migrates over-limit tasks into CFS
+    # runqueues): their expiry instants are fast-forward barriers.
+    _barrier_groups: Optional[frozenset] = None
 
     def __init__(
         self,
@@ -185,15 +234,79 @@ class Scheduler:
         self.completed: list[Task] = []
         self.failed: list[Task] = []
         self.total_ctx = 0
+        # Logical events processed (arrivals + chunk expiries/completions
+        # + timers) — the engine-throughput denominator. Invariant under
+        # engine-internal optimizations: two engines simulating the same
+        # run count the same events, however they process them.
+        self.n_events = 0
         self.util_series: list = []  # (t, per-group {group: util})
         self._timers: list[tuple[float, Callable]] = []
         self._primed = False
         self._parked_timers: dict = {}  # payload -> interval, revived on inject
+        # Free pool of heap records; records are recycled when popped
+        # (live or tombstoned), so the steady-state loop allocates no
+        # event objects at all.
+        self._pool: list[list] = []
+        # step() horizon: inline chunk processing must not advance a
+        # node past the time a cluster dispatcher stepped it to, or
+        # heartbeat snapshots would observe the future.
+        self._hz = _INF
+        # Fast-forward barrier instants: the times of every pending
+        # event that can interact with a core from outside — arrivals
+        # (placement reads every core, pushes into runqueues), timers
+        # (sampling, rightsizing, reaping), and barrier-group chunk
+        # expiries. Pure slice expiries on OTHER cores touch only their
+        # own core, so an analytic fast-forward may cross them; it must
+        # stop strictly before the next barrier. Stale times are popped
+        # lazily; tombstoned events leave a conservative barrier behind.
+        # Maintained only when a fast-forward can actually consume it
+        # (interference-rate chunks always decline), so FIFO/EDF and
+        # ghost-mode runs pay nothing on the arrival path.
+        self._barriers: list[float] = []
+        self._use_ff = self._has_ff and interference_fn is None
 
     # -- event machinery ------------------------------------------------
-    def _push(self, t: float, kind: int, payload, gen: int = 0) -> None:
-        heapq.heappush(self.heap, (t, self.seq, kind, payload, gen))
+    def _push(self, t: float, kind: int, payload) -> list:
+        # Canonical same-instant key: arrivals (class 0) before timers
+        # (class 1) before core expiries (class 2, cid order). Arrivals
+        # and timers keep a monotone seq among themselves — their pushes
+        # happen at identical logical points in any equivalent engine,
+        # so seq order is reproducible; core expiries must NOT use push
+        # order (elision permutes it) and use the core id instead.
+        if kind == CORE_EVT:
+            klass, tie = 2, payload.cid
+        else:
+            klass, tie = (0 if kind == ARRIVAL else 1), self.seq
+        pool = self._pool
+        if pool:
+            rec = pool.pop()
+            rec[0] = t
+            rec[1] = klass
+            rec[2] = tie
+            rec[3] = kind
+            rec[4] = payload
+        else:
+            rec = [t, klass, tie, kind, payload]
         self.seq += 1
+        heapq.heappush(self.heap, rec)
+        if kind != CORE_EVT and self._use_ff:
+            heapq.heappush(self._barriers, t)
+        return rec
+
+    def _push_core(self, core: Core, end: float) -> None:
+        core.pending = self._push(end, CORE_EVT, core)
+        bg = self._barrier_groups
+        if bg is not None and self._use_ff and core.group in bg:
+            heapq.heappush(self._barriers, end)
+
+    def _next_barrier(self, t: float) -> float:
+        """Earliest pending interacting event at/after ``t`` (every
+        event before ``t`` has been processed — the heap drains in time
+        order)."""
+        b = self._barriers
+        while b and b[0] < t:
+            heapq.heappop(b)
+        return b[0] if b else _INF
 
     def run(self, tasks: list[Task]) -> "Scheduler":
         self.prime(tasks)
@@ -252,34 +365,48 @@ class Scheduler:
         self._revive_parked_timers(max(self.now, ta))
 
     def next_event_time(self) -> float:
-        """Time of the earliest pending event (inf when drained)."""
-        return self.heap[0][0] if self.heap else float("inf")
+        """Time of the earliest pending event (inf when drained).
+        Tombstoned records may make this conservatively early, exactly
+        as stale generation-counter events used to."""
+        return self.heap[0][0] if self.heap else _INF
 
     def _pop_event(self) -> None:
-        t, _, kind, payload, gen = heapq.heappop(self.heap)
+        rec = heapq.heappop(self.heap)
+        t = rec[0]
+        kind = rec[3]
+        payload = rec[4]
+        rec[4] = None
+        self._pool.append(rec)
+        if kind == DEAD:
+            return
         self.now = t
         if kind == ARRIVAL:
+            self.n_events += 1
             self.on_arrival(payload, t)
         elif kind == CORE_EVT:
-            core: Core = payload
-            if gen == core.gen:
-                self._finish_chunk(core, t)
-            # else: stale decision point
+            payload.pending = None
+            self._run_core(payload, t)
         else:  # TIMER
+            self.n_events += 1
             self.on_timer(payload, t)
 
     def step(self, until: float) -> "Scheduler":
         """Process every event with timestamp <= ``until`` and advance
         the clock there, so snapshots taken by a dispatcher see node
         state as of the cluster-wide current time."""
-        while self.heap and self.heap[0][0] <= until:
+        self._hz = until
+        heap = self.heap
+        while heap and heap[0][0] <= until:
             self._pop_event()
+        self._hz = _INF
         self.now = max(self.now, until)
         return self
 
     def drain(self) -> "Scheduler":
         """Run the event loop to exhaustion."""
-        while self.heap:
+        self._hz = _INF
+        heap = self.heap
+        while heap:
             self._pop_event()
         return self
 
@@ -331,7 +458,10 @@ class Scheduler:
 
     # -- chunk lifecycle -------------------------------------------------
     def _start_chunk(self, core: Core, task: Task, t: float,
-                     limit: Optional[float] = None) -> None:
+                     limit: Optional[float] = None) -> float:
+        """Install ``task`` on ``core`` and return the chunk's expiry
+        instant. The caller schedules the expiry: dispatch() pushes a
+        heap record; the event loop may instead process it inline."""
         ctx = self.ctx_switch_ms if core.last_task is not task else 0.0
         if task.first_run is None:
             task.first_run = t
@@ -354,11 +484,10 @@ class Scheduler:
         core.chunk_work_start = t + ctx
         core.chunk_len = run
         core.chunk_rate = rate
-        core.gen += 1
         if ctx > 0.0:
             task.ctx_switches += 1
             self.total_ctx += 1
-        self._push(t + ctx + run / rate, CORE_EVT, core, core.gen)
+        return t + ctx + run / rate
 
     def _complete(self, task: Task, t: float) -> None:
         """Single completion path: record, return the sandbox to the
@@ -371,32 +500,80 @@ class Scheduler:
         self.on_complete(task, t)
 
     def _interrupt(self, core: Core, t: float) -> Task:
-        """Stop the running chunk early; returns the (partially run) task."""
+        """Stop the running chunk early; returns the (partially run)
+        task. The in-flight heap record is tombstoned in place and
+        recycled when it surfaces (lazy deletion)."""
         task = core.task
         done = min(max(0.0, t - core.chunk_work_start) * core.chunk_rate,
                    core.chunk_len)
         task.remaining -= done
         task.cpu_time += done
         core.busy_ms += max(0.0, t - core.chunk_start)
-        core.gen += 1
+        rec = core.pending
+        if rec is not None:
+            rec[3] = DEAD
+            rec[4] = None
+            core.pending = None
         core.task = None
         core.last_task = task
         if task.remaining <= _EPS:  # raced with completion
             self._complete(task, t)
         return task
 
-    def _finish_chunk(self, core: Core, t: float) -> None:
-        task = core.task
-        task.remaining -= core.chunk_len
-        task.cpu_time += core.chunk_len
-        core.busy_ms += t - core.chunk_start
-        core.task = None
-        core.last_task = task
-        if task.remaining <= _EPS:
-            self._complete(task, t)
-        else:
-            self.on_chunk_limit(core, task, t)
-        self.dispatch(core, t)
+    def _run_core(self, core: Core, t: float) -> None:
+        """Process a chunk expiry, then keep advancing this core inline
+        while its next expiry lands strictly before every other pending
+        event and inside the step() horizon. Equivalent to the pop-push
+        loop event by event — same hooks, same float operations, same
+        tie-breaking (ties go through the heap) — minus the heap churn.
+        """
+        hz = self._hz
+        heap = self.heap
+        while True:
+            self.n_events += 1
+            task = core.task
+            task.remaining -= core.chunk_len
+            task.cpu_time += core.chunk_len
+            core.busy_ms += t - core.chunk_start
+            core.task = None
+            core.last_task = task
+            if task.remaining <= _EPS:
+                self._complete(task, t)
+            else:
+                self.on_chunk_limit(core, task, t)
+            if core.task is not None or t < core.locked_until:
+                return
+            pick = self.pick_next(core, t)
+            if pick is None:
+                return
+            ntask, limit = pick
+            end = self._start_chunk(core, ntask, t, limit)
+            if self._use_ff and core.chunk_len < ntask.remaining:
+                end = self.fast_forward(core, end, hz)
+            if end < (heap[0][0] if heap else _INF) and end <= hz:
+                self.now = t = end
+                continue
+            self._push_core(core, end)
+            return
+
+    def fast_forward(self, core: Core, end: float, hz: float) -> float:
+        """Analytic round fast-forward hook (DESIGN.md Sec. 13).
+
+        Called with ``core`` mid-chunk (expiry at ``end``). A policy
+        whose slice cycle is closed-form may retire any number of
+        expiry rounds here with plain arithmetic — replicating the
+        exact per-round float operations — and return the new in-flight
+        chunk's expiry. Rounds may cross OTHER cores' pending chunk
+        expiries (pure slice expiries touch only their own core) but
+        must stop strictly before the next interacting event
+        (:meth:`_next_barrier`), at or before the ``hz`` horizon, and
+        before the task's own completion — completions mutate shared
+        state (pool, adapter, the completed list) and must interleave
+        with other cores in exact time order, through the heap.
+        Must leave ALL observable state (task metrics, runqueue contents
+        and seq numbers, min_vruntime, busy accounting) exactly as the
+        event-by-event path would."""
+        return end
 
     def dispatch(self, core: Core, t: float) -> None:
         if core.task is not None or t < core.locked_until:
@@ -404,7 +581,8 @@ class Scheduler:
         pick = self.pick_next(core, t)
         if pick is not None:
             task, limit = pick
-            self._start_chunk(core, task, t, limit)
+            end = self._start_chunk(core, task, t, limit)
+            self._push_core(core, end)
 
     def kick(self, core: Core, t: float) -> None:
         if core.task is None:
@@ -470,3 +648,416 @@ class Scheduler:
 
     def on_complete(self, task: Task, t: float) -> None:
         pass
+
+
+def cfs_fast_forward(sched: Scheduler, core: Core, end: float,
+                     hz: float) -> float:
+    """Shared precondition gate for CFS-style slice cycles, used by both
+    the pure-CFS policy and the hybrid CFS group (the scheduler must
+    expose ``sched_latency_ms`` / ``min_granularity_ms``). Validates
+    that the in-flight chunk is a full slice of the constant quantum,
+    honours ``_ff_solo_only``, and requires a barrier window wide enough
+    to batch at least one round before entering the round engine."""
+    if sched.interference_fn is not None:
+        return end
+    rq = core.rq
+    if rq and sched._ff_solo_only:
+        return end
+    nr = len(rq)
+    s = max(sched.sched_latency_ms / (nr if nr else 1),
+            sched.min_granularity_ms)
+    if core.chunk_len != s:
+        return end
+    bound = sched._next_barrier(core.chunk_start)
+    if bound - end < s:
+        return end                   # window too short to batch a round
+    return cfs_round_fast_forward(sched, core, end, bound, hz, s)
+
+
+def cfs_round_fast_forward(sched: Scheduler, core: Core, end: float,
+                           bound: float, hz: float, s: float) -> float:
+    """Retire successive CFS slice-expiry rounds on one core analytically.
+
+    Preconditions (checked by the calling policy): no interference model
+    (chunk rate is exactly 1.0), the in-flight chunk is a full slice of
+    length ``s``, and the policy's slice-expiry bookkeeping for this
+    core is exactly the base CFS sequence (vruntime += slice, preemption
+    counters, runqueue re-insert). While the runqueue membership is
+    stable — every event that could change it lands at or after
+    ``bound`` (the next interacting event) or past the ``hz`` horizon —
+    the heap-mediated cycle
+
+        expire -> vruntime += s -> rq_push -> rq_pop(min) -> next slice
+
+    is a closed form over a small sorted list. Every float operation the
+    event path would perform is replicated in the same order, so the
+    result is bit-identical (tests/test_engine_equivalence.py); the
+    runqueue is left as a sorted list, which is a valid heap with the
+    exact (vruntime, seq) entries the push/pop sequence would produce.
+
+    Returns the new in-flight chunk's expiry instant.
+    """
+    task = core.task
+    rq = core.rq                     # kept sorted: spliced in place
+    if not rq:
+        return _solo_fast_forward(sched, core, task, end, bound, hz, s)
+    # Long stable alternation cycles (every task gets one slice per
+    # round, queue order fixed) are closed-form too: batch them with
+    # vectorized exact accumulation, then let the engine re-enter for
+    # whatever regime follows.
+    lim = bound if bound <= hz else hz + 1.0
+    if (lim - end) / (sched.ctx_switch_ms + s) >= 96.0:
+        res = _cycle_fast_forward(sched, core, task, end, bound, hz, s, lim)
+        if res is not None:
+            return res
+    t = core.chunk_start
+    e = end
+    ws = core.chunk_work_start
+    cur_run = core.chunk_len         # == s
+    busy = core.busy_ms
+    mv = core.min_vruntime
+    rq_seq = core.rq_seq
+    ctx_ms = sched.ctx_switch_ms
+    charge_ctx = ctx_ms > 0.0
+    eps = _EPS
+    last = core.last_task
+    ctx_n = 0
+    n = 0
+    rq_pop = rq.pop
+    while True:
+        if not (e < bound and e <= hz):
+            break                    # an interacting event intervenes
+        nrem = task.remaining - s
+        if nrem <= eps:
+            break                    # chunk completes; engine path handles
+        vr = task.vruntime + s
+        head = rq[0]
+        if head[0] <= vr:
+            ntask = head[2]
+            if ntask.first_run is None:
+                # The pick would be this task's FIRST dispatch: that
+                # path stamps first_run and touches shared state
+                # (container acquire, cold-start RNG), which must
+                # interleave with other cores' pool operations in
+                # exact heap order.
+                break
+            # -- slice expiry at e: retire the in-flight chunk --------
+            task.remaining = nrem
+            task.cpu_time += s
+            busy += e - t
+            task.vruntime = vr
+            task.preemptions += 1
+            seq = rq_seq
+            rq_seq = seq + 1         # the rq_push the event path would do
+            # -- rq_pop: the fresh (vr, seq) entry loses ties ---------
+            rq_pop(0)
+            insort(rq, (vr, seq, task))
+            hv = head[0]
+            if hv > mv:
+                mv = hv
+            last = task
+            task = ntask
+            rem = task.remaining
+            run = rem if rem < s else s
+            if run < eps:
+                run = eps
+            if charge_ctx:
+                task.ctx_switches += 1
+                ctx_n += 1
+            t = e
+            ws = t + ctx_ms
+            e = ws + run             # == t + ctx + run / 1.0, bit-exact
+        else:
+            # Catch-up: the running task stays ahead of the queue and
+            # keeps the core (no context switch).
+            task.remaining = nrem
+            task.cpu_time += s
+            busy += e - t
+            task.vruntime = vr
+            task.preemptions += 1
+            rq_seq += 1
+            if vr > mv:
+                mv = vr
+            last = task
+            run = nrem if nrem < s else s
+            if run < eps:
+                run = eps
+            t = e
+            e = t + run              # ctx == 0.0: t + 0.0 + run / 1.0
+            ws = t
+        cur_run = run
+        n += 1
+        if run != s:
+            break                    # final partial chunk is in flight
+    if n:
+        core.task = task
+        core.last_task = last
+        core.chunk_start = t
+        core.chunk_work_start = ws
+        core.chunk_len = cur_run
+        core.busy_ms = busy
+        core.min_vruntime = mv
+        core.rq_seq = rq_seq
+        core.preempt_count += n
+        sched.total_ctx += ctx_n
+        sched.n_events += n
+        return e
+    return end
+
+
+def _cycle_fast_forward(sched: Scheduler, core: Core, task: Task,
+                        end: float, bound: float, hz: float, s: float,
+                        lim: float):
+    """Vectorized stable-cycle batch: ``k`` tasks alternating, one full
+    slice each per round, queue order fixed.
+
+    In the stable regime the pushed-vruntime sequence is nondecreasing,
+    so every ``insort`` lands at the queue tail and every pick takes the
+    head — the whole braid is determined by per-task accumulation
+    sequences. Those are single-operand float chains (``vr += s``,
+    ``rem -= s``, ``e += ctx; e += s``), which ``ufunc.accumulate``
+    reproduces bit-exactly at C speed. The stability condition itself is
+    checked ON the exact accumulated values, so the batch stops at the
+    precise chunk where the event path would first deviate (catch-up,
+    completion, barrier, partial slice, queue reorder) and hands back;
+    the scalar loops take over from identical state.
+
+    Returns the new in-flight chunk expiry, or None to decline (the
+    caller falls through to the scalar loop).
+    """
+    rq = core.rq
+    k1 = len(rq)                     # waiting tasks (k = k1 + 1)
+    k = k1 + 1
+    # Cheap necessary condition for cycle stability (in exact arithmetic
+    # gaps between vruntimes are cycle-invariant, so round one decides):
+    # the running task must re-queue at the tail and behind the head.
+    vr0 = task.vruntime
+    if vr0 + s < rq[-1][0] or vr0 > rq[0][0]:
+        return None
+    for ent in rq:
+        if ent[2].first_run is None:
+            return None              # first dispatches go through the heap
+    ctx_ms = sched.ctx_switch_ms
+    eps = _EPS
+    tasks = [task] + [ent[2] for ent in rq]   # cycle (pick) order
+    rem0 = [x.remaining for x in tasks]
+    # Cycle cap: the tightest task's remaining, and the time to bound.
+    min_rem = min(rem0)
+    r_cap = int(min((min_rem - s) / s + 2.0,
+                    (lim - end) / (k * (ctx_ms + s)) + 2.0)) + 1
+    if r_cap * k < 96:
+        return None                  # too short to be worth the arrays
+    r_cap = min(r_cap, max(2, (1 << 20) // k))
+    # Allocate for a modest horizon first and escalate geometrically
+    # only when the whole window retires — stability or a barrier
+    # usually stops a batch long before the remaining-time cap.
+    r_try = min(r_cap, max(2, 768 // k))
+    while True:
+        c_max = r_try * k
+        # -- exact per-task accumulation sequences --------------------
+        m = np.full((k, r_try + 1), s)
+        m[:, 0] = rem0
+        rem_arr = np.subtract.accumulate(m, axis=1)
+        m[:, 0] = [x.vruntime for x in tasks]
+        vr_arr = np.add.accumulate(m, axis=1)
+        # Chunk-end chain: e_{c+1} = (e_c + ctx) + s — two rounding
+        # steps, interleaved in one accumulate so every intermediate
+        # is exact.
+        buf = np.empty(2 * c_max + 1)
+        buf[0] = end
+        buf[1::2] = ctx_ms
+        buf[2::2] = s
+        half = np.add.accumulate(buf)
+        ends = half[0::2]            # e_c, len c_max + 1
+        # -- how many chunks can be retired? --------------------------
+        pushed = vr_arr[:, 1:].T.ravel()          # vr pushed at chunk c
+        rem_after = rem_arr[:, 1:].T.ravel()      # remaining after chunk c
+        ok = (ends[:c_max] < bound) & (ends[:c_max] <= hz) \
+            & (rem_after > eps)
+        # Stability: each push must land at the queue tail
+        # (nondecreasing pushed sequence, from the queue maximum up).
+        stab = np.empty(c_max, dtype=bool)
+        stab[0] = pushed[0] >= rq[-1][0]
+        np.greater_equal(pushed[1:], pushed[:-1], out=stab[1:])
+        ok &= stab
+        c_stop = int(np.argmin(ok)) if not ok.all() else c_max
+        if c_stop < c_max or r_try >= r_cap:
+            break
+        r_try = min(r_cap, r_try * 8)
+    if c_stop < k:                   # not even one full round: scalar
+        return None
+    c = c_stop
+    m[:, 0] = [x.cpu_time for x in tasks]
+    cpu_arr = np.add.accumulate(m, axis=1)
+    # -- commit: per-task state ---------------------------------------
+    charge_ctx = ctx_ms > 0.0
+    seq0 = core.rq_seq
+    for j, x in enumerate(tasks):
+        runs = c // k + (1 if j < c % k else 0)     # chunks j, j+k, ... < c
+        x.remaining = float(rem_arr[j, runs])
+        x.vruntime = float(vr_arr[j, runs])
+        x.cpu_time = float(cpu_arr[j, runs])
+        x.preemptions += runs
+        if charge_ctx:
+            # batch-started chunks (1..c, in-flight included) with a
+            # context switch, i.e. chunk indices congruent to j
+            starts = c // k if j == 0 else (c - j) // k + 1
+            x.ctx_switches += starts
+            sched.total_ctx += starts
+    # busy: same (e_c - t_c) subtraction/addition sequence as the loop.
+    d = np.empty(c)
+    d[0] = end - core.chunk_start
+    if c > 1:
+        np.subtract(ends[1:c], ends[0:c - 1], out=d[1:])
+    acc = np.empty(c + 1)
+    acc[0] = core.busy_ms
+    acc[1:] = d
+    core.busy_ms = float(np.add.accumulate(acc)[-1])
+    # queue: entries C..C+k-2 of (original ++ pushed) survive — only
+    # the tail tuples are ever materialized (c >= k is guaranteed, so
+    # the survivors are all freshly pushed).
+    core.rq = [(float(pushed[i]), seq0 + i, tasks[i % k])
+               for i in range(c - k1, c)]
+    nxt_task = tasks[c % k]          # == (original ++ pushed)[c-1].task
+    mv = float(pushed[c - k])        # last popped value (nondecreasing)
+    if mv > core.min_vruntime:
+        core.min_vruntime = mv
+    core.rq_seq = seq0 + c
+    core.preempt_count += c
+    sched.n_events += c
+    # -- in-flight chunk c --------------------------------------------
+    rem = nxt_task.remaining
+    run = rem if rem < s else s
+    if run < eps:
+        run = eps
+    t = float(ends[c - 1])
+    ws = float(half[2 * c - 1])      # t + ctx, exact
+    e = float(half[2 * c]) if run == s else ws + run
+    core.task = nxt_task
+    core.last_task = tasks[(c - 1) % k]
+    core.chunk_start = t
+    core.chunk_work_start = ws
+    core.chunk_len = run
+    return e
+
+
+def _solo_scalar(sched: Scheduler, core: Core, task: Task, end: float,
+                 bound: float, hz: float, s: float) -> float:
+    """Scalar lone-task round chain — the short-batch counterpart of
+    :func:`_solo_fast_forward`, same exact operations."""
+    eps = _EPS
+    t = core.chunk_start
+    e = end
+    busy = core.busy_ms
+    n = 0
+    run = s
+    while e < bound and e <= hz:
+        nrem = task.remaining - s
+        if nrem <= eps:
+            break
+        task.remaining = nrem
+        task.cpu_time += s
+        busy += e - t
+        task.vruntime += s
+        task.preemptions += 1
+        n += 1
+        run = nrem if nrem < s else s
+        if run < eps:
+            run = eps
+        t = e
+        e = t + run
+        if run != s:
+            break
+    if n:
+        core.last_task = task
+        core.chunk_start = t
+        core.chunk_work_start = t
+        core.chunk_len = run
+        core.busy_ms = busy
+        vr = task.vruntime
+        if vr > core.min_vruntime:
+            core.min_vruntime = vr
+        core.rq_seq += n
+        core.preempt_count += n
+        sched.n_events += n
+        return e
+    return end
+
+
+def _solo_fast_forward(sched: Scheduler, core: Core, task: Task, end: float,
+                       bound: float, hz: float, s: float) -> float:
+    """Vectorized lone-task round chain (empty runqueue, zero context
+    switches). The per-round float updates are single-operand
+    accumulations — ``remaining -= s``, ``vruntime += s``,
+    ``cpu_time += s``, ``e += s`` — and ``numpy``'s ``ufunc.accumulate``
+    applies its operator strictly sequentially in float64, so the
+    accumulated sequences are bit-identical to the scalar loop while
+    running at C speed. Stopping conditions are evaluated on the exact
+    accumulated arrays; the final (possibly partial) chunk is started
+    scalar, exactly like the general loop."""
+    eps = _EPS
+    rem0 = task.remaining
+    # Upper bound on retirable full-slice rounds: remaining must stay
+    # > s + eps after each, and each round pushes e forward by s past
+    # the current chunk's end. Cap by the time budget (and absolutely)
+    # so a year-long lone task against a far barrier does not allocate
+    # gigabytes; hitting the cap just hands back to the engine loop,
+    # which re-enters the fast-forward on the next chunk.
+    lim = bound if bound <= hz else hz + 1.0  # allocation cap only
+    r_cap = int(max(0.0, min((rem0 - s) / s, (lim - end) / s + 2.0))) + 1
+    if r_cap <= 1:
+        return end
+    if r_cap < 48:
+        # ufunc/allocation overhead beats the scalar loop on short
+        # chains (the arrival-phase common case); stay scalar there.
+        return _solo_scalar(sched, core, task, end, bound, hz, s)
+    if r_cap > (1 << 21):
+        r_cap = 1 << 21
+    buf = np.full(r_cap + 1, s)
+    buf[0] = rem0
+    rem_seq = np.subtract.accumulate(buf)      # rem_i after i rounds
+    buf[0] = end
+    e_seq = np.add.accumulate(buf)             # e_i: chunk end after i rounds
+    # Round i (1-based) retires the chunk ending at e_{i-1}; it needs
+    # e_{i-1} < bound, e_{i-1} <= hz, rem_{i-1} - s > eps, and the
+    # PREVIOUS round's started chunk to have been a full slice
+    # (rem_{i-1} >= s, implied by rem_{i-1} - s > eps).
+    ok = (e_seq[:-1] < bound) & (e_seq[:-1] <= hz) & (rem_seq[:-1] - s > eps)
+    bad = np.argmin(ok) if not ok.all() else len(ok)
+    n = int(bad)
+    if n <= 0:
+        return end
+    t = float(e_seq[n - 1])
+    e = float(e_seq[n])
+    rem = float(rem_seq[n])
+    # busy accumulates (e_i - t_i) per retired chunk — identical
+    # subtraction and addition sequence to the scalar loop.
+    d = np.empty(n)
+    d[0] = end - core.chunk_start
+    if n > 1:
+        d[1:] = e_seq[1:n] - e_seq[0:n - 1]
+    busy = np.add.accumulate(np.concatenate(([core.busy_ms], d)))[-1]
+    # vruntime/cpu_time: same accumulate trick, then write back finals.
+    buf[0] = task.vruntime
+    task.vruntime = vr = float(np.add.accumulate(buf[:n + 1])[-1])
+    buf[0] = task.cpu_time
+    task.cpu_time = float(np.add.accumulate(buf[:n + 1])[-1])
+    task.remaining = rem
+    task.preemptions += n
+    # The final started chunk may be the task's last (partial) slice.
+    run = rem if rem < s else s
+    if run < eps:
+        run = eps
+    e = t + run if run != s else e   # same op the scalar loop performs
+    core.task = task
+    core.last_task = task
+    core.chunk_start = t
+    core.chunk_work_start = t
+    core.chunk_len = run
+    core.busy_ms = float(busy)
+    if vr > core.min_vruntime:
+        core.min_vruntime = vr
+    core.rq_seq += n
+    core.preempt_count += n
+    sched.n_events += n
+    return e

@@ -5,18 +5,28 @@
   vruntime queues). Tasks that exceed the time limit are preempted and
   migrated round-robin onto the CFS cores (Fig. 7).
 * ``TimeLimitAdapter`` keeps the most recent 100 task durations and sets
-  the limit to a configurable percentile (Sec. IV-B, Fig. 15-17).
+  the limit to a configurable percentile (Sec. IV-B, Fig. 15-17). The
+  percentile window is maintained incrementally (mirrored sorted list +
+  cached value), so ``limit()`` — called on every FIFO dispatch — is
+  O(1) instead of a sort per call.
 * ``Rightsizer`` monitors per-group utilization over a window and migrates
   one core from the hot group to the cold group when the imbalance
   exceeds a threshold, following the Lock / Preempt / Migrate /
   Transition / Unlock protocol of Fig. 8.
+
+Group membership is tracked in maintained per-group core lists (cid
+order, matching the historical filtered-list scans) so the arrival path
+and heartbeat snapshots stop rescanning every core; rightsizer
+migrations go through :meth:`HybridScheduler._set_group`.
 """
 from __future__ import annotations
 
+from bisect import bisect_left, insort
 from collections import deque
 from typing import Optional
 
-from .events import GROUP_CFS, GROUP_FIFO, Core, Scheduler, Task
+from .events import (GROUP_CFS, GROUP_FIFO, Core, Scheduler, Task,
+                     cfs_fast_forward)
 
 
 def percentile(sorted_vals: list[float], pct: float) -> float:
@@ -33,23 +43,49 @@ def percentile(sorted_vals: list[float], pct: float) -> float:
 
 
 class TimeLimitAdapter:
-    """Sliding window (most recent ``window`` durations) percentile limit."""
+    """Sliding window (most recent ``window`` durations) percentile limit.
+
+    The window deque is mirrored into an incrementally maintained sorted
+    list: ``record`` does one bisect-remove + one insort, and ``limit``
+    interpolates the cached percentile without sorting — the historical
+    implementation re-sorted the window on every call, on both the
+    per-completion and per-dispatch hot paths.
+
+    ``record_series=True`` (opt-in) retains the full ``(t, limit)``
+    trajectory for figure generation. Left off (the default), a
+    long heavy-traffic run holds only the fixed-size window instead of
+    growing one tuple per completion forever.
+    """
 
     def __init__(self, pct: float = 95.0, window: int = 100,
-                 initial_ms: float = 1633.0):
+                 initial_ms: float = 1633.0, record_series: bool = False):
         self.pct = pct
         self.window: deque[float] = deque(maxlen=window)
         self.initial_ms = initial_ms
+        self.record_series = record_series
         self.series: list[tuple[float, float]] = []
+        self._sorted: list[float] = []
+        self._cached: Optional[float] = None
 
     def record(self, duration_ms: float, now: float) -> None:
-        self.window.append(duration_ms)
-        self.series.append((now, self.limit()))
+        w = self.window
+        if len(w) == w.maxlen:
+            # deque(maxlen) is about to drop the oldest sample; drop its
+            # mirror entry (bisect finds an equal value, which is all
+            # the percentile cares about).
+            del self._sorted[bisect_left(self._sorted, w[0])]
+        w.append(duration_ms)
+        insort(self._sorted, duration_ms)
+        self._cached = None
+        if self.record_series:
+            self.series.append((now, self.limit()))
 
     def limit(self) -> float:
-        if not self.window:
+        if not self._sorted:
             return self.initial_ms
-        return percentile(sorted(self.window), self.pct)
+        if self._cached is None:
+            self._cached = percentile(self._sorted, self.pct)
+        return self._cached
 
 
 class Rightsizer:
@@ -68,6 +104,18 @@ class HybridScheduler(Scheduler):
     """FIFO+CFS two-group scheduler (the paper's design, Fig. 7/8)."""
 
     name = "hybrid"
+    _has_ff = True
+    # A FIFO-group chunk expiry can migrate its over-limit task into
+    # any CFS core's runqueue (reading that core's min_vruntime), so
+    # FIFO-group expiries are fast-forward barriers for the CFS group.
+    _barrier_groups = frozenset({GROUP_FIFO})
+    # Subclasses that override on_chunk_limit with extra bookkeeping
+    # when a CFS-group slice expires with a NON-empty runqueue (e.g. the
+    # serving gateway's KV-swap penalty) must set this, restricting the
+    # analytic fast-forward to lone-task cores where their override is
+    # a no-op. Overrides that also act on empty-runqueue expiries must
+    # disable the fast-forward entirely (_has_ff = False).
+    _ff_solo_only = False
 
     def __init__(
         self,
@@ -89,18 +137,35 @@ class HybridScheduler(Scheduler):
         self.sched_latency_ms = sched_latency_ms
         self.min_granularity_ms = min_granularity_ms
         self.fifo_queue: deque[Task] = deque()
+        self._groups: dict[int, list[Core]] = {GROUP_FIFO: [], GROUP_CFS: []}
         for i, core in enumerate(self.cores):
             core.group = GROUP_FIFO if i < n_fifo else GROUP_CFS
+            self._groups[core.group].append(core)
         self._rr_cfs = 0
 
     # -- group views -----------------------------------------------------
+    #
+    # Maintained lists in cid order — the same order the historical
+    # [c for c in cores if c.group == g] rescans produced, which the
+    # idle-core scan and the round-robin migration target index rely on.
+    # Treat as read-only; membership changes go through _set_group.
     @property
     def fifo_cores(self) -> list[Core]:
-        return [c for c in self.cores if c.group == GROUP_FIFO]
+        return self._groups[GROUP_FIFO]
 
     @property
     def cfs_cores(self) -> list[Core]:
-        return [c for c in self.cores if c.group == GROUP_CFS]
+        return self._groups[GROUP_CFS]
+
+    def _set_group(self, core: Core, group: int) -> None:
+        self._groups[core.group].remove(core)
+        core.group = group
+        lst = self._groups[group]
+        for i, c in enumerate(lst):
+            if c.cid > core.cid:
+                lst.insert(i, core)
+                return
+        lst.append(core)
 
     def time_limit(self) -> float:
         if self.adapter is not None:
@@ -144,6 +209,13 @@ class HybridScheduler(Scheduler):
     def _cfs_slice(self, core: Core) -> float:
         nr = max(1, core.nr_running)
         return max(self.sched_latency_ms / nr, self.min_granularity_ms)
+
+    def fast_forward(self, core: Core, end: float, hz: float) -> float:
+        # Analytic CFS round fast-forward for the CFS group. FIFO-group
+        # chunks run to a (variable) budget and are not slice cycles.
+        if core.group != GROUP_CFS:
+            return end
+        return cfs_fast_forward(self, core, end, hz)
 
     def on_chunk_limit(self, core: Core, task: Task, t: float) -> None:
         if core.group == GROUP_FIFO:
@@ -199,14 +271,15 @@ class HybridScheduler(Scheduler):
         fifo, cfs = self.fifo_cores, self.cfs_cores
         u_fifo = self._group_util(fifo, t, window)
         u_cfs = self._group_util(cfs, t, window)
+        n_fifo, n_cfs = len(fifo), len(cfs)
         for core in self.cores:
             core._rs_snap = core.busy_total(t)  # type: ignore[attr-defined]
         if abs(u_fifo - u_cfs) <= rs.threshold:
             return
-        if u_fifo > u_cfs and len(cfs) > rs.min_group:
+        if u_fifo > u_cfs and n_cfs > rs.min_group:
             self._migrate_core_cfs_to_fifo(t)
             rs.migrations.append((t, GROUP_CFS, GROUP_FIFO))
-        elif u_cfs > u_fifo and len(fifo) > rs.min_group:
+        elif u_cfs > u_fifo and n_fifo > rs.min_group:
             self._migrate_core_fifo_to_cfs(t)
             rs.migrations.append((t, GROUP_FIFO, GROUP_CFS))
 
@@ -237,13 +310,13 @@ class HybridScheduler(Scheduler):
             tgt.rq_push(task)
             self.kick(tgt, t)
         # Transition + unlock (dispatch after the lock expires).
-        core.group = GROUP_FIFO
+        self._set_group(core, GROUP_FIFO)
         self._push(core.locked_until, 2, ("unlock", core))
 
     def _migrate_core_fifo_to_cfs(self, t: float) -> None:
         fifo = self.fifo_cores
         core = min(fifo, key=lambda c: 0 if c.task is None else 1)
-        core.group = GROUP_CFS
+        self._set_group(core, GROUP_CFS)
         # A running FIFO task keeps its CPU but is re-chunked under CFS
         # rules (it will be preempted "when we schedule a new task", which
         # under CFS means at its next slice boundary).

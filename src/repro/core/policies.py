@@ -14,7 +14,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Optional
 
-from .events import Core, Scheduler, Task
+from .events import _EPS, Core, Scheduler, Task, cfs_fast_forward
 
 
 class FIFO(Scheduler):
@@ -46,6 +46,7 @@ class FIFOPreempt(FIFO):
     """FIFO with per-chunk preemption budget (FIFO_100ms in the paper)."""
 
     name = "fifo_preempt"
+    _has_ff = True
 
     def __init__(self, quantum_ms: float = 100.0, **kw):
         super().__init__(**kw)
@@ -60,6 +61,54 @@ class FIFOPreempt(FIFO):
         task.preemptions += 1
         core.preempt_count += 1
         self.queue.append(task)  # to the END of the global queue
+
+    def fast_forward(self, core: Core, end: float, hz: float) -> float:
+        # A lone task with an empty global queue cycles append ->
+        # popleft with itself: retire whole quantum rounds analytically.
+        # Every core shares the global queue, so ANY other pending event
+        # (including other cores' expiries, which may queue their task)
+        # bounds the loop — the heap top, not just the barrier heap.
+        if self.queue or self.interference_fn is not None:
+            return end
+        q = self.quantum_ms
+        if core.chunk_len != q:
+            return end
+        nxt = self.heap[0][0] if self.heap else float("inf")
+        task = core.task
+        t = core.chunk_start
+        e = end
+        busy = core.busy_ms
+        n = 0
+        cur_run = q
+        while True:
+            if not (e < nxt and e <= hz):
+                break
+            nrem = task.remaining - q
+            if nrem <= _EPS:
+                break                # chunk completes; engine path handles
+            task.remaining = nrem
+            task.cpu_time += q
+            busy += e - t
+            task.preemptions += 1
+            n += 1
+            run = nrem if nrem < q else q
+            if run < _EPS:
+                run = _EPS
+            t = e
+            e = t + 0.0 + run        # ctx == 0: same task keeps the core
+            cur_run = run
+            if run != q:
+                break                # final partial chunk is in flight
+        if n:
+            core.last_task = task
+            core.chunk_start = t
+            core.chunk_work_start = t + 0.0
+            core.chunk_len = cur_run
+            core.busy_ms = busy
+            core.preempt_count += n
+            self.n_events += n
+            return e
+        return end
 
 
 class RoundRobin(FIFOPreempt):
@@ -80,6 +129,11 @@ class CFS(Scheduler):
     """
 
     name = "cfs"
+    _has_ff = True
+    # See HybridScheduler._ff_solo_only: subclasses whose on_chunk_limit
+    # does extra work only when the runqueue is non-empty set this to
+    # keep the analytic fast-forward on lone-task cores only.
+    _ff_solo_only = False
 
     def __init__(self, sched_latency_ms: float = 24.0,
                  min_granularity_ms: float = 3.0, **kw):
@@ -124,6 +178,9 @@ class CFS(Scheduler):
         task.preemptions += 1
         core.preempt_count += 1
         core.rq_push(task)
+
+    def fast_forward(self, core: Core, end: float, hz: float) -> float:
+        return cfs_fast_forward(self, core, end, hz)
 
 
 class EDF(Scheduler):

@@ -46,6 +46,11 @@ class SlotHybridScheduler(HybridScheduler):
     """Hybrid scheduler whose preemptions carry the KV-swap penalty."""
 
     name = "slot_hybrid"
+    # on_chunk_limit adds the KV-swap penalty whenever another request
+    # displaces this one (non-empty runqueue): the analytic fast-forward
+    # may only batch lone-task slice cycles, where the override is a
+    # no-op (see HybridScheduler._ff_solo_only).
+    _ff_solo_only = True
 
     def __init__(self, cfg: ModelConfig, seq_len: int = 4096,
                  straggler_factor: float = 0.0, **kw):
@@ -76,6 +81,7 @@ class SlotHybridScheduler(HybridScheduler):
 
 class SlotCFS(CFS):
     name = "slot_cfs"
+    _ff_solo_only = True  # same contract as SlotHybridScheduler
 
     def __init__(self, cfg: ModelConfig, seq_len: int = 4096, **kw):
         penalty = preemption_penalty_ms(cfg, seq_len)

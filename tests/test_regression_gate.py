@@ -77,6 +77,59 @@ def test_gate_accepts_both_artifact_shapes(tmp_path):
     assert gate.load_rows(str(wrapped)) == rows
 
 
+def _engine_row(eps=100_000.0, **kw):
+    base = {"policy": "cfs", "containers": "off", "n_cores": 16,
+            "n_tasks": 6249, "events": 1_548_167,
+            "wall_s": 1.0, "events_per_sec": eps}
+    base.update(kw)
+    return base
+
+
+def test_engine_gate_detects_and_compares():
+    rows = [_engine_row(), _engine_row(policy="hybrid", eps=200_000.0)]
+    assert gate.is_engine_rows(rows)
+    failures, notes = gate.compare_engine(rows, rows, 0.15)
+    assert failures == []
+    assert any("2 engine cells" in n for n in notes)
+    # >15% slower fails; faster or within tolerance passes
+    slower = [_engine_row(eps=80_000.0),
+              _engine_row(policy="hybrid", eps=200_000.0)]
+    failures, _ = gate.compare_engine(rows, slower, 0.15)
+    assert len(failures) == 1 and "events/sec regressed" in failures[0]
+    faster = [_engine_row(eps=500_000.0),
+              _engine_row(policy="hybrid", eps=190_000.0)]
+    failures, _ = gate.compare_engine(rows, faster, 0.15)
+    assert failures == []
+
+
+def test_engine_gate_notes_event_count_drift():
+    """An event-count change means the SIMULATION changed — the gate
+    must surface it even when throughput did not regress."""
+    prev = [_engine_row()]
+    new = [_engine_row(events=1_500_000)]
+    failures, notes = gate.compare_engine(prev, new, 0.15)
+    assert failures == []
+    assert any("event count changed" in n for n in notes)
+
+
+def test_engine_gate_schema_drift_fails():
+    rows = [{k: v for k, v in _engine_row().items()
+             if k != "events_per_sec"}]
+    rows[0]["events_per_sec"] = 0.0  # present but unusable
+    failures, _ = gate.compare_engine(rows, rows, 0.15)
+    assert len(failures) == 1 and "schema" in failures[0]
+
+
+def test_engine_gate_cli_autodetects(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps({"rows": [_engine_row()]}))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"rows": [_engine_row(eps=50_000.0)]}))
+    assert gate.main([str(good), str(good)]) == 0
+    assert gate.main([str(good), str(bad)]) == 1
+    assert gate.main([str(bad), str(good)]) == 0  # improvement passes
+
+
 def test_gate_cli_exit_codes(tmp_path):
     good = tmp_path / "good.json"
     good.write_text(json.dumps([_row()]))
