@@ -1,9 +1,13 @@
-"""Benchmark-regression gate: diff two benchmark JSON artifacts.
+"""Benchmark-regression gate: diff benchmark JSON artifacts.
 
 CI runs the smoke-size benches on every PR and uploads the JSON. This
-gate compares a fresh artifact against the previous successful run's
-and FAILS (exit 1) on a regression beyond ``--threshold``. Two artifact
-kinds are understood, auto-detected from the row schema:
+gate compares a fresh artifact against a BASELINE — one previous run,
+or several: given multiple baseline artifacts it collapses them into a
+synthetic per-cell MEDIAN baseline first (``--median-of N`` caps how
+many of the newest are used), so a single lucky or noisy historical
+run cannot anchor the gate. It FAILS (exit 1) on a regression beyond
+``--threshold``. Two artifact kinds are understood, auto-detected from
+the row schema:
 
 * ``cluster_matrix`` rows — fail when a shared grid cell's ``cost_usd``
   goes UP or its completed-invocations-per-makespan-second goes DOWN by
@@ -17,18 +21,23 @@ kinds are understood, auto-detected from the row schema:
   with full-trace baselines.
 
 Cells present on only one side are reported but do not fail the gate
-(grids evolve). A missing baseline file passes with a note, so the
-first run after enabling the gate is green.
+(grids evolve). Missing baseline files are skipped with a note; when
+NO baseline exists the gate passes vacuously, so the first run after
+enabling it is green.
 
 Usage::
 
-    python -m benchmarks.regression_gate PREV.json NEW.json \
-        [--threshold 0.15]
+    python -m benchmarks.regression_gate PREV.json [OLDER.json ...] \
+        NEW.json [--threshold 0.15] [--median-of N]
+
+(The LAST positional path is the current run; everything before it is
+baseline history, newest first.)
 """
 from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import sys
 from pathlib import Path
 
@@ -55,6 +64,48 @@ def throughput(row: dict) -> float:
 
 def is_engine_rows(rows: list[dict]) -> bool:
     return bool(rows) and "events_per_sec" in rows[0]
+
+
+def median_baseline(rows_lists: list[list[dict]]) -> list[dict]:
+    """Collapse N baseline artifacts (NEWEST FIRST) into one synthetic
+    baseline: per cell, the median of each gated metric over the runs
+    that have the cell. Non-gated fields (events, n, ...) come from the
+    newest run containing the cell, so event-count drift is still
+    reported against the most recent history. For cluster rows the
+    throughput axis medians the n/makespan RATIO (medianing n and
+    makespan separately would gate against a throughput no run had),
+    carried via a synthetic makespan."""
+    if len(rows_lists) == 1:
+        return rows_lists[0]
+    engine = any(is_engine_rows(rows) for rows in rows_lists)
+    key_fn = engine_key if engine else cell_key
+    cells: dict[tuple, list[dict]] = {}
+    order: list[tuple] = []
+    for rows in rows_lists:            # newest first
+        for row in rows:
+            k = key_fn(row)
+            if k not in cells:
+                cells[k] = []
+                order.append(k)
+            cells[k].append(row)
+    out = []
+    for k in order:
+        history = cells[k]
+        synth = dict(history[0])       # newest run's row
+        if engine:
+            vals = [r["events_per_sec"] for r in history
+                    if r.get("events_per_sec")]
+            if vals:
+                synth["events_per_sec"] = statistics.median(vals)
+        else:
+            costs = [r["cost_usd"] for r in history if r.get("cost_usd")]
+            if costs:
+                synth["cost_usd"] = statistics.median(costs)
+            tps = [throughput(r) for r in history if throughput(r) > 0]
+            if tps and synth.get("n"):
+                synth["makespan_s"] = synth["n"] / statistics.median(tps)
+        out.append(synth)
+    return out
 
 
 def engine_key(row: dict) -> tuple:
@@ -152,22 +203,43 @@ def compare(prev_rows: list[dict], new_rows: list[dict],
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("baseline", help="previous run's JSON artifact")
+    ap.add_argument("baseline", nargs="+",
+                    help="previous runs' JSON artifacts, newest first; "
+                         "the LAST path given is the current run")
     ap.add_argument("current", help="this run's JSON artifact")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="relative regression tolerance (default 0.15)")
+    ap.add_argument("--median-of", type=int, default=0, metavar="N",
+                    help="gate against the per-cell median of the "
+                         "newest N baselines (0 = use all given)")
     args = ap.parse_args(argv)
 
-    if not Path(args.baseline).exists():
-        print(f"no baseline at {args.baseline}; gate passes vacuously")
+    notes = []
+    paths = list(args.baseline)
+    if args.median_of > 0:
+        paths = paths[:args.median_of]
+    rows_lists = []
+    for p in paths:
+        if Path(p).exists():
+            rows_lists.append(load_rows(p))
+        else:
+            notes.append(f"baseline {p} missing; skipped")
+    if not rows_lists:
+        for line in notes:
+            print(f"note: {line}")
+        print("no baseline artifacts exist; gate passes vacuously")
         return 0
-    prev_rows = load_rows(args.baseline)
+    if len(rows_lists) > 1:
+        notes.append(f"gating against per-cell median of "
+                     f"{len(rows_lists)} baselines")
+    prev_rows = median_baseline(rows_lists)
     new_rows = load_rows(args.current)
     if is_engine_rows(new_rows) or is_engine_rows(prev_rows):
-        failures, notes = compare_engine(prev_rows, new_rows,
-                                         args.threshold)
+        failures, more = compare_engine(prev_rows, new_rows,
+                                        args.threshold)
     else:
-        failures, notes = compare(prev_rows, new_rows, args.threshold)
+        failures, more = compare(prev_rows, new_rows, args.threshold)
+    notes.extend(more)
     for line in notes:
         print(f"note: {line}")
     for line in failures:

@@ -15,9 +15,15 @@ cannot express:
 Tasks in these roll-ups come from each node's ``completed`` list, so
 their metrics are defined; ``failed`` invocations are counted
 separately and never enter latency/cost vectors.
+
+Like the single-node roll-ups, the fleet roll-ups are ORDER-CANONICAL
+(DESIGN.md Sec. 13): the task view is sorted by (completion, tid) and
+money sums are exactly rounded, so summaries are bit-identical under
+any permutation of each node's completed list.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from functools import cached_property
 
@@ -41,8 +47,12 @@ class ClusterResult:
     # -- task views (cached: summary() walks these repeatedly) --------------
     @cached_property
     def tasks(self) -> list:
-        return [t for r in self.node_results for t in r.tasks
-                if t.completion is not None]
+        """Fleet-wide finished tasks in canonical (completion, tid)
+        order — node order and per-node list order cannot leak into any
+        derived metric."""
+        return sorted((t for r in self.node_results for t in r.tasks
+                       if t.completion is not None),
+                      key=lambda t: (t.completion, t.tid))
 
     @cached_property
     def failed(self) -> list:
@@ -56,7 +66,7 @@ class ClusterResult:
 
     # -- balance ------------------------------------------------------------
     def makespan(self) -> float:
-        return max(t.completion for t in self.tasks)
+        return self.tasks[-1].completion  # canonical order: last wins
 
     @property
     def live_results(self) -> list[SimResult]:
@@ -71,7 +81,7 @@ class ClusterResult:
             horizon = self.makespan()
         out = []
         for r in self.live_results:
-            busy = sum(t.cpu_time for t in r.tasks)
+            busy = math.fsum(t.cpu_time for t in r.tasks)
             out.append(busy / (self.cores_per_node * horizon))
         return np.array(out)
 

@@ -26,6 +26,16 @@ held (TTL evictions stop the meter at the expiry instant, even when the
 reaper notices later), which is what the provider-side memory-hold cost
 in :mod:`repro.core.cost` integrates.
 
+Deferred releases (DESIGN.md Sec. 13): the engine's completion batches
+hand sandboxes back via :meth:`release_at`, which BUFFERS the release
+keyed by ``(t, func_id, tid)``. Every pool read or mutation first
+drains the buffer up to its own instant, so the pool always applies
+releases in canonical time order no matter which per-core batch
+produced them first — release/acquire effects commute within a
+same-instant batch, with ties resolved by (func_id, tid) instead of
+call order, and buffered effects at instant ``t`` apply before any
+same-instant read.
+
 Running containers are not tracked here: a running invocation's memory
 is accounted by the billing model; the pool bounds only the *idle* warm
 set a provider keeps speculatively.
@@ -140,6 +150,10 @@ class ContainerPool:
         self._cap_seq = 0
         self._n_idle = 0
         self._min_expiry = float("inf")
+        # Deferred releases from engine completion batches: a heap of
+        # (t, func_id, tid, mem_mb), drained in canonical time order
+        # before any read/mutation at or after t.
+        self._pending: list[tuple[float, int, int, float]] = []
         # histogram policy state
         self._last_seen: dict[int, float] = {}
         self._iat: dict[int, deque] = {}
@@ -150,8 +164,28 @@ class ContainerPool:
         self.evictions_capacity = 0
         self.dropped = 0          # releases larger than the whole pool
         self.warm_mb_ms = 0.0     # integral of idle warm memory over time
+        self.n_draws = 0          # cold-start RNG draw counter (stream index)
 
     # -- internal -----------------------------------------------------------
+    def _flush(self, upto: float = float("inf")) -> None:
+        """Apply buffered releases with timestamp <= ``upto`` in
+        canonical (t, func_id, tid) order. Entries AT ``upto`` apply
+        before the caller's own operation (same-instant releases are
+        visible to a same-instant acquire — the canonical tie rule)."""
+        pending = self._pending
+        while pending and pending[0][0] <= upto:
+            t, fid, _tid, mem = heapq.heappop(pending)
+            self.release(fid, mem, t)
+
+    def _maybe_compact(self) -> None:
+        # Compact the lazy capacity heap when tombstones exceed half of
+        # it, so a long heavy-traffic run cannot accumulate one stale
+        # entry per completed invocation (acquires and reaps only
+        # tombstone; they never shrink the heap).
+        if len(self._cap_heap) > 64 and \
+                len(self._cap_heap) > 2 * self._n_idle:
+            self._rebuild_cap_heap()
+
     def _retire(self, c: _Warm, end: float) -> None:
         """Stop the memory meter for one container and drop it. The
         capacity-heap entry is tombstoned (live=False), not searched."""
@@ -213,6 +247,7 @@ class ContainerPool:
         A sandbox only satisfies a same-size request — FaaS functions
         have a fixed memory config, but nothing here assumes it, and a
         1 GB invocation must not "reuse" a 128 MB sandbox for free."""
+        self._flush(now)
         self._observe(func_id, now)
         q = self._idle.get(func_id)
         if q:
@@ -238,7 +273,9 @@ class ContainerPool:
             if hit is not None:
                 self._retire(hit, now)
                 self.warm_hits += 1
+                self._maybe_compact()
                 return True
+            self._maybe_compact()  # lazy reaps above tombstoned entries
         self.cold_starts += 1
         return False
 
@@ -254,7 +291,7 @@ class ContainerPool:
             self.dropped += 1
             return
         if self.idle_mb + mem_mb > self.cfg.capacity_mb:
-            self.evict_expired(now)
+            self._evict_expired(now)
             while self.idle_mb + mem_mb > self.cfg.capacity_mb:
                 self._evict_oldest(now)
         ka = self._keepalive_for(func_id, now)
@@ -267,20 +304,30 @@ class ContainerPool:
         heapq.heappush(self._cap_heap, (now, func_id, c.seq, c))
         if expires < self._min_expiry:
             self._min_expiry = expires
-        # Compact the lazy heap when tombstones dominate, so a long run
-        # with little capacity pressure cannot accumulate one stale
-        # entry per completed invocation.
-        if len(self._cap_heap) > 64 and \
-                len(self._cap_heap) > 4 * self._n_idle:
-            self._rebuild_cap_heap()
+        self._maybe_compact()
+
+    def release_at(self, func_id: int, mem_mb: float, now: float,
+                   tid: int) -> None:
+        """Buffered release, keyed (now, func_id, tid): the engine's
+        completion batches retire tasks per core, possibly out of
+        global time order; the buffer re-serializes their pool effects
+        canonically at the next flush (any read or mutation at or
+        after ``now``)."""
+        heapq.heappush(self._pending, (now, func_id, tid, mem_mb))
 
     def evict_expired(self, now: float) -> int:
         """Reap every container whose keep-alive lapsed; the memory
-        meter stops at the expiry instant, not at ``now``. O(1) while
-        nothing can have expired: ``_min_expiry`` lower-bounds every
-        live keep-alive (conservatively — acquire may remove the
-        minimum without raising it), so the common per-second sweep
-        over a quiet pool skips the walk entirely."""
+        meter stops at the expiry instant, not at ``now``."""
+        self._flush(now)
+        return self._evict_expired(now)
+
+    def _evict_expired(self, now: float) -> int:
+        """Reaper body (no flush: also runs from release under
+        capacity pressure, including while the buffer itself is being
+        flushed). O(1) while nothing can have expired: ``_min_expiry``
+        lower-bounds every live keep-alive (conservatively — acquire
+        may remove the minimum without raising it), so the common
+        per-second sweep over a quiet pool skips the walk entirely."""
         if now < self._min_expiry:
             return 0
         n = 0
@@ -302,12 +349,13 @@ class ContainerPool:
             else:
                 del self._idle[fid]
         self._min_expiry = nxt
+        self._maybe_compact()
         return n
 
     def settle(self, now: float) -> None:
         """Bring the memory-hold integral current (end-of-run, or before
         reading stats). Idempotent: still-idle containers re-anchor."""
-        self.evict_expired(now)
+        self.evict_expired(now)  # flushes deferred releases <= now first
         for q in self._idle.values():
             for c in q:
                 self.warm_mb_ms += max(0.0, now - c.idle_since) * c.mem_mb
@@ -319,8 +367,14 @@ class ContainerPool:
 
     # -- cold-start model ---------------------------------------------------
     def cold_start_ms(self, mem_mb: float) -> float:
-        """Sample the init delay a cold invocation pays. Deterministic
-        under a fixed seed and call sequence."""
+        """Sample the init delay a cold invocation pays. Draw number
+        ``n_draws`` of the pool's stream: cold starts happen on the
+        engine's serialized first-dispatch path in canonical event
+        order, so the counter indexes the stream reproducibly — a
+        completion batch never draws (releases are draw-free), which is
+        what keeps the stream identical however completions are
+        batched (DESIGN.md Sec. 13)."""
+        self.n_draws += 1
         m = expected_cold_ms(mem_mb, self.cfg.cold_base_ms,
                              self.cfg.cold_per_gb_ms)
         sigma = self.cfg.cold_jitter
@@ -330,14 +384,20 @@ class ContainerPool:
                                         sigma)
 
     # -- introspection ------------------------------------------------------
-    def warm_counts(self) -> dict[int, int]:
-        """func_id -> number of idle warm sandboxes (heartbeat payload)."""
+    def warm_counts(self, now: Optional[float] = None) -> dict[int, int]:
+        """func_id -> number of idle warm sandboxes (heartbeat payload).
+        Pass ``now`` to apply only deferred releases due by then;
+        without it ALL are applied — only safe when the pool is
+        quiescent or at a time past every buffered completion."""
+        self._flush(float("inf") if now is None else now)
         return {fid: len(q) for fid, q in self._idle.items()}
 
     def live_view(self, now: float) -> tuple[dict[int, int], float]:
         """(warm counts, warm MB) counting only unexpired sandboxes —
-        the heartbeat payload, computed WITHOUT mutating the pool (this
-        runs per node per routing decision)."""
+        the heartbeat payload. Applies deferred releases due at
+        ``now`` but never expires/evicts anything itself (this runs per
+        node per routing decision)."""
+        self._flush(now)
         counts: dict[int, int] = {}
         mb = 0.0
         for fid, q in self._idle.items():
@@ -350,10 +410,13 @@ class ContainerPool:
                 counts[fid] = k
         return counts, mb
 
-    def has_warm(self, func_id: int) -> bool:
+    def has_warm(self, func_id: int, now: Optional[float] = None) -> bool:
+        """See warm_counts: pass ``now`` unless the pool is quiescent."""
+        self._flush(float("inf") if now is None else now)
         return bool(self._idle.get(func_id))
 
     def stats(self) -> dict:
+        self._flush()
         total = self.warm_hits + self.cold_starts
         return {
             "warm_hits": self.warm_hits,
@@ -368,6 +431,7 @@ class ContainerPool:
 
     def check_invariants(self) -> None:
         """Raise if internal accounting drifted (test hook)."""
+        self._flush()
         total = sum(c.mem_mb for q in self._idle.values() for c in q)
         assert abs(total - self.idle_mb) < 1e-6, \
             f"idle_mb gauge {self.idle_mb} != actual {total}"
@@ -381,3 +445,9 @@ class ContainerPool:
             "capacity heap out of sync with the idle set"
         assert self._n_idle == len(live), \
             f"_n_idle gauge {self._n_idle} != actual {len(live)}"
+        # Tombstone bound: _maybe_compact caps the lazy heap at twice
+        # the live count (above the 64-entry floor), so stale entries
+        # cannot grow without bound in long heavy-traffic runs.
+        assert len(self._cap_heap) <= max(64, 2 * self._n_idle), \
+            (f"capacity heap {len(self._cap_heap)} entries for "
+             f"{self._n_idle} live containers — compaction not firing")

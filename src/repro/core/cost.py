@@ -17,6 +17,7 @@ bet that a warm hit saves more billed-init than the idle DRAM costs.
 """
 from __future__ import annotations
 
+import math
 from typing import Iterable, Optional, Sequence
 
 # AWS Lambda x86 pricing (https://aws.amazon.com/lambda/pricing/, 2024).
@@ -74,12 +75,19 @@ def workload_cost_usd(execution_ms: Iterable[float],
 
     With ``fixed_mem_mb`` set, prices every invocation at that size
     (Fig. 1 / Fig. 20 style); otherwise uses per-invocation sizes.
+
+    Summation is ``math.fsum`` (exactly rounded), so the total is
+    bit-identical under ANY permutation of the invocations — cost
+    roll-ups are order-canonical observables (DESIGN.md Sec. 13): the
+    engine may retire completions in batches, and the bill must not
+    depend on the order tasks arrived at the completed list.
     """
     if fixed_mem_mb is not None:
-        return sum(invocation_cost_usd(e, fixed_mem_mb) for e in execution_ms)
+        return math.fsum(invocation_cost_usd(e, fixed_mem_mb)
+                         for e in execution_ms)
     assert mem_mb is not None
-    return sum(invocation_cost_usd(e, m)
-               for e, m in zip(execution_ms, mem_mb))
+    return math.fsum(invocation_cost_usd(e, m)
+                     for e, m in zip(execution_ms, mem_mb))
 
 
 def cost_ladder(execution_ms: Sequence[float]) -> dict[int, float]:

@@ -31,6 +31,20 @@ organized for throughput without changing a single simulated outcome
   :meth:`Scheduler.fast_forward`: an analytic round loop that retires
   whole slice-expiry cycles with plain arithmetic, replicating the exact
   float operations the event path would perform (see hybrid.py).
+* Since the completion-batching overhaul (DESIGN.md Sec. 13), the
+  analytic fast-forward no longer stops at a task's own completion:
+  every observable that used to force completions through the heap is
+  order-canonical by construction (sorted roll-ups, fsum cost, the
+  container pool's deferred-release buffer, the adapter's buffered
+  observations), so a core may retire whole RUNS of completions —
+  complete, pick, slice, complete, ... — between barrier events, with
+  shared-state effects re-serialized canonically by (time, tie-key).
+  First dispatches batch too when no container pool is attached; with
+  a pool they still serialize through the heap, which keeps the
+  cold-start RNG stream indexed by canonical acquire order. Barriers
+  are policy-scoped: an arrival only stops the cores its placement can
+  touch, and a hybrid FIFO chunk is a barrier only when it will
+  actually migrate its task.
 """
 from __future__ import annotations
 
@@ -136,7 +150,7 @@ class Core:
         "cid", "task", "pending", "chunk_start", "chunk_work_start",
         "chunk_len", "chunk_rate", "group", "locked_until", "busy_ms",
         "last_task", "rq", "rq_seq", "min_vruntime", "preempt_count",
-        "busy_snapshot", "_rs_snap",
+        "busy_snapshot", "_rs_snap", "ff_w",
     )
 
     def __init__(self, cid: int, group: int = GROUP_FIFO):
@@ -158,6 +172,9 @@ class Core:
         self.preempt_count = 0
         self.busy_snapshot = 0.0
         self._rs_snap = 0.0
+        # Windowed fast-forward sizing hint: this core's last batch
+        # length (purely a performance hint, never affects outcomes).
+        self.ff_w = 1 << 20
 
     @property
     def nr_running(self) -> int:
@@ -194,6 +211,12 @@ class Scheduler:
     # Restricts the analytic fast-forward to lone-task cores; see
     # HybridScheduler._ff_solo_only for the subclass contract.
     _ff_solo_only = False
+    # Completion batching opt-out: a subclass whose on_complete hook is
+    # order-SENSITIVE across cores beyond the buffered adapter/pool
+    # channels (anything that must interleave with other cores' events
+    # in exact global time order) sets this False, and its completions
+    # serialize through the heap as before the batching overhaul.
+    _batch_complete = True
     # Core groups whose chunk expiries can touch OTHER cores' state
     # (the hybrid FIFO group migrates over-limit tasks into CFS
     # runqueues): their expiry instants are fast-forward barriers.
@@ -252,18 +275,28 @@ class Scheduler:
         # heartbeat snapshots would observe the future.
         self._hz = _INF
         # Fast-forward barrier instants: the times of every pending
-        # event that can interact with a core from outside — arrivals
-        # (placement reads every core, pushes into runqueues), timers
-        # (sampling, rightsizing, reaping), and barrier-group chunk
-        # expiries. Pure slice expiries on OTHER cores touch only their
-        # own core, so an analytic fast-forward may cross them; it must
-        # stop strictly before the next barrier. Stale times are popped
-        # lazily; tombstoned events leave a conservative barrier behind.
-        # Maintained only when a fast-forward can actually consume it
-        # (interference-rate chunks always decline), so FIFO/EDF and
-        # ghost-mode runs pay nothing on the arrival path.
+        # event that can interact with a core from outside — timers
+        # (sampling, rightsizing, reaping) and interacting chunk
+        # expiries (see _chunk_interacts) in ``_barriers``; arrivals in
+        # ``_arr_barriers``, consulted only for cores the policy's
+        # placement can actually touch (see _arrivals_touch: a hybrid
+        # arrival enters the FIFO group's global queue and never reads
+        # or mutates a CFS core). Pure slice expiries on OTHER cores
+        # touch only their own core, so an analytic fast-forward may
+        # cross them; it must stop strictly before the next barrier.
+        # Stale times are popped lazily; tombstoned events leave a
+        # conservative barrier behind. Maintained only when a
+        # fast-forward can actually consume it (interference-rate
+        # chunks always decline), so FIFO/EDF and ghost-mode runs pay
+        # nothing on the arrival path.
         self._barriers: list[float] = []
+        self._arr_barriers: list[float] = []
         self._use_ff = self._has_ff and interference_fn is None
+        # Latest instant a fast-forward batch retired a completion at;
+        # drain() reconciles the clock with it so end-of-run state
+        # matches the event-by-event engine even when the final
+        # completions never touched the heap.
+        self._ff_now = 0.0
 
     # -- event machinery ------------------------------------------------
     def _push(self, t: float, kind: int, payload) -> list:
@@ -290,23 +323,78 @@ class Scheduler:
         self.seq += 1
         heapq.heappush(self.heap, rec)
         if kind != CORE_EVT and self._use_ff:
-            heapq.heappush(self._barriers, t)
+            if kind == ARRIVAL:
+                heapq.heappush(self._arr_barriers, t)
+            else:
+                heapq.heappush(self._barriers, (t, self.seq, None, 0.0))
         return rec
+
+    def _chunk_barrier(self, core: Core, end: float) -> Optional[float]:
+        """Earliest instant at which the chunk just installed on
+        ``core`` — or anything this core does AFTER it, up to the next
+        event this core pushes — can touch ANOTHER core's state. None
+        when it never can. The returned time must be conservative (at
+        or before the true first interaction): fast-forward batches on
+        other cores run strictly before it. Policies refine this per
+        chunk (the hybrid: a budget-limited FIFO chunk migrates AT its
+        expiry; a completing one cannot trigger a migration earlier
+        than its expiry plus the full static budget a fresh pick
+        gets)."""
+        bg = self._barrier_groups
+        if bg is not None and core.group in bg:
+            return end
+        return None
+
+    def _arrival_barrier_offset(self, core: Core) -> float:
+        """How long after a pending ARRIVAL the earliest interaction
+        with ``core`` can happen. 0.0 for single-level policies: the
+        arrival's placement reads every core at its own instant. The
+        hybrid overrides for CFS cores — an arrival enters the FIFO
+        group's global queue and can only reach a CFS core via a later
+        budget-expiry migration."""
+        return 0.0
 
     def _push_core(self, core: Core, end: float) -> None:
         core.pending = self._push(end, CORE_EVT, core)
-        bg = self._barrier_groups
-        if bg is not None and self._use_ff and core.group in bg:
-            heapq.heappush(self._barriers, end)
+        if self._use_ff:
+            bt = self._chunk_barrier(core, end)
+            if bt is not None:
+                # Tagged with the chunk's identity (core, chunk_start):
+                # once this chunk is retired, its SUCCESSOR's barrier —
+                # registered when the successor is pushed, and provably
+                # no earlier than this one — supersedes it, so matured
+                # entries from long-retired chunks are skipped instead
+                # of pinning every batch to a stale conservative bound.
+                heapq.heappush(self._barriers,
+                               (bt, self.seq, core, core.chunk_start))
+                self.seq += 1
 
-    def _next_barrier(self, t: float) -> float:
-        """Earliest pending interacting event at/after ``t`` (every
-        event before ``t`` has been processed — the heap drains in time
-        order)."""
+    def _next_barrier(self, t: float, core: Optional[Core] = None) -> float:
+        """Earliest pending interacting instant at/after ``t`` that can
+        reach ``core`` (every event before ``t`` has been processed —
+        the heap drains in time order). ``core=None`` is conservative:
+        arrivals count immediately for everyone."""
         b = self._barriers
-        while b and b[0] < t:
-            heapq.heappop(b)
-        return b[0] if b else _INF
+        while b:
+            bt, _, c, cs = b[0]
+            if bt < t or (c is not None
+                          and (c.task is None or c.chunk_start != cs)):
+                heapq.heappop(b)   # past, or the tagged chunk retired
+            else:
+                break
+        bound = b[0][0] if b else _INF
+        # Drain stale arrival instants (events before t are done; the
+        # chunks they spawned registered their own barriers), then
+        # apply the policy's reach offset for this core.
+        a = self._arr_barriers
+        while a and a[0] < t:
+            heapq.heappop(a)
+        if a:
+            ab = a[0] if core is None else \
+                a[0] + self._arrival_barrier_offset(core)
+            if ab < bound:
+                bound = ab
+        return bound
 
     def run(self, tasks: list[Task]) -> "Scheduler":
         self.prime(tasks)
@@ -408,6 +496,11 @@ class Scheduler:
         heap = self.heap
         while heap:
             self._pop_event()
+        # Completion batches can retire the tail of the run without any
+        # heap traffic; land the clock where the last event-by-event
+        # pop would have (end-of-run settle/stats read self.now).
+        if self._ff_now > self.now:
+            self.now = self._ff_now
         return self
 
     # -- load snapshot (cluster dispatch) ---------------------------------
@@ -491,13 +584,36 @@ class Scheduler:
 
     def _complete(self, task: Task, t: float) -> None:
         """Single completion path: record, return the sandbox to the
-        warm pool, and fire the policy hook."""
+        warm pool, and fire the policy hook. The pool release is
+        DEFERRED (buffered keyed (t, func_id, tid)) so event-path and
+        batch-path completions share one canonical ordering; the pool
+        applies it before its next read at/after ``t``."""
         task.remaining = 0.0
         task.completion = t
         if self.containers is not None and task.aux_of is None:
-            self.containers.release(task.func_id, task.mem_mb, t)
+            self.containers.release_at(task.func_id, task.mem_mb, t,
+                                       task.tid)
         self.completed.append(task)
         self.on_complete(task, t)
+
+    def _retire_completion(self, core: Core, e: float) -> None:
+        """Batch-path twin of the event loop's completion processing:
+        the same float operations and hook order as `_run_core` +
+        `_complete`, minus the heap record. Pool releases and adapter
+        observations buffer and re-serialize canonically, so retiring
+        completions per core (possibly out of global time order across
+        cores) leaves every observable exactly as the heap path would
+        (DESIGN.md Sec. 13)."""
+        task = core.task
+        task.remaining -= core.chunk_len
+        task.cpu_time += core.chunk_len
+        core.busy_ms += e - core.chunk_start
+        core.task = None
+        core.last_task = task
+        self._complete(task, e)
+        self.n_events += 1
+        if e > self._ff_now:
+            self._ff_now = e
 
     def _interrupt(self, core: Core, t: float) -> Task:
         """Stop the running chunk early; returns the (partially run)
@@ -548,31 +664,45 @@ class Scheduler:
                 return
             ntask, limit = pick
             end = self._start_chunk(core, ntask, t, limit)
-            if self._use_ff and core.chunk_len < ntask.remaining:
+            if self._use_ff:
                 end = self.fast_forward(core, end, hz)
+                if end is None:
+                    # The batch retired the chain through its last
+                    # completion and the core went idle — there is no
+                    # in-flight chunk left to schedule.
+                    return
             if end < (heap[0][0] if heap else _INF) and end <= hz:
                 self.now = t = end
                 continue
             self._push_core(core, end)
             return
 
-    def fast_forward(self, core: Core, end: float, hz: float) -> float:
+    def fast_forward(self, core: Core, end: float, hz: float):
         """Analytic round fast-forward hook (DESIGN.md Sec. 13).
 
         Called with ``core`` mid-chunk (expiry at ``end``). A policy
         whose slice cycle is closed-form may retire any number of
         expiry rounds here with plain arithmetic — replicating the
         exact per-round float operations — and return the new in-flight
-        chunk's expiry. Rounds may cross OTHER cores' pending chunk
-        expiries (pure slice expiries touch only their own core) but
-        must stop strictly before the next interacting event
-        (:meth:`_next_barrier`), at or before the ``hz`` horizon, and
-        before the task's own completion — completions mutate shared
-        state (pool, adapter, the completed list) and must interleave
-        with other cores in exact time order, through the heap.
-        Must leave ALL observable state (task metrics, runqueue contents
-        and seq numbers, min_vruntime, busy accounting) exactly as the
-        event-by-event path would."""
+        chunk's expiry, or ``None`` when the batch retired the chain
+        through its final completion and left the core idle. Rounds may
+        cross OTHER cores' pending chunk expiries (pure slice expiries
+        touch only their own core) but must stop strictly before the
+        next interacting event (:meth:`_next_barrier`) and at or before
+        the ``hz`` horizon.
+
+        Completions NO LONGER bound a batch (``_batch_complete``):
+        their shared-state effects travel through order-canonical
+        channels — the pool's deferred-release buffer, the adapter's
+        buffered observations, the sorted/fsum roll-ups — and
+        re-serialize by (time, tie-key) at the next read. The one
+        shared effect with no such channel is a first dispatch's pool
+        acquire (hit/miss feeds timing; a miss draws the cold-start
+        RNG), so with a container pool attached a fresh task's pick
+        still stops the batch; without one, first dispatches batch and
+        only stamp ``first_run``. Must leave ALL observable state
+        (task metrics, runqueue contents and seq numbers, min_vruntime,
+        busy accounting) exactly as the event-by-event path would."""
         return end
 
     def dispatch(self, core: Core, t: float) -> None:
@@ -650,28 +780,105 @@ class Scheduler:
         pass
 
 
-def cfs_fast_forward(sched: Scheduler, core: Core, end: float,
-                     hz: float) -> float:
+def cfs_fast_forward(sched: Scheduler, core: Core, end: float, hz: float):
     """Shared precondition gate for CFS-style slice cycles, used by both
     the pure-CFS policy and the hybrid CFS group (the scheduler must
     expose ``sched_latency_ms`` / ``min_granularity_ms``). Validates
-    that the in-flight chunk is a full slice of the constant quantum,
-    honours ``_ff_solo_only``, and requires a barrier window wide enough
-    to batch at least one round before entering the round engine."""
+    that the in-flight chunk is a full slice of the constant quantum —
+    or the task's FINAL (completing) chunk, which enters the chain
+    driver directly — honours ``_ff_solo_only``, and requires a barrier
+    window wide enough to batch at least one round before entering the
+    round engine."""
     if sched.interference_fn is not None:
         return end
     rq = core.rq
     if rq and sched._ff_solo_only:
         return end
+    task = core.task
     nr = len(rq)
     s = max(sched.sched_latency_ms / (nr if nr else 1),
             sched.min_granularity_ms)
     if core.chunk_len != s:
-        return end
-    bound = sched._next_barrier(core.chunk_start)
-    if bound - end < s:
-        return end                   # window too short to batch a round
-    return cfs_round_fast_forward(sched, core, end, bound, hz, s)
+        # Not a full slice: the only other chunk CFS starts is the
+        # task's final partial chunk (run == remaining < s). Retire
+        # the completion chain from it when batching is on.
+        if not (sched._batch_complete
+                and task.remaining - core.chunk_len <= _EPS):
+            return end
+    elif task.remaining - s > _EPS:
+        bound = sched._next_barrier(core.chunk_start, core)
+        if bound - end < s:
+            return end               # window too short to batch a round
+        return _cfs_chain(sched, core, end, bound, hz, s)
+    elif not sched._batch_complete:
+        return end                   # full-slice chunk that completes
+    bound = sched._next_barrier(core.chunk_start, core)
+    return _cfs_chain(sched, core, end, bound, hz, s)
+
+
+def _cfs_chain(sched: Scheduler, core: Core, end: float, bound: float,
+               hz: float, s: float):
+    """Chain driver: alternate the closed-form slice-round engine with
+    analytic completion retirement until an interacting event, the
+    ``hz`` horizon, or a pick the batch may not perform (a fresh task's
+    first dispatch with a container pool attached).
+
+    Completion retirement replicates the event path exactly: retire the
+    final chunk, `_complete` (deferred pool release, completed append,
+    policy hook), then `pick_next` — pop the runqueue minimum, advance
+    ``min_vruntime``, recompute the slice for the shrunk queue, charge
+    the context switch, stamp ``first_run`` on a fresh pick (legal only
+    with no pool — the gate in the loop guarantees it) — and start the
+    next chunk with the same float expression `_start_chunk` uses.
+    Returns the new in-flight chunk's expiry, or None when the chain
+    drained the runqueue and the core went idle."""
+    eps = _EPS
+    batch_complete = sched._batch_complete
+    pool = sched.containers
+    lat = sched.sched_latency_ms
+    gran = sched.min_granularity_ms
+    ctx_ms = sched.ctx_switch_ms
+    while True:
+        task = core.task
+        if task.remaining - core.chunk_len > eps:
+            # Full-slice regime (chunk_len == s here by construction).
+            end = cfs_round_fast_forward(sched, core, end, bound, hz, s)
+            task = core.task         # the batch may have rotated tasks
+            if task.remaining - core.chunk_len > eps:
+                return end           # stopped at bound/hz/serialized pick
+        # The in-flight chunk completes its task at `end`.
+        if not (end < bound and end <= hz) or not batch_complete:
+            return end               # engine path processes the expiry
+        rq = core.rq
+        if rq and pool is not None and rq[0][2].first_run is None:
+            return end               # next pick serializes (pool + RNG)
+        sched._retire_completion(core, end)
+        if end < core.locked_until:
+            return None              # rightsizer lock: timer dispatches
+        if not rq:
+            return None              # queue drained: core idles at `end`
+        # -- pick_next, replicated -----------------------------------
+        vr, _seq, ntask = rq.pop(0)
+        if vr > core.min_vruntime:
+            core.min_vruntime = vr
+        nr = len(rq)
+        s = max(lat / (nr if nr else 1), gran)
+        ctx = ctx_ms if core.last_task is not ntask else 0.0
+        if ntask.first_run is None:
+            ntask.first_run = end    # no pool here: purely core-local
+        rem = ntask.remaining
+        run = rem if rem < s else s
+        if run < eps:
+            run = eps
+        core.task = ntask
+        core.chunk_start = end
+        core.chunk_work_start = end + ctx
+        core.chunk_len = run
+        core.chunk_rate = 1.0
+        if ctx > 0.0:
+            ntask.ctx_switches += 1
+            sched.total_ctx += 1
+        end = (end + ctx) + run      # same ops as _start_chunk, rate 1
 
 
 def cfs_round_fast_forward(sched: Scheduler, core: Core, end: float,
@@ -719,6 +926,7 @@ def cfs_round_fast_forward(sched: Scheduler, core: Core, end: float,
     rq_seq = core.rq_seq
     ctx_ms = sched.ctx_switch_ms
     charge_ctx = ctx_ms > 0.0
+    no_pool = sched.containers is None
     eps = _EPS
     last = core.last_task
     ctx_n = 0
@@ -729,18 +937,23 @@ def cfs_round_fast_forward(sched: Scheduler, core: Core, end: float,
             break                    # an interacting event intervenes
         nrem = task.remaining - s
         if nrem <= eps:
-            break                    # chunk completes; engine path handles
+            break                    # chunk completes; the chain driver
+            # (or the engine path, when batching is off) handles it
         vr = task.vruntime + s
         head = rq[0]
         if head[0] <= vr:
             ntask = head[2]
             if ntask.first_run is None:
-                # The pick would be this task's FIRST dispatch: that
-                # path stamps first_run and touches shared state
-                # (container acquire, cold-start RNG), which must
-                # interleave with other cores' pool operations in
-                # exact heap order.
-                break
+                if not no_pool:
+                    # The pick would be this task's FIRST dispatch:
+                    # with a pool that path acquires a sandbox (and on
+                    # a miss draws the cold-start RNG), which must
+                    # interleave with other cores' pool operations in
+                    # exact heap order.
+                    break
+                # No pool: a first dispatch only stamps first_run with
+                # the new chunk's start instant — purely core-local.
+                ntask.first_run = e
             # -- slice expiry at e: retire the in-flight chunk --------
             task.remaining = nrem
             task.cpu_time += s
@@ -805,6 +1018,228 @@ def cfs_round_fast_forward(sched: Scheduler, core: Core, end: float,
     return end
 
 
+# Windowed sub-round batching: queues deeper than _WINDOW_MIN use the
+# completion-aware windowed pass (setup O(window), completions retired
+# inline) instead of the full-queue cycle engine; windows evaluate 64
+# chunks first and escalate to _WINDOW when the whole window retires.
+_WINDOW_MIN = 256
+_WINDOW = 256
+
+
+def _window_fast_forward(sched: Scheduler, core: Core, task: Task,
+                         end: float, bound: float, hz: float, s: float):
+    """Sub-round vectorized batch — COMPLETIONS INCLUDED — over the
+    first ``_WINDOW`` picks of a DEEP runqueue.
+
+    Chunk i runs the i-th task of the rotation ([running] ++ queue
+    order): within one rotation every pick is distinct, so per-task
+    state needs no accumulation — one elementwise add/subtract
+    reproduces the event path's single float operation per task
+    exactly. Chunk lengths are ``min(remaining, s)``: a COMPLETING
+    chunk simply runs short, retires its task analytically (deferred
+    pool release, completed append, ``on_complete`` hook) and pushes
+    nothing back, while every other chunk is a full slice that pushes
+    ``vruntime + s`` at the tail. The chunk-end chain stays one exact
+    interleaved ``accumulate`` over (+ctx, +run_i), so the whole braid
+    — slices, completions, next picks — is evaluated in a handful of
+    O(window) array ops. This is what retires dense-queue completion
+    RUNS without per-event heap traffic (DESIGN.md Sec. 13).
+
+    Stops (exact, per chunk, on the accumulated values): an
+    interacting event at/after ``bound``; the ``hz`` horizon; a
+    non-completing push that would not land at the queue tail (the
+    same stability condition as the full-cycle engine); a pick whose
+    first dispatch must serialize (fresh task + container pool); the
+    slice leaving the constant-quantum regime (enough completions that
+    ``latency / nr > min_granularity``); any completion when the
+    policy opted out of completion batching. Returns the new in-flight
+    expiry, or ``None`` to decline to the scalar/driver path. A fully
+    retired window hands back to the chain driver, which re-enters —
+    stable stretches advance window by window at O(1) amortized setup
+    per chunk."""
+    rq = core.rq
+    no_pool = sched.containers is None
+    if not no_pool and rq[0][2].first_run is None:
+        return None                  # head pick is a serialized first
+        # dispatch: don't pay the window setup to learn c == 0
+    if end < core.locked_until:      # rightsizer lock pending: rare,
+        return None                  # let the event path sort it out
+    k1 = len(rq)
+    lat = sched.sched_latency_ms
+    gran = sched.min_granularity_ms
+    # Adaptive sizing: evaluation is pure until the commit, so a too-
+    # small window just costs one extra pass. Start from this core's
+    # last batch length (completion cadence is locally stable) and
+    # escalate to full width when the whole window retires.
+    wmax = min(_WINDOW, k1 - 1)
+    W = min(64, wmax) if core.ff_w < 56 else wmax
+    while True:
+        c, arrays = _window_eval(sched, core, task, end, bound, hz, s,
+                                 W, k1, lat, gran, no_pool)
+        if c >= W and W < wmax:
+            W = wmax                   # whole window retired: go wide
+            continue
+        break
+    core.ff_w = c
+    tasks_w, cum = arrays[0], arrays[7]
+    if c >= 2 and (
+            (not no_pool and tasks_w[c].first_run is None)
+            or (sched._batch_complete
+                and lat / (k1 - int(cum[c - 1])) > gran)):
+        # The stop is the pick of chunk c itself (a serialized first
+        # dispatch, or a slice that would no longer be s): the batch
+        # may not START that chunk either — leave the previous chunk
+        # in flight, like the scalar loop's break-before-pick.
+        c -= 1
+    if c < 2:
+        return None
+    return _window_commit(sched, core, task, end, s, c, arrays, no_pool)
+
+
+def _window_eval(sched, core, task, end, bound, hz, s, W, k1, lat, gran,
+                 no_pool):
+    """Pure evaluation half of the windowed pass: how many chunks of
+    the rotation can retire, and the exact value arrays the commit
+    needs. Mutates nothing."""
+    rq = core.rq
+    eps = _EPS
+    ctx_ms = sched.ctx_switch_ms
+    tasks_w = [task] + [rq[i][2] for i in range(W)]
+    rem0 = np.array([x.remaining for x in tasks_w])          # W + 1
+    vr0 = np.array([x.vruntime for x in tasks_w[:W]])
+    pushed = vr0 + s                 # one add per task, same op as the loop
+    rem_after = rem0[:W] - s
+    completing = rem_after <= eps    # full-slice finishers AND short rests
+    runs = np.minimum(rem0, s)       # chunk i's length = min(rem_i, s)
+    buf = np.empty(2 * W + 1)
+    buf[0] = end                     # chunk 0 (in flight) ends at `end`
+    buf[1::2] = ctx_ms
+    buf[2::2] = runs[1:]             # e_i = e_{i-1} + ctx + run_i
+    half = np.add.accumulate(buf)    # exact interleaved (+ctx, +run) chain
+    ends = half[0::2]                # e_0 .. e_W
+    ok = (ends[:W] < bound) & (ends[:W] <= hz)
+    cum = np.add.accumulate(completing)   # completions among chunks 0..i
+    if sched._batch_complete:
+        # Slice constancy: completions shrink the queue, and chunk i's
+        # pick granted slice s only while latency/nr <= min_granularity
+        # (the exact comparison slice_for flips on). nr at chunk i's
+        # pick counts completions strictly before chunk i.
+        slice_ok = np.empty(W, dtype=bool)
+        slice_ok[0] = True           # chunk 0 started before the batch
+        np.less_equal(lat / (k1 - cum[:-1]), gran, out=slice_ok[1:])
+        ok &= slice_ok
+    else:
+        ok &= ~completing            # completions serialize (opt-out)
+    # Stability: every NON-completing push must land at the queue tail
+    # (>= the running max of the original tail and every prior push).
+    pushed_eff = np.where(completing, -_INF, pushed)
+    prior = np.empty(W)
+    prior[0] = rq[-1][0]
+    np.maximum.accumulate(pushed_eff[:-1], out=prior[1:])
+    np.maximum(prior[1:], rq[-1][0], out=prior[1:])
+    ok &= completing | (pushed >= prior)
+    if not no_pool:
+        # A fresh task's first dispatch acquires a sandbox (and may
+        # draw the cold-start RNG): chunk i may not PICK a fresh task.
+        ok &= np.fromiter((x.first_run is not None
+                           for x in tasks_w[:W]), bool, W)
+    c = int(np.argmin(ok)) if not ok.all() else W
+    return c, (tasks_w, rem_after, completing, runs, pushed, ends, half,
+               cum)
+
+
+def _window_commit(sched, core, task, end, s, c, arrays, no_pool):
+    """Commit half of the windowed pass: apply ``c`` retired chunks and
+    start chunk ``c``. Bulk-converts the value arrays once (per-element
+    numpy indexing + float() is the single largest cost of the whole
+    pass at this batch size)."""
+    tasks_w, rem_after, completing, runs, pushed, ends, half, cum = arrays
+    rq = core.rq
+    eps = _EPS
+    ctx_ms = sched.ctx_switch_ms
+    charge_ctx = ctx_ms > 0.0
+    seq0 = core.rq_seq
+    comp_l = completing[:c].tolist()
+    rem_l = rem_after[:c].tolist()
+    run_l = runs[:c + 1].tolist()
+    push_l = pushed[:c].tolist()
+    ends_l = ends[:c].tolist()
+    pool = sched.containers
+    completed = sched.completed
+    if no_pool:
+        # Stamp BEFORE the retirement loop: a fresh task may complete
+        # in its very first chunk, and on_complete hooks read
+        # execution = completion - first_run.
+        for j in range(1, c + 1):    # in-flight pick included
+            x = tasks_w[j]
+            if x.first_run is None:
+                x.first_run = ends_l[j - 1]   # chunk j starts at e_{j-1}
+    npush = 0
+    ff_now = sched._ff_now
+    for j in range(c):
+        x = tasks_w[j]
+        if comp_l[j]:
+            e = ends_l[j]
+            x.cpu_time = x.cpu_time + run_l[j]
+            x.remaining = 0.0
+            x.completion = e
+            if pool is not None and x.aux_of is None:
+                pool.release_at(x.func_id, x.mem_mb, e, x.tid)
+            completed.append(x)
+            sched.on_complete(x, e)
+            if e > ff_now:
+                ff_now = e
+        else:
+            x.remaining = rem_l[j]
+            x.vruntime = push_l[j]
+            x.cpu_time = x.cpu_time + s
+            x.preemptions += 1
+            npush += 1
+        if charge_ctx and j:         # chunk j (j>=1) starts with a switch
+            x.ctx_switches += 1
+            sched.total_ctx += 1
+    sched._ff_now = ff_now
+    nxt_task = tasks_w[c]
+    if charge_ctx:
+        nxt_task.ctx_switches += 1   # the in-flight chunk's switch
+        sched.total_ctx += 1
+    # survivors: original entries c.. plus the non-completing pushes,
+    # in chunk order (each lands at the tail: checked above)
+    tail = []
+    seq = seq0
+    for i in range(c):
+        if not comp_l[i]:
+            tail.append((push_l[i], seq, tasks_w[i]))
+            seq += 1
+    core.rq = rq[c:] + tail
+    mv = rq[c - 1][0]                # last popped (original) entry
+    if mv > core.min_vruntime:
+        core.min_vruntime = mv
+    core.rq_seq = seq
+    core.preempt_count += npush
+    sched.n_events += c
+    d = np.empty(c)
+    d[0] = end - core.chunk_start
+    if c > 1:
+        np.subtract(ends[1:c], ends[0:c - 1], out=d[1:])
+    acc = np.empty(c + 1)
+    acc[0] = core.busy_ms
+    acc[1:] = d
+    core.busy_ms = float(np.add.accumulate(acc)[-1])
+    run = run_l[c]
+    ws = float(half[2 * c - 1])      # t + ctx, exact
+    e = float(ends[c])
+    if run < eps:                    # unreachable for queued tasks
+        run = eps                    # (remaining > eps), kept for parity
+        e = ws + run
+    core.task = nxt_task
+    core.last_task = tasks_w[c - 1]
+    core.chunk_start = ends_l[c - 1]
+    core.chunk_work_start = ws
+    core.chunk_len = run
+    return e
+
+
 def _cycle_fast_forward(sched: Scheduler, core: Core, task: Task,
                         end: float, bound: float, hz: float, s: float,
                         lim: float):
@@ -834,9 +1269,26 @@ def _cycle_fast_forward(sched: Scheduler, core: Core, task: Task,
     vr0 = task.vruntime
     if vr0 + s < rq[-1][0] or vr0 > rq[0][0]:
         return None
-    for ent in rq:
-        if ent[2].first_run is None:
-            return None              # first dispatches go through the heap
+    if k1 > _WINDOW_MIN:
+        # Deep queue: a batch usually stops well before one full
+        # rotation (a completion, or instability), so the full-queue
+        # O(k) setup below would swamp its own yield. The windowed
+        # sub-round pass keeps setup O(window) and retires completions
+        # inline; genuinely stable long cycles just retire window
+        # after window through the driver.
+        return _window_fast_forward(sched, core, task, end, bound, hz, s)
+    fresh = []
+    if sched.containers is None:
+        # First dispatches are core-local without a pool: stamp them at
+        # commit with their first chunk's start (task j's first chunk
+        # is chunk j). Sub-round commits (c < k) are routine, so only
+        # tasks whose first chunk actually ran (j <= c) get stamped.
+        fresh = [j for j, ent in enumerate(rq, start=1)
+                 if ent[2].first_run is None]
+    else:
+        for ent in rq:
+            if ent[2].first_run is None:
+                return None          # first dispatches go through the heap
     ctx_ms = sched.ctx_switch_ms
     eps = _EPS
     tasks = [task] + [ent[2] for ent in rq]   # cycle (pick) order
@@ -884,7 +1336,7 @@ def _cycle_fast_forward(sched: Scheduler, core: Core, task: Task,
         if c_stop < c_max or r_try >= r_cap:
             break
         r_try = min(r_cap, r_try * 8)
-    if c_stop < k:                   # not even one full round: scalar
+    if c_stop < 2:                   # nothing worth committing: scalar
         return None
     c = c_stop
     m[:, 0] = [x.cpu_time for x in tasks]
@@ -892,18 +1344,28 @@ def _cycle_fast_forward(sched: Scheduler, core: Core, task: Task,
     # -- commit: per-task state ---------------------------------------
     charge_ctx = ctx_ms > 0.0
     seq0 = core.rq_seq
-    for j, x in enumerate(tasks):
-        runs = c // k + (1 if j < c % k else 0)     # chunks j, j+k, ... < c
-        x.remaining = float(rem_arr[j, runs])
-        x.vruntime = float(vr_arr[j, runs])
-        x.cpu_time = float(cpu_arr[j, runs])
-        x.preemptions += runs
+    for j in fresh:
+        if j <= c:                   # task j's first chunk (index j) ran
+            tasks[j].first_run = float(ends[j - 1])
+    # A sub-round batch (c < k: a completion stopped the rotation)
+    # leaves tasks beyond index c untouched — skip their no-op writes;
+    # this loop is the vectorizer's main Python cost in deep queues.
+    ck, cr = c // k, c % k
+    for j in range(c + 1 if c < k else k):
+        x = tasks[j]
+        runs = ck + (1 if j < cr else 0)            # chunks j, j+k, ... < c
+        if runs:
+            x.remaining = float(rem_arr[j, runs])
+            x.vruntime = float(vr_arr[j, runs])
+            x.cpu_time = float(cpu_arr[j, runs])
+            x.preemptions += runs
         if charge_ctx:
             # batch-started chunks (1..c, in-flight included) with a
             # context switch, i.e. chunk indices congruent to j
-            starts = c // k if j == 0 else (c - j) // k + 1
-            x.ctx_switches += starts
-            sched.total_ctx += starts
+            starts = ck if j == 0 else (c - j) // k + 1
+            if starts:
+                x.ctx_switches += starts
+                sched.total_ctx += starts
     # busy: same (e_c - t_c) subtraction/addition sequence as the loop.
     d = np.empty(c)
     d[0] = end - core.chunk_start
@@ -913,13 +1375,15 @@ def _cycle_fast_forward(sched: Scheduler, core: Core, task: Task,
     acc[0] = core.busy_ms
     acc[1:] = d
     core.busy_ms = float(np.add.accumulate(acc)[-1])
-    # queue: entries C..C+k-2 of (original ++ pushed) survive — only
-    # the tail tuples are ever materialized (c >= k is guaranteed, so
-    # the survivors are all freshly pushed).
-    core.rq = [(float(pushed[i]), seq0 + i, tasks[i % k])
-               for i in range(c - k1, c)]
-    nxt_task = tasks[c % k]          # == (original ++ pushed)[c-1].task
-    mv = float(pushed[c - k])        # last popped value (nondecreasing)
+    # queue: entries C..C+k-2 of (original ++ pushed) survive. A batch
+    # shorter than one full round (a completion stops it mid-rotation)
+    # keeps a suffix of the ORIGINAL entries — their tuples are reused
+    # untouched — ahead of the freshly pushed tail.
+    core.rq = rq[c:] + [(float(pushed[i]), seq0 + i, tasks[i % k])
+                        for i in range(c - k1 if c > k1 else 0, c)]
+    nxt_task = tasks[c % k]          # the chunk-c pick
+    # last popped value = (original ++ pushed)[c-1] (pops nondecreasing)
+    mv = float(pushed[c - k]) if c >= k else rq[c - 1][0]
     if mv > core.min_vruntime:
         core.min_vruntime = mv
     core.rq_seq = seq0 + c

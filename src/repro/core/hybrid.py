@@ -21,12 +21,13 @@ migrations go through :meth:`HybridScheduler._set_group`.
 """
 from __future__ import annotations
 
+import heapq
 from bisect import bisect_left, insort
 from collections import deque
 from typing import Optional
 
-from .events import (GROUP_CFS, GROUP_FIFO, Core, Scheduler, Task,
-                     cfs_fast_forward)
+from .events import (_EPS, _INF, GROUP_CFS, GROUP_FIFO, Core, Scheduler,
+                     Task, cfs_fast_forward)
 
 
 def percentile(sorted_vals: list[float], pct: float) -> float:
@@ -46,14 +47,26 @@ class TimeLimitAdapter:
     """Sliding window (most recent ``window`` durations) percentile limit.
 
     The window deque is mirrored into an incrementally maintained sorted
-    list: ``record`` does one bisect-remove + one insort, and ``limit``
-    interpolates the cached percentile without sorting — the historical
-    implementation re-sorted the window on every call, on both the
-    per-completion and per-dispatch hot paths.
+    list: applying a sample does one bisect-remove + one insort, and
+    ``limit`` interpolates the cached percentile without sorting — the
+    historical implementation re-sorted the window on every call, on
+    both the per-completion and per-dispatch hot paths.
+
+    Batched observations (DESIGN.md Sec. 13): the engine's completion
+    batches retire tasks per core, possibly out of global time order.
+    :meth:`observe` BUFFERS a sample keyed ``(t, tid)``; samples enter
+    the window at the next flush — any ``limit``/``record`` at or
+    after their instant — in canonical time order. The window update
+    is therefore permutation-invariant within a batch: whichever
+    per-core batch ran first, the window (and the cached percentile
+    every FIFO dispatch reads) evolves identically, with same-instant
+    ties resolved by tid and buffered samples at instant ``t``
+    applying before any same-instant read.
 
     ``record_series=True`` (opt-in) retains the full ``(t, limit)``
-    trajectory for figure generation. Left off (the default), a
-    long heavy-traffic run holds only the fixed-size window instead of
+    trajectory for figure generation (appended at flush time, i.e. in
+    canonical sample order). Left off (the default), a long
+    heavy-traffic run holds only the fixed-size window instead of
     growing one tuple per completion forever.
     """
 
@@ -66,8 +79,9 @@ class TimeLimitAdapter:
         self.series: list[tuple[float, float]] = []
         self._sorted: list[float] = []
         self._cached: Optional[float] = None
+        self._pending: list[tuple[float, int, float]] = []  # (t, tid, dur)
 
-    def record(self, duration_ms: float, now: float) -> None:
+    def _apply(self, duration_ms: float, now: float) -> None:
         w = self.window
         if len(w) == w.maxlen:
             # deque(maxlen) is about to drop the oldest sample; drop its
@@ -78,14 +92,37 @@ class TimeLimitAdapter:
         insort(self._sorted, duration_ms)
         self._cached = None
         if self.record_series:
-            self.series.append((now, self.limit()))
+            self.series.append((now, self._limit_value()))
 
-    def limit(self) -> float:
+    def observe(self, duration_ms: float, now: float, tid: int) -> None:
+        """Batch entry point: buffer one completion's duration; it
+        enters the window at the next flush at/after ``now``."""
+        heapq.heappush(self._pending, (now, tid, duration_ms))
+
+    def flush(self, upto: Optional[float] = None) -> None:
+        """Apply buffered samples with t <= ``upto`` (all, if None) in
+        canonical (t, tid) order."""
+        pending = self._pending
+        while pending and (upto is None or pending[0][0] <= upto):
+            t, _tid, dur = heapq.heappop(pending)
+            self._apply(dur, t)
+
+    def record(self, duration_ms: float, now: float) -> None:
+        """Immediate-path record: flushes due buffered samples first so
+        the window stays in canonical time order."""
+        self.flush(now)
+        self._apply(duration_ms, now)
+
+    def _limit_value(self) -> float:
         if not self._sorted:
             return self.initial_ms
         if self._cached is None:
             self._cached = percentile(self._sorted, self.pct)
         return self._cached
+
+    def limit(self, now: Optional[float] = None) -> float:
+        self.flush(now)
+        return self._limit_value()
 
 
 class Rightsizer:
@@ -137,6 +174,7 @@ class HybridScheduler(Scheduler):
         self.sched_latency_ms = sched_latency_ms
         self.min_granularity_ms = min_granularity_ms
         self.fifo_queue: deque[Task] = deque()
+        self._fifo_requeued = False  # degenerate requeue seen: see below
         self._groups: dict[int, list[Core]] = {GROUP_FIFO: [], GROUP_CFS: []}
         for i, core in enumerate(self.cores):
             core.group = GROUP_FIFO if i < n_fifo else GROUP_CFS
@@ -167,9 +205,12 @@ class HybridScheduler(Scheduler):
                 return
         lst.append(core)
 
-    def time_limit(self) -> float:
+    def time_limit(self, t: Optional[float] = None) -> float:
         if self.adapter is not None:
-            return self.adapter.limit()
+            # Flush buffered completion samples due at t so the limit
+            # reflects every completion before this instant, whatever
+            # batch produced them (None: flush all — end-of-run reads).
+            return self.adapter.limit(t)
         return self.static_limit_ms
 
     def global_queue_len(self) -> int:
@@ -198,7 +239,7 @@ class HybridScheduler(Scheduler):
             if self.fifo_queue:
                 task = self.fifo_queue.popleft()
                 # Remaining budget before this task must migrate to CFS.
-                budget = max(self.time_limit() - task.cpu_time, 0.01)
+                budget = max(self.time_limit(t) - task.cpu_time, 0.01)
                 return task, budget
             return None
         if core.rq:
@@ -210,12 +251,99 @@ class HybridScheduler(Scheduler):
         nr = max(1, core.nr_running)
         return max(self.sched_latency_ms / nr, self.min_granularity_ms)
 
-    def fast_forward(self, core: Core, end: float, hz: float) -> float:
-        # Analytic CFS round fast-forward for the CFS group. FIFO-group
-        # chunks run to a (variable) budget and are not slice cycles.
-        if core.group != GROUP_CFS:
+    # -- fast-forward (DESIGN.md Sec. 13) ---------------------------------
+    #
+    # The only way the FIFO group reaches a CFS core is a budget-expiry
+    # migration, and the global queue holds only FRESH tasks (cpu_time
+    # 0: over-limit tasks migrate to CFS, never back — _migrate_to_cfs's
+    # degenerate no-CFS-cores fallback would break that and trips
+    # _fifo_requeued, conservatively disabling the relaxations). So
+    # with a STATIC limit, nothing a completing FIFO chunk (or a
+    # pending arrival) leads to can touch a CFS core earlier than its
+    # own instant plus the full static budget every fresh pick gets —
+    # CFS batches may run deep into the FIFO group's completion churn
+    # and the arrival stream. With the adapter the budget at a future
+    # pick is unknowable at push time: fall back to the chunk's own
+    # expiry (the pre-batching conservative barrier).
+    def _chunk_barrier(self, core: Core, end: float):
+        if core.group != GROUP_FIFO:
+            return None
+        if core.task.remaining - core.chunk_len > _EPS:
+            return end               # budget expiry: migrates AT end
+        if self.adapter is not None or self._fifo_requeued:
             return end
+        return end + self.static_limit_ms
+
+    def _arrival_barrier_offset(self, core: Core) -> float:
+        if core.group == GROUP_FIFO:
+            return 0.0               # arrival may dispatch this core now
+        if self.adapter is not None or self._fifo_requeued:
+            return 0.0
+        return self.static_limit_ms
+
+    def fast_forward(self, core: Core, end: float, hz: float):
+        if core.group != GROUP_CFS:
+            return self._fifo_chain_ff(core, end, hz)
         return cfs_fast_forward(self, core, end, hz)
+
+    def _fifo_chain_ff(self, core: Core, end: float, hz: float):
+        """Budget-chunk chain on a FIFO-group core: retire a run of
+        run-to-completion chunks (queued tasks whose remaining service
+        fits their budget) without heap traffic.
+
+        Sound only when a chunk's bookkeeping cannot read state that
+        another core's pending event might change first: a STATIC time
+        limit (with the adapter, budgets read the completion-ordered
+        percentile window at pick time — and other cores' not-yet-run
+        batches may still owe samples from earlier instants) and no
+        container pool (every FIFO pick is a first dispatch, whose
+        acquire must serialize). Bounded by the HEAP TOP, not the
+        barrier heap: any other core's chunk end may pop the shared
+        global queue, so the chain stops strictly before every pending
+        event."""
+        if (self.adapter is not None or self.containers is not None
+                or not self._batch_complete):
+            return end
+        task = core.task
+        if task.remaining - core.chunk_len > _EPS:
+            return end               # budget-limited: expiry migrates
+        nxt = self.heap[0][0] if self.heap else _INF
+        eps = _EPS
+        ctx_ms = self.ctx_switch_ms
+        queue = self.fifo_queue
+        limit = self.static_limit_ms
+        while True:
+            if not (end < nxt and end <= hz):
+                return end           # engine path processes the expiry
+            self._retire_completion(core, end)
+            if end < core.locked_until:
+                return None          # unlock timer will dispatch
+            if not queue:
+                return None          # core idles at `end`
+            # -- pick_next (FIFO branch), replicated ------------------
+            ntask = queue.popleft()
+            budget = max(limit - ntask.cpu_time, 0.01)
+            ctx = ctx_ms if core.last_task is not ntask else 0.0
+            if ntask.first_run is None:
+                ntask.first_run = end    # no pool: core-local stamp
+            rem = ntask.remaining
+            run = rem if rem < budget else budget
+            if run < eps:
+                run = eps
+            core.task = ntask
+            core.chunk_start = end
+            core.chunk_work_start = end + ctx
+            core.chunk_len = run
+            core.chunk_rate = 1.0
+            if ctx > 0.0:
+                ntask.ctx_switches += 1
+                self.total_ctx += 1
+            end = (end + ctx) + run  # same ops as _start_chunk, rate 1
+            if rem - run > eps:
+                # Budget-limited chunk: its expiry migrates the task
+                # into a CFS runqueue — through the heap, with a
+                # barrier (_chunk_interacts), in exact time order.
+                return end
 
     def on_chunk_limit(self, core: Core, task: Task, t: float) -> None:
         if core.group == GROUP_FIFO:
@@ -234,6 +362,9 @@ class HybridScheduler(Scheduler):
     def _migrate_to_cfs(self, task: Task, t: float) -> None:
         cfs = self.cfs_cores
         if not cfs:  # degenerate (rightsizer keeps >=1, but be safe)
+            # A partially-run task in the global queue voids the
+            # fresh-tasks-only premise behind the relaxed barriers.
+            self._fifo_requeued = True
             self.fifo_queue.append(task)
             return
         target = cfs[self._rr_cfs % len(cfs)]
@@ -244,7 +375,10 @@ class HybridScheduler(Scheduler):
 
     def on_complete(self, task: Task, t: float) -> None:
         if self.adapter is not None:
-            self.adapter.record(task.execution, t)
+            # Buffered: completion batches may deliver these out of
+            # global time order; the adapter re-serializes at the next
+            # limit() read (canonical (t, tid) order).
+            self.adapter.observe(task.execution, t, task.tid)
 
     # -- rightsizing ---------------------------------------------------------
     def on_timer(self, payload, t: float) -> None:

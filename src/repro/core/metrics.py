@@ -7,9 +7,17 @@ tasks only, with the failure count reported separately. With the
 container layer attached, the summary additionally reports cold-start
 counts, the billed-init share of the bill, and the provider-side cost of
 holding the warm pool.
+
+Every roll-up here is ORDER-CANONICAL (DESIGN.md Sec. 13): finished
+tasks are viewed in (completion, tid) order regardless of how the list
+was assembled, and cost sums are exactly rounded (``math.fsum``), so
+summaries are bit-identical under any permutation of ``tasks``. This is
+what lets the engine retire completions in batches: the completed list
+is no longer required to be in heap-processing order.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from functools import cached_property
 from typing import Optional
@@ -36,13 +44,17 @@ class SimResult:
     # -- task views ---------------------------------------------------------
     @cached_property
     def _finished(self) -> list[Task]:
-        return [t for t in self.tasks if t.completion is not None]
+        return sorted((t for t in self.tasks if t.completion is not None),
+                      key=lambda t: (t.completion, t.tid))
 
     def finished_tasks(self) -> list[Task]:
-        """Tasks with defined metrics; roll-ups skip the rest (failed
-        invocations that never completed end up in ``failed``, but be
-        defensive against callers who merge the lists). Cached:
-        ``summary()`` walks this ~8 times per sweep cell."""
+        """Tasks with defined metrics, in CANONICAL (completion, tid)
+        order — every derived vector/percentile/sum is therefore
+        invariant under permutations of ``self.tasks``. Roll-ups skip
+        the rest (failed invocations that never completed end up in
+        ``failed``, but be defensive against callers who merge the
+        lists). Cached: ``summary()`` walks this ~8 times per sweep
+        cell."""
         return self._finished
 
     # -- metric vectors (ms) ------------------------------------------------
@@ -66,7 +78,8 @@ class SimResult:
                 for m in ("response", "execution", "turnaround")}
 
     def makespan(self) -> float:
-        return max(t.completion for t in self.finished_tasks())
+        # finished_tasks is sorted by (completion, tid): last wins.
+        return self.finished_tasks()[-1].completion
 
     def total_preemptions(self) -> int:
         return sum(t.preemptions for t in self.tasks)
@@ -80,9 +93,10 @@ class SimResult:
         return (self.cold_starts() / len(done)) if done else 0.0
 
     def init_cost_usd(self) -> float:
-        """The cold-start share of the user-facing bill."""
-        return sum(cold_start_cost_usd(t.init_ms, t.mem_mb)
-                   for t in self.finished_tasks() if t.cold_start)
+        """The cold-start share of the user-facing bill (fsum over the
+        canonical task order: permutation-invariant)."""
+        return math.fsum(cold_start_cost_usd(t.init_ms, t.mem_mb)
+                         for t in self.finished_tasks() if t.cold_start)
 
     def warm_hold_usd(self) -> float:
         """Provider-side cost of the idle warm set over the run."""
@@ -137,6 +151,7 @@ def collect(sched: Scheduler, policy: str) -> SimResult:
     migrations = None
     adapter = getattr(sched, "adapter", None)
     if adapter is not None:
+        adapter.flush()  # apply any still-buffered completion samples
         limit_series = adapter.series
     rs = getattr(sched, "rightsizer", None)
     if rs is not None:

@@ -62,52 +62,60 @@ class FIFOPreempt(FIFO):
         core.preempt_count += 1
         self.queue.append(task)  # to the END of the global queue
 
-    def fast_forward(self, core: Core, end: float, hz: float) -> float:
+    def fast_forward(self, core: Core, end: float, hz: float):
         # A lone task with an empty global queue cycles append ->
-        # popleft with itself: retire whole quantum rounds analytically.
-        # Every core shares the global queue, so ANY other pending event
-        # (including other cores' expiries, which may queue their task)
-        # bounds the loop — the heap top, not just the barrier heap.
+        # popleft with itself: retire whole quantum rounds analytically,
+        # then the final completion (the queue is empty, so the core
+        # goes idle — no pick can follow). Every core shares the global
+        # queue, so ANY other pending event (including other cores'
+        # expiries, which may queue their task) bounds the loop — the
+        # heap top, not just the barrier heap.
         if self.queue or self.interference_fn is not None:
             return end
         q = self.quantum_ms
-        if core.chunk_len != q:
-            return end
-        nxt = self.heap[0][0] if self.heap else float("inf")
         task = core.task
-        t = core.chunk_start
-        e = end
-        busy = core.busy_ms
-        n = 0
-        cur_run = q
-        while True:
-            if not (e < nxt and e <= hz):
-                break
-            nrem = task.remaining - q
-            if nrem <= _EPS:
-                break                # chunk completes; engine path handles
-            task.remaining = nrem
-            task.cpu_time += q
-            busy += e - t
-            task.preemptions += 1
-            n += 1
-            run = nrem if nrem < q else q
-            if run < _EPS:
-                run = _EPS
-            t = e
-            e = t + 0.0 + run        # ctx == 0: same task keeps the core
-            cur_run = run
-            if run != q:
-                break                # final partial chunk is in flight
-        if n:
-            core.last_task = task
-            core.chunk_start = t
-            core.chunk_work_start = t + 0.0
-            core.chunk_len = cur_run
-            core.busy_ms = busy
-            core.preempt_count += n
-            self.n_events += n
-            return e
+        nxt = self.heap[0][0] if self.heap else float("inf")
+        if core.chunk_len == q and task.remaining - q > _EPS:
+            t = core.chunk_start
+            e = end
+            busy = core.busy_ms
+            n = 0
+            cur_run = q
+            while True:
+                if not (e < nxt and e <= hz):
+                    break
+                nrem = task.remaining - q
+                if nrem <= _EPS:
+                    break            # chunk completes; retired below
+                task.remaining = nrem
+                task.cpu_time += q
+                busy += e - t
+                task.preemptions += 1
+                n += 1
+                run = nrem if nrem < q else q
+                if run < _EPS:
+                    run = _EPS
+                t = e
+                e = t + 0.0 + run    # ctx == 0: same task keeps the core
+                cur_run = run
+                if run != q:
+                    break            # final partial chunk is in flight
+            if n:
+                core.last_task = task
+                core.chunk_start = t
+                core.chunk_work_start = t + 0.0
+                core.chunk_len = cur_run
+                core.busy_ms = busy
+                core.preempt_count += n
+                self.n_events += n
+                end = e
+        # Retire the chain's completion when it lands before every
+        # other pending event: queue empty means the core idles after.
+        if (self._batch_complete
+                and task.remaining - core.chunk_len <= _EPS
+                and end < nxt and end <= hz):
+            self._retire_completion(core, end)
+            return None
         return end
 
 

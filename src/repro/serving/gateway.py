@@ -16,6 +16,7 @@ or failed device lane — Sec. "fault tolerance" in DESIGN.md).
 from __future__ import annotations
 
 import copy
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -103,11 +104,12 @@ class GatewayResult:
     redispatches: int = 0
 
     def cost_usd(self) -> float:
-        total = 0.0
-        for t in self.sim.tasks:
-            total += (t.execution / 1000.0) * (t.mem_mb / 1024.0) \
-                * PRICE_PER_GB_SECOND + PRICE_PER_REQUEST
-        return total
+        # fsum over the canonical finished-task order: the bill is
+        # bit-identical under any permutation of the completed list.
+        return math.fsum(
+            (t.execution / 1000.0) * (t.mem_mb / 1024.0)
+            * PRICE_PER_GB_SECOND + PRICE_PER_REQUEST
+            for t in self.sim.finished_tasks())
 
     def summary(self) -> dict:
         s = self.sim.summary()

@@ -1,0 +1,155 @@
+"""Order-canonical observables (DESIGN.md Sec. 13).
+
+The engine is allowed to retire completions in batches, which means the
+ORDER of the completed-task lists handed to the roll-ups is an
+implementation detail, not part of the simulation's semantics. These
+tests pin the contract that makes that legal: every metric and cost
+roll-up on ``SimResult`` / ``ClusterResult`` must be BIT-IDENTICAL
+under any permutation of the completed-task list(s).
+
+The deterministic seeded tests always run; when hypothesis is
+installed (the ``[test]`` extra) the same properties are additionally
+fuzzed over generated task lists.
+"""
+import math
+import random
+
+import pytest
+
+from repro.cluster.metrics import ClusterResult
+from repro.core.cost import cost_ladder, invocation_cost_usd, workload_cost_usd
+from repro.core.events import Task
+from repro.core.metrics import SimResult
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tier needs the [test] extra
+    HAVE_HYPOTHESIS = False
+
+
+def _mk_finished(rng, n, tie_every=3):
+    """Messy finished tasks, deliberately including exact completion
+    TIES (same-instant batches are where order canon matters most) and
+    cold starts."""
+    tie = rng.uniform(0.0, 1e6)
+    out = []
+    for tid in range(n):
+        arrival = rng.uniform(0.0, 1e6)
+        service = rng.uniform(0.1, 1e5)
+        t = Task(tid=tid, arrival=arrival, service=service,
+                 mem_mb=rng.choice([128, 256, 512, 1024]))
+        t.first_run = arrival + rng.uniform(0.0, 1e4)
+        t.completion = tie if tid % tie_every == 0 \
+            else t.first_run + service
+        t.cpu_time = service
+        t.preemptions = rng.randrange(50)
+        if rng.random() < 0.5:
+            t.cold_start = True
+            t.init_ms = rng.uniform(1.0, 5e3)
+        out.append(t)
+    return out
+
+
+def _result(tasks):
+    return SimResult(policy="cfs", tasks=tasks,
+                     container_stats={"warm_mb_ms": 1.0})
+
+
+def _check_sim_invariance(tasks, rng):
+    base = _result(list(tasks))
+    shuffled = list(tasks)
+    rng.shuffle(shuffled)
+    perm = _result(shuffled)
+    assert perm.summary() == base.summary()  # bit-identical floats
+    assert perm.cost_usd() == base.cost_usd()
+    assert perm.cost_usd(fixed_mem_mb=512) == base.cost_usd(fixed_mem_mb=512)
+    assert perm.cost_ladder() == base.cost_ladder()
+    assert perm.init_cost_usd() == base.init_cost_usd()
+    assert perm.p99() == base.p99()
+
+
+def _cluster(node_task_lists):
+    nodes = [SimResult(policy="cfs", tasks=ts) for ts in node_task_lists]
+    return ClusterResult(node_results=nodes,
+                         node_ids=[f"n{i}" for i in range(len(nodes))],
+                         node_policies=["cfs"] * len(nodes),
+                         dispatcher="least_loaded", cores_per_node=4)
+
+
+def _check_cluster_invariance(node_lists, rng):
+    # Unique tids fleet-wide: the canonical sort's tie-breaker must
+    # identify tasks uniquely.
+    tid = 0
+    for ts in node_lists:
+        for t in ts:
+            t.tid = tid
+            tid += 1
+    base = _cluster([list(ts) for ts in node_lists])
+    shuffled = [list(ts) for ts in node_lists]
+    for ts in shuffled:
+        rng.shuffle(ts)
+    perm = _cluster(shuffled)
+    assert perm.summary() == base.summary()
+    assert perm.cost_usd() == base.cost_usd()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_simresult_rollups_permutation_invariant(seed):
+    rng = random.Random(seed)
+    _check_sim_invariance(_mk_finished(rng, rng.randrange(1, 40)), rng)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_cluster_rollups_permutation_invariant(seed):
+    rng = random.Random(1000 + seed)
+    node_lists = [_mk_finished(rng, rng.randrange(1, 15))
+                  for _ in range(rng.randrange(1, 5))]
+    _check_cluster_invariance(node_lists, rng)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_workload_cost_usd_permutation_invariant(seed):
+    rng = random.Random(2000 + seed)
+    pairs = [(rng.uniform(0.1, 1e6), rng.choice([128, 256, 512, 1024]))
+             for _ in range(rng.randrange(1, 64))]
+    base = workload_cost_usd((e for e, _ in pairs),
+                             mem_mb=[m for _, m in pairs])
+    shuffled = list(pairs)
+    rng.shuffle(shuffled)
+    assert workload_cost_usd((e for e, _ in shuffled),
+                             mem_mb=[m for _, m in shuffled]) == base
+    # exactly-rounded total, not merely order-stable
+    assert base == math.fsum(invocation_cost_usd(e, m) for e, m in pairs)
+    assert cost_ladder([e for e, _ in pairs]) == \
+        cost_ladder([e for e, _ in shuffled])
+
+
+def test_finished_tasks_sorted_by_completion_then_tid():
+    a = Task(tid=3, arrival=0.0, service=1.0)
+    b = Task(tid=1, arrival=0.0, service=1.0)
+    c = Task(tid=2, arrival=0.0, service=1.0)
+    a.completion = b.completion = 10.0  # exact tie: tid breaks it
+    c.completion = 5.0
+    a.first_run = b.first_run = c.first_run = 1.0
+    res = SimResult(policy="fifo", tasks=[a, b, c])
+    assert [t.tid for t in res.finished_tasks()] == [2, 1, 3]
+    assert res.makespan() == 10.0
+
+
+if HAVE_HYPOTHESIS:
+    _times = st.floats(0.0, 1e6, allow_nan=False, allow_infinity=False)
+
+    @given(st.integers(1, 40), st.randoms(use_true_random=False),
+           st.integers(0, 2**32 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_simresult_rollups_permutation_invariant_fuzz(n, rng, seed):
+        _check_sim_invariance(_mk_finished(random.Random(seed), n), rng)
+
+    @given(st.lists(st.integers(1, 15), min_size=1, max_size=4),
+           st.randoms(use_true_random=False), st.integers(0, 2**32 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_cluster_rollups_permutation_invariant_fuzz(sizes, rng, seed):
+        gen = random.Random(seed)
+        _check_cluster_invariance([_mk_finished(gen, n) for n in sizes],
+                                  rng)

@@ -99,6 +99,79 @@ def test_cold_start_model_scales_with_memory():
     assert np.mean(draws) == pytest.approx(expected_cold_ms(512), rel=0.25)
 
 
+def test_capacity_heap_tombstones_are_compacted():
+    """Long heavy-traffic run with no capacity pressure: every acquire
+    tombstones a heap entry; the lazy heap must stay within 2x the live
+    count instead of growing one stale entry per completion."""
+    p = _pool(capacity_mb=1e9, keepalive_ms=1e12)
+    for i in range(5_000):
+        fid = i % 7
+        p.acquire(fid, 256, float(i))
+        p.release(fid, 256, float(i) + 0.5)
+    assert len(p._cap_heap) <= max(64, 2 * p._n_idle)
+    p.check_invariants()
+    # and the reaper path compacts too
+    q = _pool(capacity_mb=1e9, keepalive_ms=10.0, sweep_ms=0.0)
+    for i in range(2_000):
+        q.release(i, 256, float(i) * 100.0)
+        q.evict_expired(float(i) * 100.0 + 50.0)
+    assert len(q._cap_heap) <= max(64, 2 * q._n_idle)
+    q.check_invariants()
+
+
+def test_deferred_releases_apply_in_canonical_time_order():
+    """release_at buffers; effects land at the next read at/after t in
+    (t, func_id, tid) order, regardless of call order."""
+    p = _pool(capacity_mb=1e9, keepalive_ms=1e9)
+    # Buffer out of call order: later time first.
+    p.release_at(1, 256, 200.0, tid=7)
+    p.release_at(1, 256, 100.0, tid=3)
+    # A read at t=150 applies only the t=100 release.
+    counts, mb = p.live_view(150.0)
+    assert counts == {1: 1} and mb == 256
+    assert p.acquire(1, 256, 150.0)          # the t=100 sandbox, warm
+    assert not p.acquire(1, 256, 160.0)      # t=200 not yet visible
+    assert p.acquire(1, 256, 250.0)          # now it is
+    p.check_invariants()
+
+
+def test_deferred_release_visible_to_same_instant_acquire():
+    """Canonical same-instant rule: a buffered release at t applies
+    BEFORE an acquire at the same t (ties keyed (func_id, tid), not
+    call order)."""
+    p = _pool(capacity_mb=1e9, keepalive_ms=1e9)
+    p.release_at(4, 512, 1_000.0, tid=1)
+    assert p.acquire(4, 512, 1_000.0)
+    p.check_invariants()
+
+
+def test_deferred_releases_equivalent_to_direct_when_in_order():
+    """Routing every release through the buffer must reproduce the
+    direct-release pool bit-for-bit when times are already ordered —
+    the engine's serialized path and batch path share one semantics."""
+    cfg = dict(capacity_mb=1000, keepalive_ms=700.0)
+    direct, buffered = _pool(**cfg), _pool(**cfg)
+    seq = [(i * 50.0, i % 5, 256) for i in range(200)]
+    hits_d, hits_b = [], []
+    for t, fid, mem in seq:
+        hits_d.append(direct.acquire(fid, mem, t))
+        direct.release(fid, mem, t + 25.0)
+        hits_b.append(buffered.acquire(fid, mem, t))
+        buffered.release_at(fid, mem, t + 25.0, tid=int(t))
+    assert hits_d == hits_b
+    direct.settle(10_001.0)
+    buffered.settle(10_001.0)
+    assert direct.stats() == buffered.stats()
+
+
+def test_cold_start_draw_counter_indexes_stream():
+    p = ContainerPool(ContainerConfig(cold_jitter=0.5), seed=9)
+    draws = [p.cold_start_ms(256) for _ in range(5)]
+    assert p.n_draws == 5
+    q = ContainerPool(ContainerConfig(cold_jitter=0.5), seed=9)
+    assert [q.cold_start_ms(256) for _ in range(5)] == draws
+
+
 def test_histogram_keepalive_tracks_interarrival_times():
     cfg = ContainerConfig(policy="histogram", keepalive_ms=1e9,
                           hist_min_ms=100.0, hist_max_ms=4_000.0)

@@ -143,6 +143,33 @@ def test_container_pool_invariants(cfg, ops, seed):
 
 
 @settings(max_examples=40, deadline=None)
+@given(pool_cfgs, pool_ops, st.integers(0, 3))
+def test_deferred_releases_match_direct_releases(cfg, ops, seed):
+    """Routing releases through the release_at buffer (times already
+    monotone, as the event path guarantees) is observably identical to
+    direct release calls — the deferred path is pure re-serialization,
+    never a semantic fork. Also exercises the tombstone-compaction
+    bound via check_invariants inside _drive."""
+    direct = ContainerPool(cfg, seed=seed)
+    trace = _drive(direct, ops)
+    buffered = ContainerPool(cfg, seed=seed)
+    now, btrace, tid = 0.0, [], 0
+    for dt, fid, mem, kind in ops:
+        now += dt
+        if kind == 2:
+            btrace.append(("sweep", buffered.evict_expired(now)))
+            continue
+        btrace.append(("hit", buffered.acquire(fid, mem, now)))
+        if kind == 0:
+            buffered.release_at(fid, mem, now, tid)
+            tid += 1
+        buffered.check_invariants()
+    buffered.settle(now)
+    btrace.append(("stats", tuple(sorted(buffered.stats().items()))))
+    assert btrace == trace
+
+
+@settings(max_examples=40, deadline=None)
 @given(st.floats(0.0, 20_000.0), st.floats(0.0, 20_000.0))
 def test_no_warm_hit_after_keepalive_expiry(idle_gap, ttl):
     pool = ContainerPool(ContainerConfig(keepalive_ms=ttl), seed=0)

@@ -130,6 +130,75 @@ def test_engine_gate_cli_autodetects(tmp_path):
     assert gate.main([str(bad), str(good)]) == 0  # improvement passes
 
 
+def test_median_baseline_damps_engine_outliers():
+    """One lucky historical run must not anchor the gate: the median of
+    the last N baselines is gated against, not the single previous."""
+    lucky = [_engine_row(eps=200_000.0)]
+    normal1 = [_engine_row(eps=101_000.0)]
+    normal2 = [_engine_row(eps=99_000.0)]
+    current = [_engine_row(eps=95_000.0)]
+    # vs the lucky run alone: a phantom 52% "regression"
+    failures, _ = gate.compare_engine(lucky, current, 0.15)
+    assert len(failures) == 1
+    # vs the median of the last 3: within tolerance
+    synth = gate.median_baseline([lucky, normal1, normal2])
+    assert synth[0]["events_per_sec"] == 101_000.0
+    failures, _ = gate.compare_engine(synth, current, 0.15)
+    assert failures == []
+    # non-gated fields come from the NEWEST baseline (drift reporting)
+    assert synth[0]["events"] == lucky[0]["events"]
+
+
+def test_median_baseline_cluster_medians_the_throughput_ratio():
+    fast = [_row(cost=1.0, n=100, makespan=5.0)]    # tp 20
+    mid = [_row(cost=1.2, n=100, makespan=10.0)]    # tp 10
+    slow = [_row(cost=1.4, n=100, makespan=20.0)]   # tp 5
+    synth = gate.median_baseline([fast, mid, slow])
+    assert synth[0]["cost_usd"] == 1.2
+    assert gate.throughput(synth[0]) == 10.0
+    # current within 15% of the median on both axes passes
+    failures, _ = gate.compare(synth, [_row(cost=1.3, n=100,
+                                            makespan=11.0)], 0.15)
+    assert failures == []
+    # but not of the best-ever run
+    failures, _ = gate.compare(fast, [_row(cost=1.3, n=100,
+                                           makespan=11.0)], 0.15)
+    assert len(failures) == 2
+
+
+def test_median_baseline_handles_cells_missing_from_some_runs():
+    a = [_row(), _row(dispatcher="affinity", cost=3.0)]
+    b = [_row(cost=2.0)]
+    c = [_row(cost=4.0)]
+    synth = gate.median_baseline([a, b, c])
+    by_key = {gate.cell_key(r): r for r in synth}
+    assert by_key[gate.cell_key(_row())]["cost_usd"] == 2.0  # median(1,2,4)
+    # the affinity cell exists in one run only: carried through as-is
+    assert by_key[gate.cell_key(_row(dispatcher="affinity"))]["cost_usd"] \
+        == 3.0
+
+
+def test_gate_cli_multiple_baselines_and_median_of(tmp_path):
+    def write(name, rows):
+        p = tmp_path / name
+        p.write_text(json.dumps({"rows": rows}))
+        return str(p)
+    lucky = write("b0.json", [_engine_row(eps=200_000.0)])
+    n1 = write("b1.json", [_engine_row(eps=101_000.0)])
+    n2 = write("b2.json", [_engine_row(eps=99_000.0)])
+    cur = write("cur.json", [_engine_row(eps=95_000.0)])
+    # single-baseline call (back-compat shape) fails on the lucky run
+    assert gate.main([lucky, cur]) == 1
+    # median of three passes
+    assert gate.main([lucky, n1, n2, cur]) == 0
+    # --median-of 1 restricts to the newest -> fails again
+    assert gate.main([lucky, n1, n2, cur, "--median-of", "1"]) == 1
+    # missing baselines among the list are skipped, not fatal
+    assert gate.main([str(tmp_path / "nope.json"), n1, n2, cur]) == 0
+    # all baselines missing: vacuous pass
+    assert gate.main([str(tmp_path / "nope.json"), cur]) == 0
+
+
 def test_gate_cli_exit_codes(tmp_path):
     good = tmp_path / "good.json"
     good.write_text(json.dumps([_row()]))
