@@ -9,10 +9,13 @@ run cannot anchor the gate. It FAILS (exit 1) on a regression beyond
 ``--threshold``. Two artifact kinds are understood, auto-detected from
 the row schema:
 
-* ``cluster_matrix`` rows — fail when a shared grid cell's ``cost_usd``
-  goes UP or its completed-invocations-per-makespan-second goes DOWN by
-  more than the threshold. Cells are matched on (node_policy,
-  dispatcher, n_nodes, load_scale, containers).
+* ``cluster_matrix`` / ``BENCH_resilience`` / ``heavy_traffic`` rows —
+  fail when a shared grid cell's ``cost_usd`` goes UP or its
+  completed-invocations-per-makespan-second goes DOWN by more than the
+  threshold. Cells are matched on (node_policy, dispatcher, n_nodes,
+  load_scale, containers, chaos, admission, prewarm) — the resilience
+  axes default to "off", so pre-resilience artifacts stay comparable
+  and cost regressions under the chaos preset gate like any other cell.
 * ``BENCH_engine`` rows (``events_per_sec`` present) — fail when a
   shared engine cell's events/sec drops by more than the threshold.
   Cells are matched on (policy, containers, n_cores, n_tasks), so the
@@ -52,9 +55,20 @@ def load_rows(path: str) -> list[dict]:
 
 
 def cell_key(row: dict) -> tuple:
+    # The resilience axes default to "off": a pre-resilience baseline
+    # artifact and a new run's features-off rows land on the SAME key,
+    # so enabling the gate on BENCH_resilience.json needed no schema
+    # fork — chaos/admission/prewarm cells simply become new cells.
+    # The trace-scale axes (minutes / rate / function count — sweep
+    # rows have always carried them) keep a smoke-tier artifact from
+    # being "compared" against a full-trace baseline as if same-scale,
+    # exactly as n_tasks does for engine cells.
     return (row.get("node_policy"), row.get("dispatcher"),
             row.get("n_nodes"), row.get("load_scale", 1.0),
-            row.get("containers", "off"))
+            row.get("containers", "off"), row.get("chaos", "off"),
+            row.get("admission", "off"), row.get("prewarm", "off"),
+            row.get("minutes"), row.get("invocations_per_min"),
+            row.get("n_functions"))
 
 
 def throughput(row: dict) -> float:

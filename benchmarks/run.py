@@ -9,6 +9,7 @@ import sys
 
 from . import cluster_bench as C
 from . import paper_figures as F
+from . import resilience_bench as R
 from . import serving_bench as S
 from .common import emit, timed
 
@@ -27,6 +28,7 @@ BENCHES = [
     ("serving_gateway", S.serving_gateway),
     ("roofline_table", S.roofline_table),
     ("cluster_matrix", C.cluster_matrix),
+    ("resilience_matrix", R.resilience_matrix),
 ]
 
 

@@ -1,0 +1,212 @@
+"""CI trend dashboard: fold nightly bench artifacts into one summary.
+
+The regression gate answers "did THIS run regress?"; history has been
+invisible unless you download raw artifacts one by one. This report
+folds the last-N runs' JSON artifacts — engine throughput, cluster
+matrix, heavy-traffic sweep, resilience matrix — into a single
+markdown + JSON trend summary: per benchmark cell, the newest value,
+the median of history, the delta, and a sparkline of the trajectory
+(oldest -> newest). CI appends the markdown to the GitHub Actions job
+summary (``$GITHUB_STEP_SUMMARY``) and uploads both files with the
+bench artifacts, so the trajectory is one click away instead of an
+artifact-archaeology session.
+
+Layout convention (what the CI fetch step already produces)::
+
+    history/0/BENCH_engine.json      <- newest previous run
+    history/1/BENCH_engine.json
+    ...
+    current/BENCH_engine.json        <- this run
+
+Usage::
+
+    python -m benchmarks.trend_report --history prev-bench \
+        --current results/benchmarks \
+        --out results/benchmarks/trend.json \
+        --md results/benchmarks/TREND.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+from pathlib import Path
+
+from .regression_gate import cell_key, engine_key, load_rows
+
+# kind -> (filename, cell key fn, metric, direction, format)
+KINDS = {
+    "engine": ("BENCH_engine.json", engine_key, "events_per_sec",
+               "higher", "{:,.0f}"),
+    "cluster": ("cluster_matrix.json", cell_key, "cost_usd",
+                "lower", "{:.6g}"),
+    "resilience": ("BENCH_resilience.json", cell_key, "cost_usd",
+                   "lower", "{:.6g}"),
+    "heavy_traffic": ("heavy_traffic.json", cell_key, "cost_usd",
+                      "lower", "{:.6g}"),
+}
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(vals: list[float]) -> str:
+    """Unicode trajectory, oldest -> newest (empty-safe)."""
+    real = [v for v in vals if v is not None]
+    if not real:
+        return ""
+    lo, hi = min(real), max(real)
+    if hi - lo <= 0:
+        return _SPARK[3] * len(real)
+    return "".join(
+        _SPARK[min(len(_SPARK) - 1,
+                   int((v - lo) / (hi - lo) * (len(_SPARK) - 1)))]
+        for v in real)
+
+
+def _label(key: tuple) -> str:
+    return " ".join(str(k) for k in key if k not in (None, "off", 1.0))
+
+
+def collect_series(history_dirs: list[Path], current_dir: Path,
+                   ) -> dict[str, list[dict]]:
+    """Per kind, per cell: the metric series [oldest .. newest]."""
+    out: dict[str, list[dict]] = {}
+    for kind, (fname, key_fn, metric, direction, _fmt) in KINDS.items():
+        # newest first: current, then history/0, history/1, ...
+        paths = [current_dir / fname] + [d / fname for d in history_dirs]
+        runs = []
+        for p in paths:
+            runs.append(load_rows(str(p)) if p.exists() else None)
+        if runs[0] is None and not any(r for r in runs):
+            continue
+        cells: dict[tuple, list] = {}
+        order: list[tuple] = []
+        for run_i, rows in enumerate(runs):
+            for row in rows or ():
+                k = key_fn(row)
+                if k not in cells:
+                    cells[k] = [None] * len(runs)
+                    order.append(k)
+                cells[k][run_i] = row.get(metric)
+        entries = []
+        for k in order:
+            newest_first = cells[k]
+            latest = newest_first[0]
+            # None = cell absent from that run; 0.0 is real data (a
+            # degenerate zero-cost cell must still trend and warn).
+            hist = [v for v in newest_first[1:] if v is not None]
+            series = [v for v in reversed(newest_first) if v is not None]
+            med = statistics.median(hist) if hist else None
+            delta = (latest / med - 1.0) \
+                if latest is not None and med else None
+            entries.append({
+                "cell": _label(k),
+                "key": [str(x) for x in k],
+                "metric": metric,
+                "direction": direction,
+                "latest": latest,
+                "median": med,
+                "delta": delta,
+                "series": series,
+                "runs": len([v for v in newest_first if v is not None]),
+            })
+        if entries:
+            out[kind] = entries
+    return out
+
+
+def _regressed(e: dict) -> bool:
+    """Moving the wrong way by >10% vs the historical median — a
+    nonzero value on an all-zero (lower-is-better) baseline counts as
+    an infinite regression, not missing data."""
+    if e["latest"] is None or e["median"] is None:
+        return False
+    if e["median"] == 0:
+        return e["latest"] > 0 and e["direction"] == "lower"
+    d = e["latest"] / e["median"] - 1.0
+    return d > 0.10 if e["direction"] == "lower" else d < -0.10
+
+
+def _delta_cell(e: dict) -> str:
+    if e["median"] == 0 and (e["latest"] or 0) > 0:
+        return "+∞ ⚠" if e["direction"] == "lower" else "+∞"
+    if e["delta"] is None:
+        return "–"
+    return f"{e['delta']:+.1%}{' ⚠' if _regressed(e) else ''}"
+
+
+def to_markdown(series: dict[str, list[dict]]) -> str:
+    lines = ["# Benchmark trends", ""]
+    if not series:
+        return "\n".join(lines + ["_no benchmark artifacts found_", ""])
+    for kind, entries in series.items():
+        metric = entries[0]["metric"]
+        arrow = "↑ better" if entries[0]["direction"] == "higher" \
+            else "↓ better"
+        fmt = KINDS[kind][4]
+        lines += [f"## {kind} — `{metric}` ({arrow})", "",
+                  "| cell | latest | median(prev) | Δ vs median | trend |",
+                  "|---|---:|---:|---:|---|"]
+        for e in entries:
+            latest = fmt.format(e["latest"]) \
+                if e["latest"] is not None else "–"
+            med = fmt.format(e["median"]) \
+                if e["median"] is not None else "–"
+            lines.append(f"| {e['cell']} | {latest} | {med} | "
+                         f"{_delta_cell(e)} | {sparkline(e['series'])} |")
+        lines.append("")
+    worst = [e for es in series.values() for e in es if _regressed(e)]
+    if worst:
+        lines += ["## ⚠ moving the wrong way (>10% vs median)", ""]
+        for e in sorted(worst,
+                        key=lambda e: -abs(e["delta"])
+                        if e["delta"] is not None else -float("inf")):
+            lines.append(f"- **{e['cell']}** ({e['metric']}): "
+                         f"{_delta_cell(e)}")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def discover_history(root: Path) -> list[Path]:
+    """CI downloads previous artifacts into root/0, root/1, ... (newest
+    first); tolerate arbitrary subdir names. Numeric names sort
+    NUMERICALLY (lexicographic order would rank '10' before '2',
+    scrambling which runs a --last cap keeps and the sparkline
+    direction once history passes ten runs)."""
+    if not root.exists():
+        return []
+    return sorted((d for d in root.iterdir() if d.is_dir()),
+                  key=lambda d: (0, int(d.name), "") if d.name.isdigit()
+                  else (1, 0, d.name))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history", default="prev-bench",
+                    help="directory of previous runs' artifact dirs "
+                         "(newest first by name)")
+    ap.add_argument("--current", default="results/benchmarks",
+                    help="this run's artifact directory")
+    ap.add_argument("--out", default=None, help="write JSON trend here")
+    ap.add_argument("--md", default=None, help="write markdown here")
+    ap.add_argument("--last", type=int, default=5,
+                    help="cap history at the newest N runs (default 5)")
+    args = ap.parse_args(argv)
+
+    history = discover_history(Path(args.history))[:args.last]
+    series = collect_series(history, Path(args.current))
+    md = to_markdown(series)
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(json.dumps(
+            {"history_runs": len(history), "kinds": series}, indent=2))
+    if args.md:
+        Path(args.md).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.md).write_text(md)
+    print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -8,15 +8,18 @@ single-node simulators into a fleet: pluggable front-end dispatch
 fleet-level roll-ups (``metrics``), and a parallel grid runner
 (``sweep``).
 """
+from .admission import AdmissionConfig, AdmissionControl, make_admission
+from .chaos import ChaosEvent, ChaosSchedule, churn_preset, kill_heal
 from .dispatch import (DISPATCHERS, AffinityDispatch, CostAwareDispatch,
                        Dispatcher, JoinIdleQueueDispatch,
                        LeastLoadedDispatch, RandomDispatch,
                        RoundRobinDispatch, WarmAffinityDispatch,
                        WarmLeastLoadedDispatch, make_dispatcher)
 from .metrics import ClusterResult
+from .prewarm import PrewarmConfig, Provisioner, build_plan
 from .sim import ClusterNode, ClusterSim, run_cluster
-from .sweep import (PRESETS, Cell, build_grid, compare_serial, run_cell,
-                    run_sweep)
+from .sweep import (PRESETS, Cell, build_grid, compare_serial, merge_rows,
+                    run_cell, run_sweep, shard_grid)
 
 __all__ = [
     "DISPATCHERS", "AffinityDispatch", "CostAwareDispatch", "Dispatcher",
@@ -25,4 +28,8 @@ __all__ = [
     "WarmLeastLoadedDispatch", "make_dispatcher", "ClusterResult",
     "ClusterNode", "ClusterSim", "run_cluster", "PRESETS", "Cell",
     "build_grid", "compare_serial", "run_cell", "run_sweep",
+    "AdmissionConfig", "AdmissionControl", "make_admission",
+    "ChaosEvent", "ChaosSchedule", "churn_preset", "kill_heal",
+    "PrewarmConfig", "Provisioner", "build_plan", "merge_rows",
+    "shard_grid",
 ]

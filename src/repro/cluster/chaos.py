@@ -1,0 +1,113 @@
+"""Declarative fleet chaos: kill/heal schedules driven through the run.
+
+Real FaaS fleets churn — hosts die mid-burst, capacity rejoins minutes
+later, a deploy wipes a node's warm pool — and a cost claim that only
+holds on a static healthy fleet is not a cost claim. This module turns
+``ClusterSim.add_node`` / ``remove_node`` from manual calls into a
+first-class harness: a :class:`ChaosSchedule` is a time-ordered list of
+declarative events the fleet loop applies mid-run, interleaved with
+arrivals at exact instants.
+
+Semantics (DESIGN.md Sec. 14):
+
+``kill``        -- the node vanishes at ``t``: no graceful drain. Work
+                   assigned-but-unfinished there is REQUEUED through the
+                   front-end dispatcher at ``t`` with its runtime state
+                   reset (progress is lost; queueing is still measured
+                   from the invocation's true arrival). The node's warm
+                   pool is destroyed at ``t`` — its memory meter stops
+                   there — and its *finished* work still counts in the
+                   fleet roll-up.
+``heal``        -- a fresh node (optionally with a policy ``spec``)
+                   joins at ``t``: empty warm pool, clean scheduler.
+                   Consistent-hash dispatchers remap ~1/N of functions.
+``flush_warm``  -- the node survives but its warm pool is lost at ``t``
+                   (deploy / OOM / sandbox-runtime restart): every
+                   subsequent invocation there pays a cold start until
+                   warmth is rebuilt.
+
+Events name nodes by **node id** (``"node0"``), which is stable across
+churn, or ``node=None`` = the first live node at fire time. An event
+whose target is already gone records a no-op instead of failing: chaos
+schedules are declarative wishes about a fleet that may have changed
+under them.
+
+Determinism: the schedule is data, the fleet loop applies events at
+exact times in (t, event-order), and every requeue decision flows
+through the same seeded dispatcher — same seed + same schedule =>
+bit-identical fleet roll-ups (tested).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+ACTIONS = ("kill", "heal", "flush_warm")
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One declarative fleet event.
+
+    ``node`` is a node id (kill / flush_warm; None = first live node);
+    ``spec`` is the node policy spec a ``heal`` brings up (None = the
+    fleet's default ``heal_spec``).
+    """
+
+    t: float
+    action: str
+    node: Optional[str] = None
+    spec: Optional[object] = None
+
+    def __post_init__(self):
+        if self.action not in ACTIONS:
+            raise ValueError(
+                f"unknown chaos action {self.action!r}; have {ACTIONS}")
+
+
+@dataclass(frozen=True)
+class ChaosSchedule:
+    """Time-ordered chaos events plus the default heal policy spec."""
+
+    events: tuple = ()
+    heal_spec: object = "hybrid"
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(
+            sorted(self.events, key=lambda e: e.t)))
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __len__(self):
+        return len(self.events)
+
+
+def kill_heal(t_down: float, t_up: float, node: Optional[str] = None,
+              spec: object = "hybrid") -> ChaosSchedule:
+    """The canonical churn pair: ``node`` dies at ``t_down`` and an
+    equivalent fresh (cold!) node joins at ``t_up``."""
+    if t_up <= t_down:
+        raise ValueError("heal must come after kill")
+    return ChaosSchedule(events=(
+        ChaosEvent(t=t_down, action="kill", node=node),
+        ChaosEvent(t=t_up, action="heal", spec=spec),
+    ), heal_spec=spec)
+
+
+def churn_preset(horizon_ms: float, node_policy: object = "hybrid",
+                 flush_node: Optional[str] = None) -> ChaosSchedule:
+    """The benchmark/CI chaos preset: one mid-run node loss healed by a
+    cold replacement, plus a warm-pool wipe on a surviving node — node
+    churn AND cold-start-storm pressure in one schedule.
+
+    * kill ``node0`` at 25% of the horizon (mid first burst),
+    * wipe ``flush_node``'s warm pool (default ``node1``) at 45%,
+    * heal with a fresh ``node_policy`` node at 60%.
+    """
+    return ChaosSchedule(events=(
+        ChaosEvent(t=0.25 * horizon_ms, action="kill", node="node0"),
+        ChaosEvent(t=0.45 * horizon_ms, action="flush_warm",
+                   node=flush_node or "node1"),
+        ChaosEvent(t=0.60 * horizon_ms, action="heal", spec=node_policy),
+    ), heal_spec=node_policy)

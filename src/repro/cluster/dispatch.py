@@ -29,7 +29,10 @@ cost_aware        -- prices each route in dollars: expected cold-start
                      penalty x the function's per-ms price, plus a
                      queueing term converting node load into billed-ms
                      (contention inflates wall-clock execution under
-                     CFS). Routes to the cheapest node.
+                     CFS). Routes to the cheapest node. The load-to-
+                     billed-ms coefficient is LEARNED online from
+                     completion feedback (recursive least squares with
+                     forgetting; the configured constant is the prior).
 
 All policies are deterministic under a fixed seed. ``select`` sees the
 live node handles and the cluster clock; node state is whatever the
@@ -54,6 +57,10 @@ from ..core.events import Task
 
 class Dispatcher:
     name = "base"
+    # Learning dispatchers set this; the fleet loop then feeds every
+    # completion back via observe_completion (in canonical
+    # (completion, tid) order, so feedback never depends on node order).
+    wants_feedback = False
 
     def __init__(self, seed: int = 0):
         self.seed = seed
@@ -66,6 +73,9 @@ class Dispatcher:
 
     def on_topology_change(self, nodes: Sequence["ClusterNode"]) -> None:
         """Called when nodes join or leave the fleet."""
+
+    def observe_completion(self, task: Task) -> None:
+        """Completion feedback hook (only called when wants_feedback)."""
 
 
 class RandomDispatch(Dispatcher):
@@ -228,17 +238,63 @@ class CostAwareDispatch(Dispatcher):
     container layer); the second converts node load into an equivalent
     billed-ms penalty — under fair-share scheduling, contention directly
     inflates the wall-clock execution the provider meters.
+
+    The conversion coefficient is LEARNED online (``learn=True``, the
+    default): the fleet loop feeds completions back, each yielding one
+    observation (load at dispatch, billed-ms inflation over the pure
+    demand: execution - init - service). A scalar recursive
+    least-squares fit through the origin with forgetting factor
+    ``rls_lambda`` tracks inflation-per-unit-load; ``queue_ms_per_load``
+    seeds it as a prior worth ``prior_weight`` squared-load units of
+    evidence, so an unobserved fleet routes exactly like the fixed-
+    coefficient dispatcher and the estimate moves only as real evidence
+    accumulates. Everything is deterministic: no sampling, and feedback
+    arrives in canonical (completion, tid) order.
     """
 
     name = "cost_aware"
 
-    def __init__(self, seed: int = 0, queue_ms_per_load: float = 1_000.0):
+    def __init__(self, seed: int = 0, queue_ms_per_load: float = 1_000.0,
+                 learn: bool = True, rls_lambda: float = 0.98,
+                 prior_weight: float = 25.0):
         super().__init__(seed)
         self.queue_ms_per_load = queue_ms_per_load
+        self.learn = learn
+        # A frozen dispatcher must not make the fleet loop harvest
+        # completions it will ignore.
+        self.wants_feedback = learn
+        self.rls_lambda = rls_lambda
+        # Through-origin RLS state: coeff = _sxy / _sxx. The prior is
+        # pseudo-evidence at the configured coefficient.
+        self._sxx = prior_weight
+        self._sxy = prior_weight * queue_ms_per_load
+        self.n_observed = 0
+        # tid -> load of the chosen node at dispatch time.
+        self._dispatch_load: dict[int, float] = {}
+
+    @property
+    def coeff(self) -> float:
+        """Current load -> billed-ms conversion (the learned slope)."""
+        if not self.learn or self._sxx <= 0.0:
+            return self.queue_ms_per_load
+        return max(0.0, self._sxy / self._sxx)
+
+    def observe_completion(self, task):
+        load = self._dispatch_load.pop(task.tid, None)
+        if not self.learn or load is None or load <= 0.0:
+            return  # a zero-load dispatch carries no slope information
+        if task.completion is None or task.first_run is None:
+            return
+        inflation = max(0.0, task.execution - task.init_ms - task.service)
+        lam = self.rls_lambda
+        self._sxx = lam * self._sxx + load * load
+        self._sxy = lam * self._sxy + load * inflation
+        self.n_observed += 1
 
     def select(self, task, nodes, t):
         p = price_per_ms(task.mem_mb)
-        best, best_score = 0, None
+        coeff = self.coeff
+        best, best_score, best_load = 0, None, 0.0
         for i, node in enumerate(nodes):
             s = node.snapshot()
             cold = 0.0
@@ -249,9 +305,11 @@ class CostAwareDispatch(Dispatcher):
                 base, per_gb = s.get("cold_model", (None, None))
                 cold = expected_cold_ms(task.mem_mb) if base is None \
                     else expected_cold_ms(task.mem_mb, base, per_gb)
-            score = cold * p + s["load"] * self.queue_ms_per_load * p
+            score = cold * p + s["load"] * coeff * p
             if best_score is None or score < best_score:
-                best, best_score = i, score
+                best, best_score, best_load = i, score, s["load"]
+        if self.learn:
+            self._dispatch_load[task.tid] = best_load
         return best
 
 

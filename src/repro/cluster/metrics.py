@@ -26,10 +26,11 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 from functools import cached_property
+from typing import Optional
 
 import numpy as np
 
-from ..core.cost import workload_cost_usd
+from ..core.cost import rejected_request_cost_usd, workload_cost_usd
 from ..core.metrics import SimResult
 
 
@@ -43,6 +44,11 @@ class ClusterResult:
     assignments: list = field(default_factory=list)
     redispatches: int = 0  # straggler re-dispatches (serving fleets)
     n_retired: int = 0  # trailing node_results rows removed mid-run
+    # -- resilience layers (DESIGN.md Sec. 14) ------------------------------
+    shed: list = field(default_factory=list)       # front-door rejects
+    chaos_events: list = field(default_factory=list)
+    admission: Optional[dict] = None               # AdmissionControl.stats()
+    prewarm_stats: Optional[dict] = None           # Provisioner.stats()
 
     # -- task views (cached: summary() walks these repeatedly) --------------
     @cached_property
@@ -66,7 +72,10 @@ class ClusterResult:
 
     # -- balance ------------------------------------------------------------
     def makespan(self) -> float:
-        return self.tasks[-1].completion  # canonical order: last wins
+        # Canonical order: last wins. A fleet can finish NOTHING (chaos
+        # killed every node / admission shed everything) — that is a
+        # reportable outcome, not a crash.
+        return self.tasks[-1].completion if self.tasks else 0.0
 
     @property
     def live_results(self) -> list[SimResult]:
@@ -79,6 +88,8 @@ class ClusterResult:
         removed mid-run would otherwise read as dispatcher imbalance."""
         if horizon is None:
             horizon = self.makespan()
+        if horizon <= 0.0:
+            return np.zeros(len(self.live_results))
         out = []
         for r in self.live_results:
             busy = math.fsum(t.cpu_time for t in r.tasks)
@@ -108,6 +119,19 @@ class ClusterResult:
         return workload_cost_usd(self.execution(),
                                  mem_mb=[t.mem_mb for t in self.tasks])
 
+    def rejected_cost_usd(self) -> float:
+        """Per-request fees incurred by admission-shed invocations —
+        reported separately so shedding never masquerades as savings."""
+        return rejected_request_cost_usd(len(self.shed))
+
+    def total_cost_usd(self) -> float:
+        """User-facing bill including rejected-request fees."""
+        return self.cost_usd() + self.rejected_cost_usd()
+
+    def requeued(self) -> int:
+        """Invocations re-dispatched after a chaos kill."""
+        return sum(e.get("requeued", 0) for e in self.chaos_events)
+
     # -- container lifecycle ------------------------------------------------
     # Fleet values aggregate the per-node SimResult helpers so the
     # definitions (what counts as cold, how init is priced) live in
@@ -134,7 +158,8 @@ class ClusterResult:
         if not per_node:
             return None
         keys = ("warm_hits", "cold_starts", "evictions_ttl",
-                "evictions_capacity", "dropped", "warm_mb_ms")
+                "evictions_capacity", "evictions_flush", "dropped",
+                "prewarmed", "warm_mb_ms")
         agg = {k: sum(s[k] for s in per_node) for k in keys}
         total = agg["warm_hits"] + agg["cold_starts"]
         agg["cold_start_rate"] = (agg["cold_starts"] / total) if total else 0.0
@@ -142,11 +167,14 @@ class ClusterResult:
 
     def summary(self) -> dict:
         # Compute each derived array once: this runs per sweep cell on
-        # the grid-runner hot path.
-        slowdown = self.slowdown()
+        # the grid-runner hot path. Empty percentile inputs (a fleet
+        # that completed nothing) report as zero, not as a crash.
+        slowdown = self.slowdown() if self.tasks else np.zeros(1)
         horizon = self.makespan()
         util = self.node_utilization(horizon)
-        turnaround = [t.turnaround for t in self.tasks]
+        if util.size == 0:          # chaos can retire the whole fleet
+            util = np.zeros(1)
+        turnaround = [t.turnaround for t in self.tasks] or [0.0]
         out = {
             "dispatcher": self.dispatcher,
             "node_policies": list(dict.fromkeys(self.node_policies)),
@@ -168,6 +196,15 @@ class ClusterResult:
             "cold_start_rate": self.cold_start_rate(),
             "init_cost_usd": self.init_cost_usd(),
             "warm_hold_usd": self.warm_hold_usd(),
+            # Resilience accounting: stable zeros when the layers are
+            # off, so downstream JSON/CSV schemas never fork.
+            "shed": len(self.shed),
+            "rejected_cost_usd": self.rejected_cost_usd(),
+            "requeued": self.requeued(),
+            "chaos_events": len(self.chaos_events),
+            "queued": (self.admission or {}).get("queued", 0),
+            "spilled": (self.admission or {}).get("spilled", 0),
+            "prewarmed": (self.prewarm_stats or {}).get("placed", 0),
         }
         if self.redispatches:
             out["redispatches"] = self.redispatches

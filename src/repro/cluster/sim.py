@@ -3,24 +3,55 @@
 ``ClusterSim`` owns N ``ClusterNode`` handles, each wrapping one
 single-node :class:`~repro.core.events.Scheduler` (any policy from
 ``core.simulate.POLICIES``; heterogeneous mixes allowed). The cluster
-loop walks the workload in arrival order: before each routing decision
-every node is stepped to the invocation's arrival time, so state-aware
+loop walks a merged time-ordered stream — provisioning actions, chaos
+events, invocation dispatches — in (time, kind) order: before each
+routing decision every node is stepped to the instant, so state-aware
 dispatchers (least-loaded, join-idle-queue) observe exactly what a
-heartbeat at that instant would report. After the last arrival the
-nodes drain independently — their event streams no longer interact.
+heartbeat at that instant would report. After the last event the nodes
+drain independently — their event streams no longer interact.
+
+Resilience & elasticity layers (DESIGN.md Sec. 14). The chaos,
+admission, and prewarm layers are off by default and bit-identical to
+the plain fleet when off; the one deliberate default change is the
+``cost_aware`` dispatcher, which now LEARNS its coefficient from
+completion feedback (construct it with ``learn=False`` for the PR-2
+fixed-constant routing).
+
+* ``chaos=``      a :class:`~repro.cluster.chaos.ChaosSchedule` of
+                  declarative kill/heal/flush_warm events applied
+                  mid-run; a kill requeues the victim's in-flight work
+                  through the front-end dispatcher.
+* ``admission=``  an :class:`~repro.cluster.admission.AdmissionControl`
+                  (or config) consulted before routing: invocations are
+                  admitted, queued at the front door, spilled to the
+                  least-loaded node, or shed (priced separately).
+* ``prewarm=``    a :class:`~repro.cluster.prewarm.Provisioner` (or
+                  plan) that places predicted warm sandboxes into node
+                  pools ahead of per-minute bursts.
+* learning dispatchers (``cost_aware``) receive completion feedback in
+  canonical (completion, tid) order as the run advances.
 """
 from __future__ import annotations
 
 import copy
-from dataclasses import dataclass, field
+import heapq
+import math
 from typing import Optional, Sequence, Union
 
 from ..core.containers import ContainerConfig
 from ..core.events import Scheduler, Task
 from ..core.metrics import collect
 from ..core.simulate import make_scheduler
+from .admission import AdmissionConfig, AdmissionControl, make_admission
+from .chaos import ChaosSchedule
 from .dispatch import Dispatcher, make_dispatcher
 from .metrics import ClusterResult
+from .prewarm import Provisioner
+
+# Merged-stream event classes: provisioning at an instant precedes chaos
+# at it, which precedes dispatches at it (a node killed at t is gone for
+# a same-instant arrival; a sandbox pre-warmed at t is warm for it).
+_PREWARM, _CHAOS, _DISPATCH = 0, 1, 2
 
 
 class ClusterNode:
@@ -31,12 +62,17 @@ class ClusterNode:
         self.sched = sched
         self.policy = policy
         self.assigned = 0
+        # Every task ever injected here (chaos kills walk it for
+        # in-flight requeue) and the completion-feedback watermark.
+        self.inflight: list[Task] = []
+        self.harvested = 0
 
     def prime(self) -> None:
         self.sched.prime([])
 
     def inject(self, task: Task, t: float) -> None:
         self.assigned += 1
+        self.inflight.append(task)
         self.sched.inject(task, t)
 
     def step(self, until: float) -> None:
@@ -72,6 +108,20 @@ def _make_node(i: int, spec: NodeSpec, cores_per_node: int,
     return ClusterNode(f"node{i}", sched, policy)
 
 
+def _reset_for_retry(task: Task) -> None:
+    """A chaos kill loses the victim's progress: the invocation restarts
+    from scratch elsewhere. Queueing stays measured from the TRUE
+    arrival; the billed execution span is the successful attempt's."""
+    task.remaining = task.service
+    task.cpu_time = 0.0
+    task.first_run = None
+    task.completion = None
+    task.vruntime = 0.0
+    task.cold_start = False
+    task.init_ms = 0.0
+    task.retries += 1
+
+
 class ClusterSim:
     """Fleet of nodes behind a pluggable front-end dispatcher.
 
@@ -82,6 +132,7 @@ class ClusterSim:
     schedulers). ``containers`` attaches the sandbox lifecycle layer to
     every node: each gets its own memory-bounded warm pool, heartbeats
     report warm-set contents, and warm-aware dispatchers route on them.
+    ``admission`` attaches the front-door guard (see module docstring).
     """
 
     def __init__(self,
@@ -91,7 +142,9 @@ class ClusterSim:
                  dispatcher: Union[str, Dispatcher] = "least_loaded",
                  seed: int = 0,
                  node_factory=None,
-                 containers: Optional[ContainerConfig] = None):
+                 containers: Optional[ContainerConfig] = None,
+                 admission: Union[None, AdmissionConfig,
+                                  AdmissionControl] = None):
         if n_nodes < 1:
             raise ValueError("a fleet needs at least one node")
         if isinstance(node_policies, (str, tuple)):
@@ -114,10 +167,14 @@ class ClusterSim:
             dispatcher = make_dispatcher(dispatcher, seed=seed)
         self.dispatcher = dispatcher
         self.dispatcher.on_topology_change(self.nodes)
+        self.admission = make_admission(admission)
         # (tid, node_id): ids stay valid across add/remove churn, where
         # live-list indices shift.
         self.assignments: list[tuple[int, str]] = []
         self._retired: list[ClusterNode] = []
+        self.shed: list[Task] = []          # front-door rejects
+        self.chaos_log: list[dict] = []     # one record per chaos event
+        self._provisioner: Optional[Provisioner] = None
 
     # -- elasticity --------------------------------------------------------
     def add_node(self, spec: NodeSpec = "hybrid") -> ClusterNode:
@@ -130,31 +187,202 @@ class ClusterSim:
         self.dispatcher.on_topology_change(self.nodes)
         return node
 
-    def remove_node(self, index: int) -> ClusterNode:
-        """Drain and detach a node (its in-flight work completes and is
-        still counted in the fleet roll-up via ``_retired``)."""
-        node = self.nodes.pop(index)
+    def remove_node(self, index: int,
+                    t: Optional[float] = None) -> ClusterNode:
+        """Gracefully drain and decommission a node (its in-flight work
+        completes and is still counted in the fleet roll-up via
+        ``_retired``). ``t`` steps the node to the removal instant
+        first. Decommission closes the node's warm pool at removal —
+        the memory-hold meter stops, the warm set is destroyed, and the
+        parked keep-alive reaper dies with the machine instead of
+        leaking an open meter into later roll-ups."""
+        node = self.nodes[index]
+        if t is not None:
+            node.step(t)
         node.drain()
+        self._decommission(index, t)
+        return node
+
+    def _decommission(self, index: int, t: Optional[float]) -> None:
+        """Shared tail of graceful removal and chaos kill: harvest the
+        node's final completion feedback, detach it, close its warm
+        pool and parked timers at ``t``, and retire its roll-up row."""
+        node = self.nodes[index]
+        if self.dispatcher.wants_feedback:
+            self._harvest()  # its completions still teach
+        self.nodes.pop(index)
+        node.sched.shutdown(t)
         self._retired.append(node)
         self.dispatcher.on_topology_change(self.nodes)
-        return node
+
+    # -- chaos -------------------------------------------------------------
+    def _find_node(self, node_id: Optional[str]) -> Optional[int]:
+        if node_id is None:
+            return 0 if self.nodes else None
+        for i, n in enumerate(self.nodes):
+            if n.node_id == node_id:
+                return i
+        return None
+
+    def _apply_chaos(self, ev, t: float, requeue) -> None:
+        rec = {"t": t, "action": ev.action, "node": ev.node,
+               "requeued": 0, "warm_flushed": 0}
+        if ev.action == "heal":
+            spec = ev.spec if ev.spec is not None else self._heal_spec
+            node = self.add_node(spec)
+            node.step(t)
+            rec["node"] = node.node_id
+        else:
+            idx = self._find_node(ev.node)
+            if idx is None:
+                rec["action"] += ":noop"  # target already gone
+                self.chaos_log.append(rec)
+                return
+            node = self.nodes[idx]
+            node.step(t)
+            rec["node"] = node.node_id
+            if ev.action == "flush_warm":
+                pool = getattr(node.sched, "containers", None)
+                if pool is not None:
+                    rec["warm_flushed"] = pool.flush(t)
+            else:  # kill: no drain — the machine is simply gone
+                lost = [x for x in node.inflight
+                        if x.completion is None and not x.failed]
+                self._decommission(idx, t)
+                for x in sorted(lost, key=lambda x: (x.arrival, x.tid)):
+                    _reset_for_retry(x)
+                    requeue(x, t)
+                rec["requeued"] = len(lost)
+        self.chaos_log.append(rec)
+
+    # -- learning-dispatcher feedback --------------------------------------
+    def _harvest(self) -> None:
+        """Feed newly completed tasks to a learning dispatcher, in
+        canonical (completion, tid) order so the feedback stream never
+        depends on node iteration order."""
+        batch: list[Task] = []
+        for node in self.nodes:
+            done = node.sched.completed
+            if len(done) > node.harvested:
+                batch.extend(done[node.harvested:])
+                node.harvested = len(done)
+        if batch:
+            batch.sort(key=lambda x: (x.completion, x.tid))
+            for task in batch:
+                self.dispatcher.observe_completion(task)
 
     # -- simulation --------------------------------------------------------
     def run(self, workload: list[Task], *,
-            fresh_tasks: bool = True) -> ClusterResult:
+            fresh_tasks: bool = True,
+            chaos: Optional[ChaosSchedule] = None,
+            prewarm: Union[None, Provisioner, Sequence] = None,
+            ) -> ClusterResult:
         tasks = copy.deepcopy(workload) if fresh_tasks else workload
         tasks = sorted(tasks, key=lambda x: (x.arrival, x.tid))
+        if prewarm is not None and not isinstance(prewarm, Provisioner):
+            prewarm = Provisioner(prewarm)
+        if prewarm is not None and prewarm.rows_applied:
+            # A consumed cursor would silently provision NOTHING and
+            # report the previous run's stats as this run's.
+            raise ValueError("Provisioner already consumed by a previous "
+                             "run; build a fresh one per run")
+        self._provisioner = prewarm
+        # Heal events without an explicit spec bring up the schedule's
+        # default node policy.
+        self._heal_spec = chaos.heal_spec if chaos is not None else "hybrid"
         for node in self.nodes:
             node.prime()
+
+        # Merged stream: (t, class, seq, payload, first). ``first`` is
+        # False when an admission-queued task is re-presented (its rate
+        # token is already reserved) and None for a chaos-requeued task
+        # (already admitted once — the fleet owes it execution, so it
+        # bypasses admission entirely on retry).
+        stream: list = []
+        seq = 0
         for task in tasks:
-            t = task.arrival
+            stream.append((task.arrival, _DISPATCH, seq, task, True))
+            seq += 1
+        if chaos is not None:
+            for ev in chaos:
+                stream.append((ev.t, _CHAOS, seq, ev, True))
+                seq += 1
+        if prewarm is not None:
+            # Rows are applied in bulk by apply_due; one stream entry
+            # per distinct provisioning instant keeps the heap small.
+            for t_prov in sorted({row[0] for row in prewarm.plan}):
+                stream.append((t_prov, _PREWARM, seq, None, True))
+                seq += 1
+        heapq.heapify(stream)
+
+        feedback = self.dispatcher.wants_feedback
+
+        def requeue(task: Task, t: float) -> None:
+            nonlocal seq
+            heapq.heappush(stream, (t, _DISPATCH, seq, task, None))
+            seq += 1
+
+        while stream:
+            t, klass, _, payload, first = heapq.heappop(stream)
+            if klass == _PREWARM:
+                # Bring every node to the provisioning instant FIRST:
+                # pool op timestamps stay monotone and no pending event
+                # before t can warm-hit a sandbox that does not exist
+                # yet at its own instant.
+                for node in self.nodes:
+                    node.step(t)
+                prewarm.apply_due(t, self.nodes, self.dispatcher)
+                continue
+            if klass == _CHAOS:
+                self._apply_chaos(payload, t, requeue)
+                continue
+            task = payload
+            t = max(t, task.arrival)
+            if not self.nodes:
+                # Chaos emptied the fleet: nothing can serve this. The
+                # admission books must still balance (refund any rate
+                # token the task holds, count the shed).
+                task.failed = True
+                self.shed.append(task)
+                if self.admission is not None:
+                    self.admission.on_external_shed(task)
+                continue
             for node in self.nodes:
                 node.step(t)
-            i = self.dispatcher.select(task, self.nodes, t)
+            if feedback:
+                self._harvest()
+            forced = None
+            if self.admission is not None and first is not None:
+                need_load = math.isfinite(self.admission.cfg.max_load)
+                # The guard needs only occupancy, not the full
+                # heartbeat (the warm-set live_view is the expensive
+                # part) — and the dispatcher takes its own snapshots.
+                loads = [{"load": (n.sched.n_running() + n.sched.n_queued())
+                          / n.sched.n_cores} for n in self.nodes] \
+                    if need_load else []
+                outcome, when = self.admission.decide(task, loads, t,
+                                                      first=first)
+                if outcome == "shed":
+                    task.failed = True
+                    self.shed.append(task)
+                    continue
+                if outcome == "queue":
+                    heapq.heappush(stream,
+                                   (when, _DISPATCH, seq, task, False))
+                    seq += 1
+                    continue
+                if outcome == "spill":
+                    forced = min(range(len(self.nodes)),
+                                 key=lambda i: (loads[i]["load"], i))
+            i = forced if forced is not None else \
+                self.dispatcher.select(task, self.nodes, t)
             self.assignments.append((task.tid, self.nodes[i].node_id))
             self.nodes[i].inject(task, t)
+
         for node in self.nodes:
             node.drain()
+        if feedback:
+            self._harvest()
         return self.result()
 
     def result(self) -> ClusterResult:
@@ -168,6 +396,11 @@ class ClusterSim:
             cores_per_node=self.cores_per_node,
             assignments=list(self.assignments),
             n_retired=len(getattr(self, "_retired", [])),
+            shed=list(self.shed),
+            chaos_events=list(self.chaos_log),
+            admission=self.admission.stats() if self.admission else None,
+            prewarm_stats=(self._provisioner.stats()
+                           if self._provisioner else None),
         )
 
 
@@ -178,10 +411,15 @@ def run_cluster(workload: list[Task], *,
                 dispatcher: str = "least_loaded",
                 seed: int = 0,
                 node_factory=None,
-                containers: Optional[ContainerConfig] = None) -> ClusterResult:
+                containers: Optional[ContainerConfig] = None,
+                admission: Union[None, AdmissionConfig,
+                                 AdmissionControl] = None,
+                chaos: Optional[ChaosSchedule] = None,
+                prewarm: Union[None, Provisioner, Sequence] = None,
+                ) -> ClusterResult:
     """One-call analogue of ``core.simulate.run_policy`` for fleets."""
     sim = ClusterSim(n_nodes=n_nodes, cores_per_node=cores_per_node,
                      node_policies=node_policy, dispatcher=dispatcher,
                      seed=seed, node_factory=node_factory,
-                     containers=containers)
-    return sim.run(workload)
+                     containers=containers, admission=admission)
+    return sim.run(workload, chaos=chaos, prewarm=prewarm)

@@ -11,6 +11,17 @@ CLI::
 
     python -m repro.cluster.sweep --nodes 2,4 --policies cfs,hybrid \
         --dispatchers random,least_loaded --minutes 1 --compare-serial
+
+Past one machine, the same grid shards deterministically over hosts
+(``--shard i/n`` runs the i-th 1/n slice; ``--merge`` folds the
+per-shard ``--out`` files back into one canonical artifact)::
+
+    python -m repro.cluster.sweep --preset heavy_traffic --shard 0/2 \
+        --out ht0.json   # host A
+    python -m repro.cluster.sweep --preset heavy_traffic --shard 1/2 \
+        --out ht1.json   # host B
+    python -m repro.cluster.sweep --merge ht0.json ht1.json \
+        --out heavy_traffic.json
 """
 from __future__ import annotations
 
@@ -118,6 +129,51 @@ def _csv(vals, cast=str):
     return [cast(v) for v in vals.split(",") if v]
 
 
+# -- sharding: split one grid across machines ---------------------------------
+
+def shard_grid(grid: list[Cell], shard: str) -> list[Cell]:
+    """Deterministic cell partition for multi-host sweeps.
+
+    ``shard`` is ``"i/n"``: this invocation runs every cell whose index
+    in the (deterministic) grid order is ``i`` mod ``n``. The shards are
+    disjoint, cover the grid exactly, and — because ``build_grid`` is a
+    pure itertools product — every host computes the same partition from
+    the same flags with no coordination. Merge the per-shard ``--out``
+    files with ``--merge`` afterwards.
+    """
+    try:
+        i_s, n_s = shard.split("/")
+        i, n = int(i_s), int(n_s)
+    except ValueError:
+        raise ValueError(f"--shard wants 'i/n', got {shard!r}") from None
+    if not (n >= 1 and 0 <= i < n):
+        raise ValueError(f"shard index {i} out of range for {n} shards")
+    return [c for k, c in enumerate(grid) if k % n == i]
+
+
+def _row_key(row: dict) -> tuple:
+    return tuple(str(row.get(k)) for k in (
+        "node_policy", "dispatcher", "n_nodes", "load_scale",
+        "containers", "seed", "minutes"))
+
+
+def merge_rows(paths: list[str]) -> list[dict]:
+    """Fold per-shard ``--out`` JSON files back into one artifact's
+    rows, canonically ordered: any shard split of the same grid merges
+    to the identical row list, and it contains exactly the rows an
+    unsharded run produces (the unsharded artifact keeps grid order,
+    so compare per cell — as the gate and trend report do — not by
+    byte-diffing files)."""
+    rows: list[dict] = []
+    for p in paths:
+        with open(p) as f:
+            payload = json.load(f)
+        rows.extend(payload["rows"] if isinstance(payload, dict)
+                    else payload)
+    rows.sort(key=_row_key)
+    return rows
+
+
 def profile_slowest_cell(grid: list[Cell], top: int = 20) -> dict:
     """Time every cell serially, then re-run the slowest one under
     cProfile and print its ``top`` hottest functions (cumulative). One
@@ -194,6 +250,13 @@ def main(argv=None) -> None:
     ap.add_argument("--keepalive-ms", type=float, default=30_000.0)
     ap.add_argument("--preset", default=None, choices=sorted(PRESETS),
                     help="named grid (overrides the grid-shape flags)")
+    ap.add_argument("--shard", default=None, metavar="i/n",
+                    help="run only this deterministic 1/n slice of the "
+                         "grid (fan a sweep out over hosts; recombine "
+                         "the per-shard --out files with --merge)")
+    ap.add_argument("--merge", nargs="+", default=None, metavar="JSON",
+                    help="merge per-shard --out files into --out and "
+                         "exit (no cells are run)")
     ap.add_argument("--serial", action="store_true",
                     help="disable the multiprocessing pool")
     ap.add_argument("--compare-serial", action="store_true",
@@ -203,6 +266,18 @@ def main(argv=None) -> None:
                          "the slowest cell (engine hot-spot hunting)")
     ap.add_argument("--out", default=None, help="write rows as JSON here")
     args = ap.parse_args(argv)
+
+    if args.merge:
+        rows = merge_rows(args.merge)
+        print_rows(rows)
+        if not args.out:
+            ap.error("--merge needs --out for the combined artifact")
+        with open(args.out, "w") as f:
+            json.dump({"meta": {"merged_from": args.merge}, "rows": rows},
+                      f, indent=2)
+        print(f"# merged {len(args.merge)} shard files "
+              f"({len(rows)} rows) -> {args.out}", file=sys.stderr)
+        return
 
     if args.preset:
         p = PRESETS[args.preset]
@@ -224,6 +299,12 @@ def main(argv=None) -> None:
             containers=args.containers,
             container_capacity_mb=args.container_capacity_mb,
             keepalive_ms=args.keepalive_ms)
+
+    if args.shard:
+        full = len(grid)
+        grid = shard_grid(grid, args.shard)
+        print(f"# shard {args.shard}: {len(grid)}/{full} cells",
+              file=sys.stderr)
 
     if args.profile:
         profile_slowest_cell(grid)

@@ -162,7 +162,9 @@ class ContainerPool:
         self.cold_starts = 0
         self.evictions_ttl = 0
         self.evictions_capacity = 0
+        self.evictions_flush = 0  # live sandboxes destroyed by flush()
         self.dropped = 0          # releases larger than the whole pool
+        self.prewarmed = 0        # sandboxes provisioned speculatively
         self.warm_mb_ms = 0.0     # integral of idle warm memory over time
         self.n_draws = 0          # cold-start RNG draw counter (stream index)
 
@@ -294,8 +296,13 @@ class ContainerPool:
             self._evict_expired(now)
             while self.idle_mb + mem_mb > self.cfg.capacity_mb:
                 self._evict_oldest(now)
-        ka = self._keepalive_for(func_id, now)
-        expires = now + ka
+        self._admit(func_id, mem_mb, now, self._keepalive_for(func_id, now))
+
+    def _admit(self, func_id: int, mem_mb: float, now: float,
+               keepalive_ms: float) -> None:
+        """Insert one idle warm sandbox (shared by release and prewarm;
+        the caller has already made room)."""
+        expires = now + keepalive_ms
         c = _Warm(func_id, mem_mb, now, expires, seq=self._cap_seq)
         self._cap_seq += 1
         self._idle.setdefault(func_id, []).append(c)
@@ -305,6 +312,52 @@ class ContainerPool:
         if expires < self._min_expiry:
             self._min_expiry = expires
         self._maybe_compact()
+
+    def prewarm(self, func_id: int, mem_mb: float, now: float, n: int = 1,
+                keepalive_ms: Optional[float] = None) -> int:
+        """Provider-initiated speculative provisioning: place up to ``n``
+        warm sandboxes for ``func_id`` in the idle set ahead of a
+        predicted burst. Unlike ``release``, pre-warming never sacrifices
+        an existing LIVE sandbox for room — an observed-warm container is
+        evidence, a prediction is a bet — so provisioning stops once only
+        live containers stand in the way (expired ones are reaped).
+        Returns how many were actually placed. Pre-warmed sandboxes meter
+        ``warm_mb_ms`` like any other idle container: prediction is not
+        free, it is paid for in provider-side memory-hold dollars."""
+        self._flush(now)
+        placed = 0
+        ka = keepalive_ms if keepalive_ms is not None \
+            else self._keepalive_for(func_id, now)
+        for _ in range(n):
+            if self.idle_mb + mem_mb > self.cfg.capacity_mb:
+                self._evict_expired(now)
+                if self.idle_mb + mem_mb > self.cfg.capacity_mb:
+                    break
+            self._admit(func_id, mem_mb, now, ka)
+            self.prewarmed += 1
+            placed += 1
+        return placed
+
+    def flush(self, now: float) -> int:
+        """Decommission the warm set (node removal / chaos kill / warm
+        pool loss): every idle sandbox is destroyed at ``now``, with its
+        memory meter stopped at ``min(expiry, now)`` — an already-expired
+        container still counts as a TTL eviction, a live one as a flush
+        eviction. Returns the number of LIVE sandboxes destroyed."""
+        self._flush(now)
+        n_live = 0
+        for fid in list(self._idle):
+            for c in self._idle.pop(fid):
+                if c.expires_at <= now:
+                    self._retire(c, c.expires_at)
+                    self.evictions_ttl += 1
+                else:
+                    self._retire(c, now)
+                    self.evictions_flush += 1
+                    n_live += 1
+        self._min_expiry = float("inf")
+        self._maybe_compact()
+        return n_live
 
     def release_at(self, func_id: int, mem_mb: float, now: float,
                    tid: int) -> None:
@@ -424,7 +477,9 @@ class ContainerPool:
             "cold_start_rate": (self.cold_starts / total) if total else 0.0,
             "evictions_ttl": self.evictions_ttl,
             "evictions_capacity": self.evictions_capacity,
+            "evictions_flush": self.evictions_flush,
             "dropped": self.dropped,
+            "prewarmed": self.prewarmed,
             "idle_mb": self.idle_mb,
             "warm_mb_ms": self.warm_mb_ms,
         }

@@ -61,6 +61,14 @@ def cold_start_cost_usd(init_ms: float, mem_mb: float) -> float:
     return init_ms * price_per_ms(mem_mb)
 
 
+def rejected_request_cost_usd(n_rejected: int) -> float:
+    """Admission-shed invocations still hit the front door: the
+    per-request fee is incurred (and, for the operator, is pure loss —
+    no execution revenue behind it). Reported SEPARATELY from the
+    execution bill so shedding can never masquerade as savings."""
+    return n_rejected * PRICE_PER_REQUEST
+
+
 def warm_pool_hold_cost_usd(warm_mb_ms: float) -> float:
     """Provider-side cost of the idle warm set: the integral of resident
     idle sandbox memory over time (MB x ms), as accumulated by

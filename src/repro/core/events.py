@@ -105,6 +105,7 @@ class Task:
     migrations: int = 0
     ctx_switches: int = 0
     failed: bool = False
+    retries: int = 0              # restarts after a chaos node kill
     aux_of: Optional[int] = None  # microVM mode: auxiliary thread's parent
     # -- container lifecycle ------------------------------------------
     cold_start: bool = False
@@ -501,6 +502,26 @@ class Scheduler:
         # pop would have (end-of-run settle/stats read self.now).
         if self._ff_now > self.now:
             self.now = self._ff_now
+        return self
+
+    def shutdown(self, t: Optional[float] = None) -> "Scheduler":
+        """Decommission this node at time ``t`` (>= now): the machine is
+        gone, so the warm-pool memory meter must stop HERE — not keep
+        (mis)counting until whenever a roll-up next settles the pool —
+        and the parked periodic timers (keep-alive reaper, util
+        sampling) must die with it instead of waiting for an inject that
+        will never come. Idempotent; graceful removal drains first,
+        chaos kills call it with work still in flight (the cluster layer
+        requeues that work elsewhere)."""
+        t = self.now if t is None else max(self.now, t)
+        self.now = t
+        self._parked_timers.clear()
+        if self.containers is not None:
+            # Bring the hold integral current, then destroy the idle
+            # warm set: expired sandboxes stop metering at their expiry,
+            # live ones at the decommission instant.
+            self.containers.settle(self.now)
+            self.containers.flush(self.now)
         return self
 
     # -- load snapshot (cluster dispatch) ---------------------------------

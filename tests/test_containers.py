@@ -172,6 +172,62 @@ def test_cold_start_draw_counter_indexes_stream():
     assert [q.cold_start_ms(256) for _ in range(5)] == draws
 
 
+def test_prewarm_pool_invariants_property():
+    """Pre-warm invariants under random interleavings: capacity holds,
+    real warmth is never sacrificed for a bet, counters reconcile, and
+    the interleaved run is deterministic. (The broader random-op
+    hypothesis suite in test_properties.py also drives prewarm/flush
+    through its op alphabet.)"""
+    hyp = pytest.importorskip(
+        "hypothesis", reason="install the [test] extra for property tests")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(
+        st.tuples(st.floats(0.0, 5_000.0), st.integers(0, 4),
+                  st.sampled_from([128, 256, 512]),
+                  st.booleans()),  # True = prewarm, False = invoke
+        min_size=1, max_size=60)
+
+    @settings(max_examples=40, deadline=None)
+    @given(ops, st.integers(0, 3))
+    def check(seq, seed):
+        p = ContainerPool(ContainerConfig(capacity_mb=1_024.0,
+                                          keepalive_ms=8_000.0), seed=seed)
+        now, trace = 0.0, []
+        for dt, fid, mem, is_prewarm in seq:
+            now += dt
+            if is_prewarm:
+                before, _ = p.live_view(now)
+                trace.append(("pw", p.prewarm(fid, mem, now, n=2)))
+                after, _ = p.live_view(now)
+                # a bet never shrinks any OTHER function's LIVE warm
+                # set (expired sandboxes may be reaped to make room)
+                for k, v in before.items():
+                    if k != fid:
+                        assert after.get(k, 0) >= v
+            else:
+                trace.append(("hit", p.acquire(fid, mem, now)))
+                p.release(fid, mem, now)
+            p.check_invariants()
+            assert p.idle_mb <= 1_024.0 + 1e-6
+        assert p.warm_hits + p.cold_starts == \
+            sum(1 for *_, ip in seq if not ip)
+        assert p.prewarmed == sum(t[1] for t in trace if t[0] == "pw")
+        q = ContainerPool(ContainerConfig(capacity_mb=1_024.0,
+                                          keepalive_ms=8_000.0), seed=seed)
+        now2, trace2 = 0.0, []
+        for dt, fid, mem, is_prewarm in seq:
+            now2 += dt
+            if is_prewarm:
+                trace2.append(("pw", q.prewarm(fid, mem, now2, n=2)))
+            else:
+                trace2.append(("hit", q.acquire(fid, mem, now2)))
+                q.release(fid, mem, now2)
+        assert trace == trace2
+
+    check()
+
+
 def test_histogram_keepalive_tracks_interarrival_times():
     cfg = ContainerConfig(policy="histogram", keepalive_ms=1e9,
                           hist_min_ms=100.0, hist_max_ms=4_000.0)

@@ -93,12 +93,14 @@ def test_cost_ladder_ordering(execs):
 # An op sequence is (dt, func_id, mem, kind): kind 0 = acquire+release
 # (an instantaneous invocation), 1 = acquire only (container leaves the
 # pool and never returns: invocation still running at horizon), 2 =
-# reaper sweep. Time advances monotonically by dt.
+# reaper sweep, 3 = speculative pre-warm (provider-initiated placement),
+# 4 = flush (decommission / chaos warm-pool wipe). Time advances
+# monotonically by dt.
 
 pool_ops = st.lists(
     st.tuples(st.floats(0.0, 10_000.0), st.integers(0, 6),
               st.sampled_from([128, 256, 512, 1024]),
-              st.integers(0, 2)),
+              st.integers(0, 4)),
     min_size=1, max_size=80,
 )
 pool_cfgs = st.builds(
@@ -116,6 +118,14 @@ def _drive(pool: ContainerPool, ops):
         now += dt
         if kind == 2:
             trace.append(("sweep", pool.evict_expired(now)))
+            continue
+        if kind == 3:
+            trace.append(("prewarm", pool.prewarm(fid, mem, now, n=2)))
+            pool.check_invariants()
+            continue
+        if kind == 4:
+            trace.append(("flush", pool.flush(now)))
+            pool.check_invariants()
             continue
         hit = pool.acquire(fid, mem, now)
         trace.append(("hit", hit))
@@ -158,6 +168,14 @@ def test_deferred_releases_match_direct_releases(cfg, ops, seed):
         now += dt
         if kind == 2:
             btrace.append(("sweep", buffered.evict_expired(now)))
+            continue
+        if kind == 3:
+            btrace.append(("prewarm", buffered.prewarm(fid, mem, now, n=2)))
+            buffered.check_invariants()
+            continue
+        if kind == 4:
+            btrace.append(("flush", buffered.flush(now)))
+            buffered.check_invariants()
             continue
         btrace.append(("hit", buffered.acquire(fid, mem, now)))
         if kind == 0:

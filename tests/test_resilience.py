@@ -1,0 +1,690 @@
+"""Fleet resilience & elasticity: chaos harness, admission control,
+predictive pre-warming, learned dispatch, sharded sweeps, trend report,
+and the remove_node decommission fix."""
+import json
+import math
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.cluster import (AdmissionConfig, AdmissionControl, ChaosEvent,
+                           ChaosSchedule, ClusterSim, CostAwareDispatch,
+                           PrewarmConfig, Provisioner, build_grid,
+                           build_plan, churn_preset, kill_heal, merge_rows,
+                           run_cluster, shard_grid)
+from repro.core import ContainerConfig, ContainerPool, Task
+from repro.core.containers import expected_cold_ms
+from repro.core.cost import PRICE_PER_REQUEST
+
+from conftest import mk_tasks
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from benchmarks import regression_gate as gate  # noqa: E402
+from benchmarks import trend_report  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def fleet_workload():
+    from repro.traces import TraceSpec, generate_workload
+    spec = TraceSpec(minutes=1, invocations_per_min=900, n_functions=40,
+                     seed=3)
+    return generate_workload(spec).tasks
+
+
+CC = ContainerConfig(keepalive_ms=30_000.0, cold_jitter=0.0)
+
+
+# -- chaos schedules -----------------------------------------------------------
+
+def test_chaos_schedule_sorts_and_validates():
+    s = ChaosSchedule(events=(
+        ChaosEvent(t=50.0, action="heal"),
+        ChaosEvent(t=10.0, action="kill", node="node0"),
+    ))
+    assert [e.t for e in s] == [10.0, 50.0]
+    with pytest.raises(ValueError):
+        ChaosEvent(t=0.0, action="explode")
+    with pytest.raises(ValueError):
+        kill_heal(100.0, 50.0)
+
+
+def test_kill_requeues_in_flight_work(fleet_workload):
+    """A killed node's unfinished invocations restart elsewhere: nothing
+    is lost, progress is reset, and the victim's FINISHED work still
+    counts in the fleet roll-up."""
+    chaos = kill_heal(15_000.0, 40_000.0, node="node0", spec="hybrid")
+    sim = ClusterSim(n_nodes=3, cores_per_node=8, node_policies="hybrid",
+                     dispatcher="least_loaded", containers=CC)
+    res = sim.run(fleet_workload, chaos=chaos)
+    assert len(res.tasks) == len(fleet_workload)
+    assert len(res.failed) == 0 and len(res.shed) == 0
+    assert sorted(t.tid for t in res.tasks) == \
+        sorted(t.tid for t in fleet_workload)
+    assert res.requeued() > 0
+    # requeued tasks carry the retry marker and a clean billed span
+    retried = [t for t in res.tasks if t.retries > 0]
+    assert len(retried) == res.requeued()
+    for t in retried:
+        assert t.completion > 15_000.0     # finished after the kill
+        assert t.first_run is not None
+    # the victim is retired, the healed node is live
+    assert res.n_retired == 1
+    ids = {n.node_id for n in sim.nodes}
+    assert "node0" not in ids and "node3" in ids
+    # per-event fleet metrics
+    assert [e["action"] for e in res.chaos_events] == ["kill", "heal"]
+    assert res.chaos_events[0]["requeued"] == res.requeued()
+
+
+def test_chaos_determinism_same_seed_same_rollup(fleet_workload):
+    """Same seed + same schedule => bit-identical fleet roll-ups."""
+    chaos = churn_preset(60_000.0, "hybrid")
+    adm = AdmissionConfig(max_load=1.5, overload_action="queue")
+    outs = []
+    for _ in range(2):
+        sim = ClusterSim(n_nodes=3, cores_per_node=8,
+                         node_policies="hybrid", dispatcher="cost_aware",
+                         seed=11, containers=CC, admission=adm)
+        res = sim.run(fleet_workload,
+                      chaos=chaos,
+                      prewarm=Provisioner.from_workload(fleet_workload))
+        outs.append((list(sim.assignments), res.summary(),
+                     sorted((t.tid, t.completion) for t in res.tasks)))
+    assert outs[0] == outs[1]
+
+
+def test_kill_stops_victims_warm_pool_meter_at_kill():
+    """The killed node's warm pool is destroyed AT the kill instant:
+    idle memory is metered up to then and no further."""
+    tasks = mk_tasks([(0.0, 100.0), (0.0, 100.0)])
+    sim = ClusterSim(n_nodes=2, cores_per_node=2, node_policies="fifo",
+                     dispatcher="round_robin", containers=CC)
+    res = sim.run(tasks, chaos=ChaosSchedule(events=(
+        ChaosEvent(t=5_000.0, action="kill", node="node0"),)),
+        fresh_tasks=False)
+    victim = next(n for n in sim._retired if n.node_id == "node0")
+    pool = victim.sched.containers
+    assert pool.idle_mb == 0.0
+    done = victim.sched.completed[0]
+    assert pool.warm_mb_ms == pytest.approx(
+        256 * (5_000.0 - done.completion))
+    assert pool.evictions_flush == 1
+    assert len(res.tasks) == 2
+
+
+def test_flush_warm_event_forces_cold_restarts():
+    """flush_warm wipes the pool but keeps the node: the next invocation
+    of a previously-warm function pays a cold start."""
+    tasks = mk_tasks([(0.0, 100.0), (10_000.0, 100.0)])
+    for t in tasks:
+        t.func_id = 7
+    sim = ClusterSim(n_nodes=1, cores_per_node=2, node_policies="fifo",
+                     dispatcher="round_robin", containers=CC)
+    res = sim.run(tasks, chaos=ChaosSchedule(events=(
+        ChaosEvent(t=5_000.0, action="flush_warm", node="node0"),)),
+        fresh_tasks=False)
+    by_tid = {t.tid: t for t in res.tasks}
+    assert by_tid[0].cold_start
+    assert by_tid[1].cold_start          # would be warm without the wipe
+    assert res.chaos_events[0]["warm_flushed"] == 1
+    assert res.n_retired == 0
+
+
+def test_heal_without_spec_uses_schedule_default():
+    """A spec-less heal brings up the SCHEDULE's heal_spec policy, not
+    a hardcoded hybrid."""
+    tasks = mk_tasks([(0.0, 50.0), (6_000.0, 50.0)])
+    sim = ClusterSim(n_nodes=1, cores_per_node=1, node_policies="cfs",
+                     dispatcher="round_robin")
+    sim.run(tasks, chaos=ChaosSchedule(events=(
+        ChaosEvent(t=5_000.0, action="heal"),), heal_spec="cfs"),
+        fresh_tasks=False)
+    assert [n.policy for n in sim.nodes] == ["cfs", "cfs"]
+
+
+def test_shed_after_conforming_admit_refunds_consumed_token():
+    """A task that CONSUMED a token (conforming) and is then shed by
+    the load ceiling also refunds it — not just queued reservations."""
+    adm = AdmissionConfig(rate_per_s=1.0, burst=1.0, rate_action="shed",
+                          max_load=0.5, overload_action="shed")
+    ac = AdmissionControl(adm)
+    busy = [{"load": 2.0}]
+    assert ac.decide(_T(0, func_id=3), busy, 0.0)[0] == "shed"
+    # the bucket is untouched: the very next arrival conforms
+    assert ac.decide(_T(1, func_id=3), [], 1.0)[0] == "admit"
+    assert ac.stats()["shed_overload"] == 1
+
+
+def test_chaos_event_on_missing_node_is_noop():
+    tasks = mk_tasks([(0.0, 50.0)])
+    sim = ClusterSim(n_nodes=1, cores_per_node=1, node_policies="fifo",
+                     dispatcher="round_robin")
+    res = sim.run(tasks, chaos=ChaosSchedule(events=(
+        ChaosEvent(t=10.0, action="kill", node="node9"),)),
+        fresh_tasks=False)
+    assert res.chaos_events[0]["action"] == "kill:noop"
+    assert len(res.tasks) == 1
+
+
+def test_kill_of_last_node_sheds_remaining_work():
+    tasks = mk_tasks([(0.0, 10_000.0), (5_000.0, 100.0)])
+    sim = ClusterSim(n_nodes=1, cores_per_node=1, node_policies="fifo",
+                     dispatcher="round_robin",
+                     admission=AdmissionConfig(rate_per_s=1.0, burst=5.0))
+    res = sim.run(tasks, chaos=ChaosSchedule(events=(
+        ChaosEvent(t=1_000.0, action="kill", node="node0"),)),
+        fresh_tasks=False)
+    # the in-flight task and the later arrival have nowhere to go
+    assert len(res.tasks) == 0
+    assert len(res.shed) == 2
+    assert all(t.failed for t in res.shed)
+    # the admission books balance even for fleet-empty sheds: counted,
+    # and the consumed rate tokens refunded (nothing left charged)
+    assert sim.admission.shed_no_capacity >= 1
+    assert not sim.admission._rate_charged
+    # an all-shed run still summarizes (zeros, not an IndexError)
+    s = res.summary()
+    assert s["n"] == 0 and s["shed"] == 2
+    assert s["makespan_s"] == 0.0 and s["cost_usd"] == 0.0
+
+
+def test_consumed_provisioner_is_rejected():
+    tasks = mk_tasks([(60_500.0, 500.0), (61_000.0, 500.0)])
+    prov = Provisioner.from_workload(tasks)
+    sim = ClusterSim(n_nodes=1, cores_per_node=2, node_policies="fifo",
+                     dispatcher="round_robin", containers=CC)
+    sim.run(tasks, prewarm=prov)
+    fresh = ClusterSim(n_nodes=1, cores_per_node=2, node_policies="fifo",
+                       dispatcher="round_robin", containers=CC)
+    with pytest.raises(ValueError, match="already consumed"):
+        fresh.run(tasks, prewarm=prov)
+
+
+# -- admission control ---------------------------------------------------------
+
+class _T:
+    def __init__(self, tid, func_id=0):
+        self.tid = tid
+        self.func_id = func_id
+
+
+def test_token_bucket_gcra_conformance():
+    """rate 1/s, burst 2: two immediate admits, the third sheds, and the
+    sustained rate is honoured afterwards."""
+    ac = AdmissionControl(rate_per_s=1.0, burst=2.0, rate_action="shed")
+    assert ac.decide(_T(0), [], 0.0)[0] == "admit"
+    assert ac.decide(_T(1), [], 0.0)[0] == "admit"
+    assert ac.decide(_T(2), [], 0.0)[0] == "shed"
+    assert ac.decide(_T(3), [], 1_000.0)[0] == "admit"  # 1 token matured
+    assert ac.decide(_T(4), [], 1_000.0)[0] == "shed"
+    st = ac.stats()
+    assert st["admitted"] == 3 and st["shed"] == st["shed_rate"] == 2
+
+
+def test_token_bucket_queue_reserves_future_token():
+    ac = AdmissionControl(rate_per_s=1.0, burst=1.0, rate_action="queue")
+    assert ac.decide(_T(0), [], 0.0)[0] == "admit"
+    outcome, when = ac.decide(_T(1), [], 0.0)
+    assert outcome == "queue" and when == pytest.approx(1_000.0)
+    # re-presentation skips the bucket (token already reserved)
+    assert ac.decide(_T(1), [], when, first=False)[0] == "admit"
+    assert ac.stats()["queue_wait_ms"] == pytest.approx(1_000.0)
+    # the reservation consumed the t=1000 token: a fresh arrival at
+    # t=1000 queues behind it
+    assert ac.decide(_T(2), [], 1_000.0)[0] == "queue"
+
+
+def test_shed_completed_failed_partition_every_arrival(fleet_workload):
+    """Admission accounting: every arrival ends in exactly one of
+    {completed, shed, failed}, and shed invocations are priced."""
+    adm = AdmissionConfig(rate_per_s=0.5, burst=2.0, rate_action="shed")
+    res = run_cluster(fleet_workload, n_nodes=2, cores_per_node=8,
+                      node_policy="fifo", dispatcher="least_loaded",
+                      admission=adm)
+    s = res.summary()
+    assert s["shed"] > 0
+    assert s["n"] + s["shed"] + s["failed"] == len(fleet_workload)
+    shed_tids = {t.tid for t in res.shed}
+    done_tids = {t.tid for t in res.tasks}
+    assert not (shed_tids & done_tids)
+    assert shed_tids | done_tids == {t.tid for t in fleet_workload}
+    assert all(t.failed for t in res.shed)
+    assert res.rejected_cost_usd() == pytest.approx(
+        s["shed"] * PRICE_PER_REQUEST)
+    assert res.total_cost_usd() == pytest.approx(
+        res.cost_usd() + res.rejected_cost_usd())
+
+
+def test_overload_queue_delays_but_completes_everything():
+    """Load ceiling with queue action: nothing is lost, the overflow
+    invocation just waits at the (unbilled) front door."""
+    tasks = mk_tasks([(0.0, 1_000.0), (0.0, 1_000.0), (0.0, 1_000.0)])
+    adm = AdmissionConfig(max_load=0.5, overload_action="queue",
+                          queue_backoff_ms=100.0, max_queue_ms=60_000.0)
+    sim = ClusterSim(n_nodes=1, cores_per_node=2, node_policies="fifo",
+                     dispatcher="round_robin", admission=adm)
+    res = sim.run(tasks, fresh_tasks=False)
+    assert len(res.tasks) == 3 and len(res.shed) == 0
+    assert sim.admission.queued > 0
+    assert sim.admission.queue_wait_ms > 0
+    late = max(res.tasks, key=lambda t: t.completion)
+    assert late.response >= 900.0        # held until a core drained
+
+
+def test_overload_spill_overrides_dispatcher_pick():
+    """Spill: when the whole fleet is past the ceiling, the invocation
+    is admitted anyway but force-routed to the least-loaded node, not
+    the dispatcher's (affinity) pick."""
+    adm = AdmissionConfig(max_load=0.9, overload_action="spill")
+    sim = ClusterSim(n_nodes=2, cores_per_node=1, node_policies="fifo",
+                     dispatcher="affinity", admission=adm)
+    # two functions whose ring owners differ, so both nodes load up
+    owners = {f: sim.dispatcher.owner(f, sim.nodes) for f in range(16)}
+    fa = next(f for f, o in owners.items() if o == 0)
+    fb = next(f for f, o in owners.items() if o == 1)
+    tasks = mk_tasks([(0.0, 10_000.0), (1.0, 10_000.0), (2.0, 10_000.0)])
+    tasks[0].func_id, tasks[1].func_id, tasks[2].func_id = fa, fb, fa
+    res = sim.run(tasks, fresh_tasks=False)
+    assert sim.admission.spilled == 1    # the third arrival spilled
+    assert sim.admission.admitted == 3
+    assert len(res.tasks) == 3 and len(res.shed) == 0
+
+
+def test_overload_queue_gives_up_after_max_queue_ms():
+    tasks = mk_tasks([(0.0, 60_000.0), (10.0, 100.0)])
+    adm = AdmissionConfig(max_load=0.5, overload_action="queue",
+                          queue_backoff_ms=100.0, max_queue_ms=1_000.0)
+    sim = ClusterSim(n_nodes=1, cores_per_node=1, node_policies="fifo",
+                     dispatcher="round_robin", admission=adm)
+    res = sim.run(tasks, fresh_tasks=False)
+    assert len(res.tasks) == 1 and len(res.shed) == 1
+    assert res.shed[0].tid == 1
+    assert sim.admission.shed_overload == 1
+
+
+def test_chaos_requeue_bypasses_admission():
+    """A requeued invocation was already admitted once: the retry must
+    not be re-charged against the rate bucket (a tight shed-on-rate
+    limit would otherwise reject already-running work) nor double-count
+    'admitted'."""
+    tasks = mk_tasks([(0.0, 8_000.0), (1.0, 100.0)])
+    adm = AdmissionConfig(rate_per_s=0.2, burst=2.0, rate_action="shed")
+    sim = ClusterSim(n_nodes=2, cores_per_node=1, node_policies="fifo",
+                     dispatcher="round_robin", admission=adm)
+    res = sim.run(tasks, chaos=ChaosSchedule(events=(
+        ChaosEvent(t=1_000.0, action="kill", node="node0"),)),
+        fresh_tasks=False)
+    assert res.requeued() == 1
+    assert len(res.tasks) == 2 and len(res.shed) == 0
+    # one admission decision per ORIGINAL arrival only
+    assert sim.admission.admitted == 2
+
+
+def test_shed_after_rate_queue_refunds_the_token():
+    """queue-on-rate + shed-on-overload: a task that reserved a future
+    token and is then shed by the load ceiling gives the token back."""
+    adm = AdmissionConfig(rate_per_s=1.0, burst=1.0, rate_action="queue",
+                          max_load=0.5, overload_action="shed")
+    ac = AdmissionControl(adm)
+    busy = [{"load": 2.0}]
+    assert ac.decide(_T(0, func_id=3), [], 0.0)[0] == "admit"
+    outcome, when = ac.decide(_T(1, func_id=3), [], 0.0)
+    assert outcome == "queue"                     # token reserved
+    assert ac.decide(_T(1, func_id=3), busy, when,
+                     first=False)[0] == "shed"    # overload kills it
+    # the refunded token is immediately available to the next arrival
+    assert ac.decide(_T(2, func_id=3), [], when)[0] == "admit"
+
+
+def test_remove_node_feeds_final_completions_to_learner():
+    """Graceful removal drains the node; those completions must still
+    reach a learning dispatcher before the node is retired."""
+    tasks = mk_tasks([(0.0, 1_000.0), (10.0, 1_000.0)])
+    sim = ClusterSim(n_nodes=1, cores_per_node=1, node_policies="fifo",
+                     dispatcher="cost_aware", containers=CC)
+    for task in tasks:
+        sim.nodes[0].step(task.arrival)
+        i = sim.dispatcher.select(task, sim.nodes, task.arrival)
+        sim.nodes[i].inject(task, task.arrival)
+    sim.remove_node(0)
+    # the second dispatch saw load 1.0: its completion must have been
+    # harvested during removal and trained the estimator
+    assert sim.dispatcher.n_observed == 1
+    assert not sim.dispatcher._dispatch_load     # no leaked feedback keys
+
+
+def test_admission_config_validation():
+    with pytest.raises(ValueError):
+        AdmissionConfig(rate_action="drop")
+    with pytest.raises(ValueError):
+        AdmissionConfig(overload_action="bounce")
+    with pytest.raises(ValueError):
+        AdmissionConfig(rate_per_s=0.0)   # would divide by zero later
+    with pytest.raises(ValueError):
+        AdmissionConfig(burst=0.0)
+
+
+# -- predictive pre-warming ----------------------------------------------------
+
+def test_build_plan_reads_per_minute_counts():
+    tasks = []
+    tid = 0
+    # func 1: 30 invocations in minute 1; func 2: a single one (below
+    # min_per_min); func 3: 10 in minute 0.
+    for i in range(30):
+        tasks.append(Task(tid=tid, arrival=60_000.0 + i * 1_000.0,
+                          service=2_000.0, func_id=1, mem_mb=512))
+        tid += 1
+    tasks.append(Task(tid=tid, arrival=65_000.0, service=100.0, func_id=2))
+    tid += 1
+    for i in range(10):
+        tasks.append(Task(tid=tid, arrival=i * 100.0, service=100.0,
+                          func_id=3))
+        tid += 1
+    plan = build_plan(tasks, PrewarmConfig(lead_ms=2_000.0, min_per_min=2))
+    rows = {(fid): (t, mem, n) for t, fid, mem, n in plan}
+    assert 2 not in rows                 # single invocation: no bet
+    t1, mem1, n1 = rows[1]
+    assert t1 == pytest.approx(58_000.0)  # one lead ahead of minute 1
+    assert mem1 == 512
+    assert n1 == 1                       # 30 x 2s / 60s = 1 concurrent
+    t3, _, n3 = rows[3]
+    assert t3 == 0.0                     # minute 0 clamps to the origin
+    assert n3 == 1
+
+
+def test_pool_prewarm_never_evicts_live_sandboxes():
+    """Speculative provisioning respects capacity and never sacrifices
+    an observed-warm container for a bet."""
+    p = ContainerPool(ContainerConfig(capacity_mb=1_024.0,
+                                      keepalive_ms=60_000.0,
+                                      cold_jitter=0.0), seed=0)
+    p.release(1, 512, 0.0)               # real warmth
+    placed = p.prewarm(2, 512, 10.0, n=3)
+    assert placed == 1                   # room for one, then stop
+    assert p.has_warm(1)                 # the real sandbox survived
+    assert p.prewarmed == 1
+    assert p.evictions_capacity == 0
+    p.check_invariants()
+    # a pre-warmed sandbox is a normal warm hit afterwards
+    assert p.acquire(2, 512, 20.0)
+    # ...and expired pre-warm slots are reaped so a bet can re-enter
+    q = ContainerPool(ContainerConfig(capacity_mb=512.0,
+                                      keepalive_ms=1_000.0), seed=0)
+    q.prewarm(1, 512, 0.0)
+    assert q.prewarm(2, 512, 5_000.0) == 1   # func 1's slot expired
+    q.check_invariants()
+
+
+def test_fleet_prewarm_cuts_cold_starts(fleet_workload):
+    kw = dict(n_nodes=3, cores_per_node=8, node_policy="hybrid",
+              dispatcher="warm_affinity", containers=CC)
+    reactive = run_cluster(fleet_workload, **kw)
+    prov = Provisioner.from_workload(fleet_workload)
+    warmed = run_cluster(fleet_workload, prewarm=prov, **kw)
+    assert warmed.cold_start_rate() < reactive.cold_start_rate()
+    st = warmed.prewarm_stats
+    assert st["placed"] > 0 and st["placed"] <= st["requested"]
+    assert warmed.summary()["prewarmed"] == st["placed"]
+    # pre-warming is paid for in provider-side hold dollars
+    assert warmed.warm_hold_usd() > 0.0
+
+
+def test_prewarm_placement_follows_affinity_owner():
+    """With an affinity-family dispatcher, warmth lands on the ring
+    owner — the node routing will send the function to."""
+    tasks = [Task(tid=i, arrival=60_000.0 + i * 100.0, service=500.0,
+                  func_id=4) for i in range(10)]
+    sim = ClusterSim(n_nodes=3, cores_per_node=2, node_policies="fifo",
+                     dispatcher="affinity", containers=CC)
+    res = sim.run(tasks, prewarm=Provisioner.from_workload(tasks),
+                  fresh_tasks=False)
+    owner = sim.dispatcher.owner(4, sim.nodes)
+    pool = sim.nodes[owner].sched.containers
+    assert pool.prewarmed >= 1
+    # the first invocation of the burst hit the pre-warmed sandbox
+    first = min(res.tasks, key=lambda t: t.tid)
+    assert not first.cold_start
+
+
+# -- learned cost-aware dispatch ----------------------------------------------
+
+def test_rls_converges_to_true_slope():
+    d = CostAwareDispatch(queue_ms_per_load=1_000.0, prior_weight=1.0)
+    for i in range(200):
+        t = Task(tid=i, arrival=0.0, service=100.0)
+        t.first_run = 0.0
+        t.completion = 100.0 + 300.0 * 2.0   # inflation = 300 x load
+        d._dispatch_load[i] = 2.0
+        d.observe_completion(t)
+    assert d.coeff == pytest.approx(300.0, rel=0.05)
+    assert d.n_observed == 200
+
+
+def test_unobserved_dispatcher_routes_like_fixed_coefficient():
+    d = CostAwareDispatch(queue_ms_per_load=1_000.0)
+    assert d.coeff == 1_000.0
+    # zero-load completions carry no slope information
+    t = Task(tid=0, arrival=0.0, service=100.0)
+    t.first_run, t.completion = 0.0, 100.0
+    d._dispatch_load[0] = 0.0
+    d.observe_completion(t)
+    assert d.coeff == 1_000.0
+    # learn=False pins the constant forever
+    frozen = CostAwareDispatch(learn=False)
+    frozen.observe_completion(t)
+    assert frozen.coeff == frozen.queue_ms_per_load
+
+
+def test_learned_dispatch_learns_contention_on_fleet(fleet_workload):
+    """After a CFS fleet run the learned coefficient has moved off the
+    prior and reflects observed contention inflation (> 0)."""
+    sim = ClusterSim(n_nodes=2, cores_per_node=8, node_policies="cfs",
+                     dispatcher="cost_aware", containers=CC)
+    sim.run(fleet_workload)
+    d = sim.dispatcher
+    assert d.n_observed > 100
+    assert d.coeff != pytest.approx(1_000.0)
+    assert d.coeff >= 0.0
+
+
+def test_learned_dispatch_is_deterministic(fleet_workload):
+    w = fleet_workload[:400]
+    outs = []
+    for _ in range(2):
+        sim = ClusterSim(n_nodes=3, cores_per_node=8, node_policies="cfs",
+                         dispatcher="cost_aware", seed=4, containers=CC)
+        res = sim.run(w)
+        outs.append((list(sim.assignments), sim.dispatcher.coeff,
+                     res.summary()))
+    assert outs[0] == outs[1]
+
+
+# -- remove_node decommission (regression) ------------------------------------
+
+def test_remove_node_closes_warm_meter_and_reaper():
+    """Regression: graceful removal used to leave the node's warm pool
+    (and its parked keep-alive reaper) dangling — the idle memory held
+    between the node's last event and its decommission was never
+    metered. Removal must settle the hold integral to the removal
+    instant, destroy the warm set, and clear the parked timers."""
+    tasks = mk_tasks([(0.0, 100.0), (0.0, 100.0)])
+    sim = ClusterSim(n_nodes=2, cores_per_node=2, node_policies="fifo",
+                     dispatcher="round_robin", containers=CC)
+    sim.run(tasks, fresh_tasks=False)
+    node = sim.nodes[0]
+    assert node.sched._parked_timers            # reaper parked post-drain
+    done = node.sched.completed[0]
+    removed = sim.remove_node(0, t=5_000.0)
+    pool = removed.sched.containers
+    assert removed is node
+    assert not removed.sched._parked_timers     # reaper died with the node
+    assert pool.idle_mb == 0.0                  # warm set destroyed
+    # exact metering: idle from completion to the removal instant
+    assert pool.warm_mb_ms == pytest.approx(
+        256 * (5_000.0 - done.completion))
+    # the roll-up is stable however often it is recomputed
+    r1 = sim.result().warm_hold_usd()
+    r2 = sim.result().warm_hold_usd()
+    assert r1 == r2 > 0.0
+
+
+def test_remove_node_meter_stops_at_expiry_when_ttl_lapsed():
+    """If the keep-alive lapsed during the quiescent gap, decommission
+    meters only to the EXPIRY instant (TTL eviction), not to removal."""
+    cc = ContainerConfig(keepalive_ms=2_000.0, cold_jitter=0.0)
+    tasks = mk_tasks([(0.0, 100.0)])
+    sim = ClusterSim(n_nodes=1, cores_per_node=1, node_policies="fifo",
+                     dispatcher="round_robin", containers=cc)
+    sim.run(tasks, fresh_tasks=False)
+    done = sim.nodes[0].sched.completed[0]
+    removed = sim.remove_node(0, t=60_000.0)
+    pool = removed.sched.containers
+    assert pool.evictions_ttl == 1 and pool.evictions_flush == 0
+    assert pool.warm_mb_ms == pytest.approx(256 * 2_000.0)
+    assert done.completion + 2_000.0 < 60_000.0
+
+
+# -- sharded sweeps ------------------------------------------------------------
+
+def _tiny_grid():
+    return build_grid(["cfs", "fifo"], ["random", "round_robin"], [2],
+                      cores_per_node=2, minutes=1,
+                      invocations_per_min=60.0, n_functions=6)
+
+
+def test_shard_grid_partitions_deterministically():
+    grid = _tiny_grid()
+    shards = [shard_grid(grid, f"{i}/3") for i in range(3)]
+    flat = [c for s in shards for c in s]
+    assert len(flat) == len(grid)
+    assert len({id(c) for c in flat}) == len(grid)      # disjoint cover
+    assert shard_grid(grid, "1/3") == shards[1]         # stable
+    with pytest.raises(ValueError):
+        shard_grid(grid, "3/3")
+    with pytest.raises(ValueError):
+        shard_grid(grid, "nope")
+
+
+def test_merge_rows_equals_unsharded_run(tmp_path):
+    """Per-shard artifacts merge into exactly the rows an unsharded
+    sweep produces, in canonical order."""
+    from repro.cluster import run_sweep
+    grid = _tiny_grid()
+    full = run_sweep(grid, parallel=False)
+    paths = []
+    for i in range(2):
+        rows = run_sweep(shard_grid(grid, f"{i}/2"), parallel=False)
+        p = tmp_path / f"shard{i}.json"
+        p.write_text(json.dumps({"meta": {}, "rows": rows}))
+        paths.append(str(p))
+    merged = merge_rows(paths)
+    key = lambda r: (r["node_policy"], r["dispatcher"])  # noqa: E731
+    assert sorted(merged, key=key) == sorted(full, key=key)
+
+
+# -- regression gate: resilience artifact -------------------------------------
+
+def _res_row(cost, chaos="churn", admission="on", prewarm="on"):
+    return {"node_policy": "hybrid", "dispatcher": "cost_aware",
+            "n_nodes": 4, "chaos": chaos, "admission": admission,
+            "prewarm": prewarm, "cost_usd": cost, "n": 100,
+            "makespan_s": 10.0}
+
+
+def test_gate_fails_on_cost_regression_under_chaos_preset(tmp_path):
+    prev = [_res_row(1.0), _res_row(2.0, chaos="off")]
+    new = [_res_row(1.4), _res_row(2.0, chaos="off")]
+    failures, notes = gate.compare(prev, new, threshold=0.15)
+    # ONE failure: the churn cell regressed; the chaos-off cell (a
+    # distinct key) did not, so it produced no second failure.
+    assert len(failures) == 1
+    assert "churn" in failures[0] and "cost_usd" in failures[0]
+
+
+def test_gate_resilience_cells_key_on_feature_axes():
+    a = gate.cell_key(_res_row(1.0))
+    b = gate.cell_key(_res_row(1.0, admission="off"))
+    c = gate.cell_key({"node_policy": "hybrid", "dispatcher": "cost_aware",
+                       "n_nodes": 4, "cost_usd": 1.0})
+    assert a != b
+    assert c == gate.cell_key(_res_row(1.0, chaos="off", admission="off",
+                                       prewarm="off"))
+
+
+# -- trend report --------------------------------------------------------------
+
+def _write_artifacts(d, cost, evps):
+    d.mkdir(parents=True, exist_ok=True)
+    (d / "cluster_matrix.json").write_text(json.dumps({"matrix": [
+        {"node_policy": "hybrid", "dispatcher": "warm_affinity",
+         "n_nodes": 4, "containers": "fixed", "cost_usd": cost,
+         "n": 100, "makespan_s": 10.0}]}))
+    (d / "BENCH_engine.json").write_text(json.dumps([
+        {"policy": "cfs", "containers": "off", "n_cores": 16,
+         "n_tasks": 1000, "events_per_sec": evps}]))
+
+
+def test_trend_report_folds_history_and_flags_regressions(tmp_path):
+    hist = tmp_path / "hist"
+    for i, (cost, evps) in enumerate([(1.0, 100_000.0), (1.05, 98_000.0),
+                                      (0.95, 101_000.0)]):
+        _write_artifacts(hist / str(i), cost, evps)
+    cur = tmp_path / "cur"
+    _write_artifacts(cur, 1.5, 50_000.0)   # cost up 50%, engine halved
+    series = trend_report.collect_series(
+        trend_report.discover_history(hist), cur)
+    assert set(series) == {"cluster", "engine"}
+    cl = series["cluster"][0]
+    assert cl["latest"] == 1.5 and cl["median"] == pytest.approx(1.0)
+    assert cl["delta"] == pytest.approx(0.5)
+    assert len(cl["series"]) == 4
+    md = trend_report.to_markdown(series)
+    assert "moving the wrong way" in md
+    assert "⚠" in md and "cluster" in md and "engine" in md
+    # CLI round trip writes both artifacts
+    out, mdf = tmp_path / "trend.json", tmp_path / "TREND.md"
+    rc = trend_report.main(["--history", str(hist), "--current", str(cur),
+                            "--out", str(out), "--md", str(mdf)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert payload["history_runs"] == 3
+    assert mdf.read_text().startswith("# Benchmark trends")
+
+
+def test_sparkline_shapes():
+    assert trend_report.sparkline([]) == ""
+    assert trend_report.sparkline([1.0, 1.0]) == "▄▄"
+    s = trend_report.sparkline([0.0, 0.5, 1.0])
+    assert s[0] == "▁" and s[-1] == "█"
+
+
+def test_trend_flags_regression_from_zero_baseline():
+    """A cell whose history is all 0.0 and whose latest value is
+    nonzero must warn (∞ regression), not render as missing data."""
+    e = {"cell": "x", "metric": "cost_usd", "direction": "lower",
+         "latest": 1.0, "median": 0.0, "delta": None, "series": [0.0, 1.0]}
+    assert trend_report._regressed(e)
+    assert "⚠" in trend_report._delta_cell(e)
+    md = trend_report.to_markdown({"cluster": [e]})
+    assert "moving the wrong way" in md
+
+
+def test_discover_history_sorts_numerically(tmp_path):
+    """Run 10 must not sort between runs 1 and 2 once history grows."""
+    for name in [str(i) for i in range(12)] + ["zzz"]:
+        (tmp_path / name).mkdir()
+    order = [d.name for d in trend_report.discover_history(tmp_path)]
+    assert order == [str(i) for i in range(12)] + ["zzz"]
+
+
+# -- resilience bench smoke (headline contract) --------------------------------
+
+def test_resilience_bench_rows_carry_gate_keys():
+    from benchmarks.resilience_bench import VARIANTS
+    assert {v[0] for v in VARIANTS} == \
+        {"reactive", "admission", "prewarm", "full"}
+    # the full variant is the learned dispatcher + both layers
+    full = next(v for v in VARIANTS if v[0] == "full")
+    assert full[1] == "cost_aware" and full[2] and full[3]
