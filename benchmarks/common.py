@@ -6,7 +6,6 @@ import json
 import time
 from pathlib import Path
 
-from repro.core import run_policy
 from repro.traces import TraceSpec, generate_workload
 
 RESULTS = Path("results/benchmarks")

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import run_policy
+from repro.core import execute_policy
 from repro.core.cost import MEMORY_LADDER_MB
 from repro.core.hybrid import Rightsizer, TimeLimitAdapter
 
@@ -33,7 +33,7 @@ def fig01_cost_fifo_cfs():
     w = paper_workload()
     rows = []
     for policy in ("fifo", "cfs"):
-        res = run_policy(policy, w)
+        res = execute_policy(policy, w)
         ladder = res.cost_ladder()
         for mb in MEMORY_LADDER_MB:
             rows.append({"policy": policy, "mem_mb": mb,
@@ -49,7 +49,7 @@ def fig04_fifo_vs_cfs():
     w = paper_workload()
     rows = []
     for policy in ("fifo", "cfs"):
-        res = run_policy(policy, w)
+        res = execute_policy(policy, w)
         row = _metrics_row(res, policy)
         row["execution_cdf"] = cdf_points(res.execution())
         row["response_cdf"] = cdf_points(res.response())
@@ -62,16 +62,16 @@ def fig05_fifo_preempt():
     """Fig. 5: FIFO vs FIFO_100ms (preemption improves response &
     turnaround at execution-time cost)."""
     w = paper_workload()
-    rows = [_metrics_row(run_policy("fifo", w), "fifo"),
-            _metrics_row(run_policy("fifo_preempt", w, quantum_ms=100.0),
+    rows = [_metrics_row(execute_policy("fifo", w), "fifo"),
+            _metrics_row(execute_policy("fifo_preempt", w, quantum_ms=100.0),
                          "fifo_100ms")]
     return rows
 
 
 def fig06_hybrid_vs_fifo():
     w = paper_workload()
-    return [_metrics_row(run_policy("fifo", w), "fifo"),
-            _metrics_row(run_policy("hybrid", w, time_limit_ms=1633.0),
+    return [_metrics_row(execute_policy("fifo", w), "fifo"),
+            _metrics_row(execute_policy("hybrid", w, time_limit_ms=1633.0),
                          "fifo+cfs(25/25)")]
 
 
@@ -80,11 +80,11 @@ def fig11_core_tuning():
     w = paper_workload()
     rows = []
     for n_fifo in (10, 20, 25, 30, 40):
-        res = run_policy("hybrid", w, n_fifo=n_fifo,
+        res = execute_policy("hybrid", w, n_fifo=n_fifo,
                          time_limit_ms=1633.0)
         row = _metrics_row(res, f"hybrid({n_fifo}/{50 - n_fifo})")
         rows.append(row)
-    rows.append(_metrics_row(run_policy("cfs", w), "cfs"))
+    rows.append(_metrics_row(execute_policy("cfs", w), "cfs"))
     return rows
 
 
@@ -92,8 +92,8 @@ def fig12_14_hybrid_vs_cfs():
     """Figs. 12-14: hybrid vs CFS metrics + per-core preemptions +
     group utilization."""
     w = paper_workload()
-    hyb = run_policy("hybrid", w, time_limit_ms=1633.0, trace_util=True)
-    cfs = run_policy("cfs", w)
+    hyb = execute_policy("hybrid", w, time_limit_ms=1633.0, trace_util=True)
+    cfs = execute_policy("cfs", w)
     rows = [_metrics_row(hyb, "hybrid"), _metrics_row(cfs, "cfs")]
     rows[0]["preempt_per_core"] = hyb.preempt_per_core
     rows[1]["preempt_per_core"] = cfs.preempt_per_core
@@ -109,7 +109,7 @@ def fig15_17_time_limit():
     w = paper_workload()
     rows = []
     for pct in (25, 50, 75, 90, 95):
-        res = run_policy("hybrid", w,
+        res = execute_policy("hybrid", w,
                          adapter=TimeLimitAdapter(pct=float(pct),
                                                   record_series=True))
         row = _metrics_row(res, f"ts=p{pct}")
@@ -124,8 +124,8 @@ def fig15_17_time_limit():
 
 def fig18_19_rightsizing():
     w = paper_workload()
-    fixed = run_policy("hybrid", w, adapt_pct=95.0, trace_util=True)
-    dyn = run_policy("hybrid", w, adapt_pct=95.0, rightsize=True,
+    fixed = execute_policy("hybrid", w, adapt_pct=95.0, trace_util=True)
+    dyn = execute_policy("hybrid", w, adapt_pct=95.0, rightsize=True,
                      trace_util=True)
     rows = [_metrics_row(fixed, "fixed-cores"),
             _metrics_row(dyn, "rightsized")]
@@ -147,7 +147,7 @@ def fig20_table1_cost():
             ("fifo", "fifo", {}),
             ("cfs", "cfs", {}),
             ("hybrid", "ours", dict(adapt_pct=95.0, rightsize=True))):
-        res = run_policy(policy, w, ghost_mode=True, **kw)
+        res = execute_policy(policy, w, ghost_mode=True, **kw)
         row = _metrics_row(res, name)
         row["cost_ladder"] = {str(mb): c
                               for mb, c in res.cost_ladder().items()}
@@ -162,7 +162,7 @@ def fig21_22_microvm():
     rows = []
     for policy, kw in (("cfs", {}),
                        ("hybrid", dict(adapt_pct=95.0))):
-        res = run_policy(policy, w, microvm=True, **kw)
+        res = execute_policy(policy, w, microvm=True, **kw)
         row = _metrics_row(res, f"uvm-{policy}")
         row["failed_to_launch"] = len(res.failed)
         rows.append(row)
@@ -184,7 +184,7 @@ def fig23_pareto():
             ("hybrid", "hybrid", dict(time_limit_ms=1633.0)),
             ("hybrid", "hybrid+adapt+rs",
              dict(adapt_pct=95.0, rightsize=True))):
-        res = run_policy(policy, w, **kw)
+        res = execute_policy(policy, w, **kw)
         rows.append({"policy": name, "cost_usd": res.cost_usd(),
                      "p99_response_s": res.p("response", 99) / 1e3})
     return rows

@@ -63,12 +63,17 @@ def cell_key(row: dict) -> tuple:
     # rows have always carried them) keep a smoke-tier artifact from
     # being "compared" against a full-trace baseline as if same-scale,
     # exactly as n_tasks does for engine cells.
+    # The workload axis defaults to "azure" (every pre-Scenario artifact
+    # was an Azure-trace run), so old baselines stay comparable and the
+    # llm-FaaS bench's cells simply become new cells under the same key
+    # function.
     return (row.get("node_policy"), row.get("dispatcher"),
             row.get("n_nodes"), row.get("load_scale", 1.0),
             row.get("containers", "off"), row.get("chaos", "off"),
             row.get("admission", "off"), row.get("prewarm", "off"),
             row.get("minutes"), row.get("invocations_per_min"),
-            row.get("n_functions"))
+            row.get("n_functions"), row.get("workload", "azure"),
+            row.get("model"))
 
 
 def throughput(row: dict) -> float:

@@ -6,17 +6,21 @@ prints the cost matrix plus the serial-vs-parallel sweep speedup.
 
     python examples/cluster_sweep.py
 """
-from repro.cluster import build_grid, compare_serial, run_cluster
-from repro.traces import TraceSpec, generate_workload
+import repro
+from repro import FleetSpec, PolicySpec, Scenario, WorkloadSpec
+from repro.cluster import build_grid, compare_serial
+from repro.traces import TraceSpec
 
 
 def main():
     # -- one cell, spelled out ------------------------------------------------
     spec = TraceSpec(minutes=1, invocations_per_min=1200, n_functions=80,
                      seed=0)
-    tasks = generate_workload(spec).tasks
-    res = run_cluster(tasks, n_nodes=4, cores_per_node=8,
-                      node_policy="hybrid", dispatcher="join_idle_queue")
+    res = repro.run(Scenario(
+        workload=WorkloadSpec(kind="azure", trace=spec),
+        fleet=FleetSpec(n_nodes=4, cores_per_node=8,
+                        dispatcher="join_idle_queue"),
+        policy=PolicySpec(name="hybrid"))).raw
     s = res.summary()
     print(f"one cell: {s['n_nodes']} nodes x {s['cores_per_node']} cores, "
           f"{s['dispatcher']} dispatch, hybrid nodes")

@@ -1,0 +1,48 @@
+"""LLM-inference-as-FaaS: serve a 7B replica fleet through the cluster
+scheduler sim and compare what the OS scheduler choice costs.
+
+One Scenario per policy: the trace's functions become model endpoints,
+replicas are sandboxes (cold start = weight-load + compile, warm state
+= KV/weights residency in the container pool), and every request is a
+prefill task plus decode chunks whose preemptions pay the KV swap
+(DESIGN.md Sec. 15).
+
+    PYTHONPATH=src python examples/llm_faas.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import repro
+from repro import FleetSpec, PolicySpec, Scenario, WorkloadSpec
+from repro.serving.llm import LLMSpec
+from repro.traces import TraceSpec
+
+
+def main():
+    trace = TraceSpec(minutes=1, invocations_per_min=300,
+                      n_functions=12, seed=7)
+    llm = LLMSpec(model="deepseek-7b")
+    print(f"replica: {llm.replica_mem_mb() / 1024:.1f} GB "
+          f"(weights + {llm.seq_len}-token KV), "
+          f"cold start {llm.cold_start_ms() / 1e3:.1f}s "
+          f"(weight stream + compile)")
+
+    for policy in ("cfs", "hybrid"):
+        res = repro.run(Scenario(
+            workload=WorkloadSpec(kind="llm", trace=trace, llm=llm),
+            fleet=FleetSpec(n_nodes=2, cores_per_node=8,
+                            dispatcher="least_loaded", seed=1),
+            policy=PolicySpec(
+                name=policy,
+                adapt_pct=95.0 if policy == "hybrid" else None,
+                rightsize=policy == "hybrid")))
+        s = res.summary()
+        print(f"{policy:7s} {s['n_requests']} requests "
+              f"({s['n']} chunks)  ${s['usd_per_1k_requests']:.4f}/1k  "
+              f"p99 turnaround {s['p99_turnaround_s']:.1f}s  "
+              f"{s['cold_starts']} replica instantiations")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,8 @@ Runs the first two minutes of the (synthesized) Azure FaaS trace through
 FIFO, CFS, and the hybrid scheduler on a 50-core host and prints the
 Table-I-style comparison: the Linux default (CFS) costs an order of
 magnitude more than FIFO; the hybrid scheduler keeps FIFO's cost with
-far better tail response.
+far better tail response. Everything goes through the one front door,
+``repro.run`` (DESIGN.md Sec. 15).
 
     PYTHONPATH=src python examples/quickstart.py [--fast]
 """
@@ -13,7 +14,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import run_policy
+import repro
+from repro import FleetSpec, PolicySpec, Scenario, WorkloadSpec
 from repro.traces import TraceSpec, generate_workload
 
 
@@ -32,15 +34,20 @@ def main():
           f"(p90 duration {w.p90_service():.0f} ms)")
 
     rows = {}
-    for policy, kw in (("fifo", {}), ("cfs", {}),
-                       ("hybrid", dict(adapt_pct=95.0, rightsize=True))):
-        rows[policy] = run_policy(policy, tasks, **kw)
-        s = rows[policy].summary()
+    for policy, pol_kw in (("fifo", {}), ("cfs", {}),
+                           ("hybrid", dict(adapt_pct=95.0,
+                                           rightsize=True))):
+        res = repro.run(Scenario(
+            workload=WorkloadSpec(kind="tasks", tasks=tasks),
+            fleet=FleetSpec(cores_per_node=50),
+            policy=PolicySpec(name=policy, **pol_kw)))
+        rows[policy] = res
+        s = res.raw.summary()
         print(f"{policy:8s} p99resp={s['p99_response_s']:8.2f}s "
               f"p99exec={s['p99_execution_s']:8.2f}s "
               f"cost=${s['cost_usd']:.4f}")
-    ratio = rows["cfs"].cost_usd() / rows["fifo"].cost_usd()
-    save = rows["cfs"].cost_usd() / rows["hybrid"].cost_usd()
+    ratio = rows["cfs"].total_cost_usd() / rows["fifo"].total_cost_usd()
+    save = rows["cfs"].total_cost_usd() / rows["hybrid"].total_cost_usd()
     print(f"\nCFS costs {ratio:.1f}x FIFO (paper: >10x).")
     print(f"Hybrid saves {save:.1f}x vs CFS (paper Table I: ~41x).")
 

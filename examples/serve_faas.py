@@ -16,11 +16,13 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+import repro
+from repro import (FleetSpec, PolicySpec, Scenario, ServingSpec,
+                   WorkloadSpec)
 from repro.configs import get_config, get_smoke
 from repro.distributed import materialize
 from repro.models import model_specs
-from repro.serving import (LiveRequest, ServingEngine, requests_from_trace,
-                           run_gateway)
+from repro.serving import LiveRequest, ServingEngine, requests_from_trace
 from repro.traces import TraceSpec
 
 
@@ -49,10 +51,16 @@ def main():
     reqs = requests_from_trace(
         cfg_full, TraceSpec(minutes=1, invocations_per_min=2500, seed=2))
     for policy in ("cfs", "hybrid"):
-        r = run_gateway(cfg_full, policy, requests=reqs)
+        r = repro.run(Scenario(
+            workload=WorkloadSpec(kind="tasks", tasks=reqs),
+            fleet=FleetSpec(cores_per_node=50),
+            policy=PolicySpec(name=policy, adapt_pct=95.0,
+                              rightsize=True,
+                              n_fifo=25 if policy == "hybrid" else None,
+                              serving=ServingSpec(model=cfg_full)))).raw
         print(f"  {policy:7s} cost=${r.cost_usd():.4f} "
-              f"p99exec={r.sim.p('execution', 99) / 1e3:.1f}s "
-              f"p99resp={r.sim.p('response', 99) / 1e3:.1f}s")
+              f"p99exec={r.p('execution', 99) / 1e3:.1f}s "
+              f"p99resp={r.p('response', 99) / 1e3:.1f}s")
 
 
 if __name__ == "__main__":

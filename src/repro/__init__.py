@@ -1,3 +1,34 @@
 """repro — hybrid two-level FaaS scheduling (Zhao et al., 2024) as a
-production JAX training/serving framework. See DESIGN.md."""
+production JAX training/serving framework. See DESIGN.md.
+
+The public entrypoint is the Scenario API::
+
+    import repro
+    sc = repro.Scenario(...)
+    res = repro.run(sc)
+    print(res.summary())
+
+Scenario machinery is imported lazily so that ``import repro`` stays
+dependency-free (the serving layer pulls in JAX only when a scenario
+actually needs it).
+"""
 __version__ = "1.0.0"
+
+_SCENARIO_EXPORTS = (
+    "run", "Scenario", "ScenarioResult", "WorkloadSpec", "FleetSpec",
+    "PolicySpec", "ServingSpec", "ResilienceSpec",
+    "SCHEMA_VERSION", "SUMMARY_KEYS_V1",
+)
+
+__all__ = ["__version__", *_SCENARIO_EXPORTS]
+
+
+def __getattr__(name):
+    if name in _SCENARIO_EXPORTS:
+        from . import scenario
+        return getattr(scenario, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SCENARIO_EXPORTS))

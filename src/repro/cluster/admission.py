@@ -205,9 +205,12 @@ class AdmissionControl:
 
 
 def make_admission(admission) -> Optional[AdmissionControl]:
-    """Coerce None | AdmissionConfig | AdmissionControl (ClusterSim)."""
+    """Coerce None | kwargs dict | AdmissionConfig | AdmissionControl
+    (ClusterSim / Scenario)."""
     if admission is None or isinstance(admission, AdmissionControl):
         return admission
+    if isinstance(admission, dict):
+        admission = AdmissionConfig(**admission)
     if isinstance(admission, AdmissionConfig):
         return AdmissionControl(admission)
     raise TypeError(f"cannot build admission control from {admission!r}")

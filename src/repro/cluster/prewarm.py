@@ -41,6 +41,19 @@ class PrewarmConfig:
     keepalive_ms: Optional[float] = None  # None = the pool's own policy
 
 
+def make_prewarm_config(config) -> PrewarmConfig:
+    """Coerce ``None`` / kwargs dict / ``PrewarmConfig`` — the same
+    accept-anything contract the container layer's
+    ``as_container_config`` gives the other spec-shaped arguments."""
+    if config is None:
+        return PrewarmConfig()
+    if isinstance(config, PrewarmConfig):
+        return config
+    if isinstance(config, dict):
+        return PrewarmConfig(**config)
+    raise TypeError(f"cannot build PrewarmConfig from {type(config)!r}")
+
+
 def per_minute_counts(tasks) -> dict[int, dict[int, int]]:
     """func_id -> {minute -> invocation count}: the trace signal the
     planner (and a real provider's forecaster) reads."""
@@ -63,7 +76,7 @@ def build_plan(tasks, config: Optional[PrewarmConfig] = None,
     same instant, which is exactly when a just-in-time provisioner
     would have acted.
     """
-    cfg = config or PrewarmConfig()
+    cfg = make_prewarm_config(config)
     svc_sum: dict[int, float] = defaultdict(float)
     svc_n: dict[int, int] = defaultdict(int)
     mem: dict[int, int] = {}
@@ -98,7 +111,7 @@ class Provisioner:
     def __init__(self, plan: Sequence[tuple], config: Optional[PrewarmConfig]
                  = None):
         self.plan = sorted(plan)
-        self.cfg = config or PrewarmConfig()
+        self.cfg = make_prewarm_config(config)
         self._next = 0
         self.requested = 0   # sandboxes the plan asked for
         self.placed = 0      # actually admitted by pools (capacity-capped)
@@ -108,7 +121,7 @@ class Provisioner:
     @classmethod
     def from_workload(cls, tasks, config: Optional[PrewarmConfig] = None,
                       ) -> "Provisioner":
-        cfg = config or PrewarmConfig()
+        cfg = make_prewarm_config(config)
         return cls(build_plan(tasks, cfg), cfg)
 
     def pending_at(self, t: float) -> bool:

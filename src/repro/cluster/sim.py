@@ -36,9 +36,11 @@ from __future__ import annotations
 import copy
 import heapq
 import math
+import warnings
 from typing import Optional, Sequence, Union
 
-from ..core.containers import ContainerConfig
+from ..core.containers import (ContainerConfig, ContainerSpec,
+                               as_container_config)
 from ..core.events import Scheduler, Task
 from ..core.metrics import collect
 from ..core.simulate import make_scheduler
@@ -142,11 +144,17 @@ class ClusterSim:
                  dispatcher: Union[str, Dispatcher] = "least_loaded",
                  seed: int = 0,
                  node_factory=None,
-                 containers: Optional[ContainerConfig] = None,
+                 containers: Union[None, ContainerConfig, ContainerSpec,
+                                   dict, str] = None,
                  admission: Union[None, AdmissionConfig,
                                   AdmissionControl] = None):
         if n_nodes < 1:
             raise ValueError("a fleet needs at least one node")
+        # Any accepted ``containers=`` shape normalizes to a pool config
+        # here, before nodes are built. Workload-driven histogram hints
+        # need the task list and so cannot be derived at construction
+        # time — Scenario materializes hinted configs before this point.
+        containers = as_container_config(containers)
         if isinstance(node_policies, (str, tuple)):
             node_policies = [node_policies] * n_nodes
         if len(node_policies) != n_nodes:
@@ -411,15 +419,40 @@ def run_cluster(workload: list[Task], *,
                 dispatcher: str = "least_loaded",
                 seed: int = 0,
                 node_factory=None,
-                containers: Optional[ContainerConfig] = None,
+                containers: Union[None, ContainerConfig, ContainerSpec,
+                                  dict, str] = None,
                 admission: Union[None, AdmissionConfig,
                                  AdmissionControl] = None,
                 chaos: Optional[ChaosSchedule] = None,
                 prewarm: Union[None, Provisioner, Sequence] = None,
                 ) -> ClusterResult:
-    """One-call analogue of ``core.simulate.run_policy`` for fleets."""
-    sim = ClusterSim(n_nodes=n_nodes, cores_per_node=cores_per_node,
-                     node_policies=node_policy, dispatcher=dispatcher,
-                     seed=seed, node_factory=node_factory,
-                     containers=containers, admission=admission)
-    return sim.run(workload, chaos=chaos, prewarm=prewarm)
+    """Deprecated: build a :class:`repro.Scenario` with a fleet spec
+    and call ``repro.run``. This shim routes through exactly that path
+    (results stay bit-identical to the Scenario API)."""
+    warnings.warn(
+        "run_cluster() is deprecated; use repro.run(Scenario(fleet="
+        "FleetSpec(n_nodes=..., dispatcher=...), ...)) instead",
+        DeprecationWarning, stacklevel=2)
+    from ..scenario import (FleetSpec, PolicySpec, ResilienceSpec,
+                            Scenario, WorkloadSpec, run)
+    nodes = None
+    if isinstance(node_policy, str):
+        policy = PolicySpec(name=node_policy)
+    elif isinstance(node_policy, tuple):
+        policy = PolicySpec(name=node_policy[0],
+                            kw=dict(node_policy[1]))
+    else:  # heterogeneous per-node list
+        nodes = tuple(node_policy)
+        first = nodes[0]
+        policy = PolicySpec(name=first if isinstance(first, str)
+                            else first[0])
+    sc = Scenario(
+        workload=WorkloadSpec(kind="tasks", tasks=workload),
+        fleet=FleetSpec(n_nodes=n_nodes, cores_per_node=cores_per_node,
+                        dispatcher=dispatcher, containers=containers,
+                        seed=seed, nodes=nodes,
+                        node_factory=node_factory),
+        policy=policy,
+        resilience=ResilienceSpec(chaos=chaos, admission=admission,
+                                  prewarm=prewarm))
+    return run(sc).raw

@@ -32,19 +32,27 @@ import multiprocessing as mp
 import os
 import sys
 import time
-from dataclasses import asdict, dataclass, replace
-from typing import Optional
+from dataclasses import asdict, dataclass
+from typing import TYPE_CHECKING, Optional
 
-from ..core.containers import ContainerConfig
+from ..core.containers import ContainerSpec
 from ..traces.azure import TraceSpec
-from ..traces.workload import generate_workload, keepalive_hints, scale_load
 from .dispatch import DISPATCHERS
-from .sim import run_cluster
+
+if TYPE_CHECKING:
+    from ..scenario import Scenario
 
 
 @dataclass(frozen=True)
 class Cell:
-    """One grid point; fully describes a reproducible cluster run."""
+    """One grid point; fully describes a reproducible cluster run.
+
+    A cell is now sugar over the Scenario API: ``to_scenario()`` is the
+    single translation and ``run_cell`` just executes it. ``workload``
+    selects the stream — ``"azure"`` (the calibrated trace) or
+    ``"llm"`` (model replicas as functions; ``model`` picks the
+    registry arch and ``containers`` its keep-alive policy).
+    """
     node_policy: str
     dispatcher: str
     n_nodes: int
@@ -58,37 +66,48 @@ class Cell:
     containers: str = "off"
     container_capacity_mb: float = 4096.0
     keepalive_ms: float = 30_000.0
+    # Workload kind: "azure" | "llm".
+    workload: str = "azure"
+    model: str = "deepseek-7b"
 
-
-def _cell_containers(cell: Cell, tasks) -> ContainerConfig | None:
-    if cell.containers == "off":
-        return None
-    cfg = ContainerConfig(policy=cell.containers,
-                          capacity_mb=cell.container_capacity_mb,
-                          keepalive_ms=cell.keepalive_ms)
-    if cell.containers == "histogram":
-        # Per-function keep-alive hints from the trace's own IAT
-        # distribution seed the histogram policy before each node has
-        # observed enough arrivals of its own — computed under the same
-        # config so hints agree with the pool's own estimates.
-        cfg = replace(cfg, prewarm=keepalive_hints(tasks, cfg))
-    return cfg
+    def to_scenario(self) -> "Scenario":
+        from ..scenario import (FleetSpec, PolicySpec, Scenario,
+                                WorkloadSpec)
+        trace = TraceSpec(minutes=self.minutes,
+                          invocations_per_min=self.invocations_per_min,
+                          n_functions=self.n_functions, seed=self.seed)
+        containers = None
+        if self.workload == "llm":
+            from ..serving.llm import LLMSpec
+            wl = WorkloadSpec(kind="llm", trace=trace,
+                              load_scale=self.load_scale,
+                              llm=LLMSpec(
+                                  model=self.model,
+                                  keepalive_ms=self.keepalive_ms,
+                                  container_policy=self.containers))
+            # containers stay None: the llm workload derives its own
+            # spec (cold = weight-load + compile) inside repro.run.
+        else:
+            wl = WorkloadSpec(kind=self.workload, trace=trace,
+                              load_scale=self.load_scale)
+            if self.containers != "off":
+                containers = ContainerSpec(
+                    policy=self.containers,
+                    capacity_mb=self.container_capacity_mb,
+                    keepalive_ms=self.keepalive_ms)
+        return Scenario(
+            workload=wl,
+            fleet=FleetSpec(n_nodes=self.n_nodes,
+                            cores_per_node=self.cores_per_node,
+                            dispatcher=self.dispatcher,
+                            containers=containers, seed=self.seed),
+            policy=PolicySpec(name=self.node_policy))
 
 
 def run_cell(cell: Cell) -> dict:
     """Execute one grid point and return its summary row."""
-    spec = TraceSpec(minutes=cell.minutes,
-                     invocations_per_min=cell.invocations_per_min,
-                     n_functions=cell.n_functions, seed=cell.seed)
-    tasks = generate_workload(spec).tasks
-    if cell.load_scale != 1.0:
-        tasks = scale_load(tasks, cell.load_scale)
-    res = run_cluster(tasks, n_nodes=cell.n_nodes,
-                      cores_per_node=cell.cores_per_node,
-                      node_policy=cell.node_policy,
-                      dispatcher=cell.dispatcher, seed=cell.seed,
-                      node_factory=None,
-                      containers=_cell_containers(cell, tasks))
+    from ..scenario import run
+    res = run(cell.to_scenario())
     row = asdict(cell)
     row.update(res.summary())
     return row
@@ -154,7 +173,7 @@ def shard_grid(grid: list[Cell], shard: str) -> list[Cell]:
 def _row_key(row: dict) -> tuple:
     return tuple(str(row.get(k)) for k in (
         "node_policy", "dispatcher", "n_nodes", "load_scale",
-        "containers", "seed", "minutes"))
+        "containers", "seed", "minutes", "workload", "model"))
 
 
 def merge_rows(paths: list[str]) -> list[dict]:

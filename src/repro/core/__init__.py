@@ -3,19 +3,23 @@
 Discrete-event simulation of OS-level scheduling policies for serverless
 (L1), plus the policy objects reused by the serving gateway (L2).
 """
-from .containers import (ContainerConfig, ContainerPool, expected_cold_ms)
+from .containers import (ContainerConfig, ContainerPool, ContainerSpec,
+                         as_container_config, expected_cold_ms)
 from .events import Core, Scheduler, Task, GROUP_CFS, GROUP_FIFO
 from .policies import CFS, EDF, FIFO, FIFOPreempt, RoundRobin
 from .hybrid import HybridScheduler, Rightsizer, TimeLimitAdapter, percentile
 from .metrics import SimResult, collect
-from .simulate import POLICIES, make_scheduler, run_policy
+from .simulate import (POLICIES, execute_policy, make_scheduler,
+                       run_policy)
 from . import cost
 
 __all__ = [
-    "ContainerConfig", "ContainerPool", "expected_cold_ms",
+    "ContainerConfig", "ContainerPool", "ContainerSpec",
+    "as_container_config", "expected_cold_ms",
     "Core", "Scheduler", "Task", "GROUP_CFS", "GROUP_FIFO",
     "CFS", "EDF", "FIFO", "FIFOPreempt", "RoundRobin",
     "HybridScheduler", "Rightsizer", "TimeLimitAdapter", "percentile",
-    "SimResult", "collect", "POLICIES", "make_scheduler", "run_policy",
+    "SimResult", "collect", "POLICIES", "execute_policy",
+    "make_scheduler", "run_policy",
     "cost",
 ]

@@ -46,7 +46,7 @@ import heapq
 import math
 import random
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Optional
 
 # Cold-start model defaults: Firecracker-class base boot plus a
@@ -506,3 +506,95 @@ class ContainerPool:
         assert len(self._cap_heap) <= max(64, 2 * self._n_idle), \
             (f"capacity heap {len(self._cap_heap)} entries for "
              f"{self._n_idle} live containers — compaction not firing")
+
+
+# -- the ONE way to say "containers" ------------------------------------------
+
+@dataclass(frozen=True)
+class ContainerSpec:
+    """Declarative sandbox-layer spec — the single currency for the
+    ``containers=`` argument across every entrypoint (``Scenario``,
+    ``Scheduler``, ``ClusterSim``, the serving gateway, sweep cells).
+
+    Where :class:`ContainerConfig` is the pool's full knob set, a spec
+    is the *intent*: which keep-alive policy, how much warm capacity,
+    and optionally a cold-start cost model override (the LLM scenario
+    prices cold = weight-load + compile through these three fields).
+    ``None`` overrides inherit the ``ContainerConfig`` defaults.
+
+    ``hints=True`` (histogram policy only) seeds per-function keep-alive
+    hints from the workload's own inter-arrival distribution at run
+    time — exactly what ``sweep._cell_containers`` historically did —
+    which is why the workload-dependent conversion lives in
+    :meth:`to_config` rather than in the frozen spec itself.
+    """
+
+    policy: str = "fixed"             # "off" | "fixed" | "histogram"
+    capacity_mb: float = 4096.0
+    keepalive_ms: float = 30_000.0
+    hints: bool = True
+    cold_base_ms: Optional[float] = None
+    cold_per_gb_ms: Optional[float] = None
+    cold_jitter: Optional[float] = None
+
+    @property
+    def enabled(self) -> bool:
+        return self.policy != "off"
+
+    @classmethod
+    def from_legacy(cls, obj) -> "ContainerSpec | None":
+        """Coerce every historical ``containers=`` shape to a spec.
+
+        Accepts ``None`` (off), a policy-name string (``"off"`` /
+        ``"fixed"`` / ``"histogram"`` — the sweep-cell encoding), a
+        kwargs dict, a raw :class:`ContainerConfig`, or a spec.
+        """
+        if obj is None:
+            return None
+        if isinstance(obj, ContainerSpec):
+            return obj
+        if isinstance(obj, str):
+            if obj not in ("off", "fixed", "histogram"):
+                raise KeyError(f"unknown container policy {obj!r}")
+            return None if obj == "off" else cls(policy=obj)
+        if isinstance(obj, ContainerConfig):
+            return cls(policy=obj.policy, capacity_mb=obj.capacity_mb,
+                       keepalive_ms=obj.keepalive_ms,
+                       hints=obj.prewarm is not None,
+                       cold_base_ms=obj.cold_base_ms,
+                       cold_per_gb_ms=obj.cold_per_gb_ms,
+                       cold_jitter=obj.cold_jitter)
+        if isinstance(obj, dict):
+            return cls(**obj)
+        raise TypeError(f"cannot build ContainerSpec from {type(obj)!r}")
+
+    def to_config(self, tasks=None) -> Optional[ContainerConfig]:
+        """Materialize the pool config. ``tasks`` (the workload about to
+        run, post load-scaling) feeds histogram keep-alive hints when
+        ``hints`` is set; without it the pool estimates online only."""
+        if not self.enabled:
+            return None
+        overrides = {k: v for k, v in (
+            ("cold_base_ms", self.cold_base_ms),
+            ("cold_per_gb_ms", self.cold_per_gb_ms),
+            ("cold_jitter", self.cold_jitter)) if v is not None}
+        cfg = ContainerConfig(policy=self.policy,
+                              capacity_mb=self.capacity_mb,
+                              keepalive_ms=self.keepalive_ms, **overrides)
+        if self.policy == "histogram" and self.hints and tasks is not None:
+            from ..traces.workload import keepalive_hints
+            cfg = replace(cfg, prewarm=keepalive_hints(tasks, cfg))
+        return cfg
+
+
+def as_container_config(obj, tasks=None) -> Optional[ContainerConfig]:
+    """Normalize any accepted ``containers=`` value to a pool config.
+
+    ``ContainerConfig`` instances pass through UNTOUCHED (legacy callers
+    keep bit-identical behaviour); specs / dicts / policy strings are
+    materialized via :meth:`ContainerSpec.to_config`.
+    """
+    if obj is None or isinstance(obj, (ContainerConfig, ContainerPool)):
+        return obj
+    spec = ContainerSpec.from_legacy(obj)
+    return None if spec is None else spec.to_config(tasks)

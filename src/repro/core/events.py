@@ -55,7 +55,8 @@ from typing import Callable, Optional, Union
 
 import numpy as np
 
-from .containers import ContainerConfig, ContainerPool
+from .containers import (ContainerConfig, ContainerPool,
+                         as_container_config)
 
 ARRIVAL, CORE_EVT, TIMER, DEAD = 0, 1, 2, 3
 
@@ -230,7 +231,8 @@ class Scheduler:
         util_sample_ms: float = 500.0,
         trace_util: bool = False,
         interference_fn: Optional[Callable[[float], float]] = None,
-        containers: Optional[Union[ContainerPool, ContainerConfig]] = None,
+        containers: Optional[Union[ContainerPool, ContainerConfig,
+                                   "ContainerSpec", dict, str]] = None,
         seed: int = 0,
     ):
         self.n_cores = n_cores
@@ -239,8 +241,12 @@ class Scheduler:
         self.trace_util = trace_util
         self.seed = seed
         # Container lifecycle layer (DESIGN.md Sec. 9): None keeps the
-        # historical cold-start-free behaviour; a ContainerConfig builds
-        # a per-node pool seeded from this scheduler's seed.
+        # historical cold-start-free behaviour; any other accepted shape
+        # (ContainerSpec / ContainerConfig / kwargs dict / policy name)
+        # builds a per-node pool seeded from this scheduler's seed.
+        if containers is not None and not isinstance(containers,
+                                                     ContainerPool):
+            containers = as_container_config(containers)
         if containers is not None and not isinstance(containers,
                                                      ContainerPool):
             containers = ContainerPool(containers, seed=seed)

@@ -9,6 +9,7 @@ microVMs on a 512 GB box).
 from __future__ import annotations
 
 import copy
+import warnings
 from typing import Optional
 
 from .containers import ContainerConfig, ContainerPool
@@ -33,16 +34,17 @@ def make_scheduler(policy: str, **kw) -> Scheduler:
     return POLICIES[policy](**kw)
 
 
-def run_policy(policy: str, workload: list[Task], *,
-               n_cores: int = 50,
-               adapt_pct: Optional[float] = None,
-               rightsize: bool = False,
-               microvm: bool = False,
-               ghost_mode: bool = False,
-               containers: Optional[ContainerConfig] = None,
-               fresh_tasks: bool = True,
-               **kw) -> SimResult:
-    """Simulate ``policy`` over ``workload`` and aggregate results.
+def execute_policy(policy: str, workload: list[Task], *,
+                   n_cores: int = 50,
+                   adapt_pct: Optional[float] = None,
+                   rightsize: bool = False,
+                   microvm: bool = False,
+                   ghost_mode: bool = False,
+                   containers: Optional[ContainerConfig] = None,
+                   fresh_tasks: bool = True,
+                   **kw) -> SimResult:
+    """Simulate ``policy`` over ``workload`` and aggregate results —
+    the single-node execution engine behind ``repro.run``.
 
     ``adapt_pct``/``rightsize`` only apply to the hybrid policy.
     ``ghost_mode`` enables the native-CFS spawn-storm interference model
@@ -71,6 +73,36 @@ def run_policy(policy: str, workload: list[Task], *,
         sched.failed.extend(failed)
     sched.run(tasks)
     return collect(sched, policy)
+
+
+def run_policy(policy: str, workload: list[Task], *,
+               n_cores: int = 50,
+               adapt_pct: Optional[float] = None,
+               rightsize: bool = False,
+               microvm: bool = False,
+               ghost_mode: bool = False,
+               containers: Optional[ContainerConfig] = None,
+               fresh_tasks: bool = True,
+               **kw) -> SimResult:
+    """Deprecated: build a :class:`repro.Scenario` and call
+    ``repro.run``. This shim routes through exactly that path (so its
+    results stay bit-identical to the Scenario API) and will be removed
+    after the deprecation window."""
+    warnings.warn(
+        "run_policy() is deprecated; use repro.run(Scenario(workload="
+        "WorkloadSpec(kind='tasks', tasks=...), ...)) instead",
+        DeprecationWarning, stacklevel=2)
+    from ..scenario import (FleetSpec, PolicySpec, Scenario, WorkloadSpec,
+                            run)
+    sc = Scenario(
+        workload=WorkloadSpec(kind="tasks", tasks=workload,
+                              fresh=fresh_tasks),
+        fleet=FleetSpec(n_nodes=1, cores_per_node=n_cores,
+                        containers=containers),
+        policy=PolicySpec(name=policy, adapt_pct=adapt_pct,
+                          rightsize=rightsize, microvm=microvm,
+                          ghost_mode=ghost_mode, kw=kw))
+    return run(sc).raw
 
 
 # -- ghOSt native-CFS interference model --------------------------------------

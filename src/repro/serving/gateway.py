@@ -15,18 +15,18 @@ or failed device lane — Sec. "fault tolerance" in DESIGN.md).
 """
 from __future__ import annotations
 
-import copy
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core.containers import ContainerConfig
-from ..core.events import GROUP_CFS, Task
+from ..core.containers import ContainerConfig, as_container_config
+from ..core.events import Task
 from ..core.hybrid import HybridScheduler, Rightsizer, TimeLimitAdapter
-from ..core.metrics import SimResult, collect
+from ..core.metrics import SimResult
 from ..core.policies import CFS, FIFO
 from ..core.cost import PRICE_PER_GB_SECOND, PRICE_PER_REQUEST
 from ..traces.azure import TraceSpec
@@ -138,6 +138,17 @@ def requests_from_trace(cfg: ModelConfig, spec: Optional[TraceSpec] = None,
     return tasks
 
 
+def _request_workload(cfg: ModelConfig, requests, trace):
+    """Shim helper: explicit requests are deep-copied (the historical
+    contract lets callers reuse their list); trace-derived streams are
+    fresh already."""
+    from ..scenario import WorkloadSpec
+    if requests is not None:
+        return WorkloadSpec(kind="tasks", tasks=requests)
+    return WorkloadSpec(kind="tasks",
+                        tasks=requests_from_trace(cfg, trace), fresh=False)
+
+
 def run_gateway(cfg: ModelConfig, policy: str = "hybrid", *,
                 n_slots: int = 50, n_fifo: int = 25,
                 requests: Optional[list[Task]] = None,
@@ -147,17 +158,27 @@ def run_gateway(cfg: ModelConfig, policy: str = "hybrid", *,
                 straggler_factor: float = 0.0,
                 containers: Optional[ContainerConfig] = None,
                 trace: Optional[TraceSpec] = None) -> GatewayResult:
-    reqs = copy.deepcopy(requests) if requests is not None \
-        else requests_from_trace(cfg, trace)
-    factory = _slot_node_factory(cfg, seq_len, 0.5, adapt_pct, rightsize,
-                                 straggler_factor=straggler_factor,
-                                 containers=containers)
-    sched = factory(policy, n_cores=n_slots,
-                    **({"n_fifo": n_fifo} if policy == "hybrid" else {}))
-    sched.run(reqs)
-    res = collect(sched, policy)
-    return GatewayResult(sim=res, arch=cfg.name, policy=policy,
-                         redispatches=getattr(sched, "redispatches", 0))
+    """Deprecated: build a :class:`repro.Scenario` with a
+    ``ServingSpec`` and call ``repro.run``. This shim routes through
+    exactly that path (results stay bit-identical)."""
+    warnings.warn(
+        "run_gateway() is deprecated; use repro.run(Scenario(policy="
+        "PolicySpec(serving=ServingSpec(...)), ...)) instead",
+        DeprecationWarning, stacklevel=2)
+    from ..scenario import (FleetSpec, PolicySpec, Scenario, ServingSpec,
+                            run)
+    sc = Scenario(
+        workload=_request_workload(cfg, requests, trace),
+        fleet=FleetSpec(n_nodes=1, cores_per_node=n_slots,
+                        containers=containers),
+        policy=PolicySpec(
+            name=policy, adapt_pct=adapt_pct, rightsize=rightsize,
+            n_fifo=n_fifo if policy == "hybrid" else None,
+            serving=ServingSpec(model=cfg, seq_len=seq_len,
+                                straggler_factor=straggler_factor)))
+    res = run(sc)
+    return GatewayResult(sim=res.raw, arch=cfg.name, policy=policy,
+                         redispatches=getattr(res.raw, "redispatches", 0))
 
 
 # -- fleet gateway ------------------------------------------------------------
@@ -171,7 +192,11 @@ def _slot_node_factory(cfg: ModelConfig, seq_len: int, n_fifo_frac: float,
     ``containers`` set, each node gets a sandbox pool: the model-serving
     analogue of a warm container is resident per-function state (loaded
     adapters / compiled graphs), and a cold slot pays the boot delay on
-    its billed wall-clock span like any other FaaS invocation."""
+    its billed wall-clock span like any other FaaS invocation.
+    ``containers`` accepts any shape ``as_container_config`` does
+    (spec / config / kwargs dict / policy name)."""
+    containers = as_container_config(containers)
+
     def factory(policy: str, n_cores: int, **kw):
         if containers is not None:
             kw.setdefault("containers", containers)
@@ -208,22 +233,25 @@ def run_gateway_fleet(cfg: ModelConfig, policy: str = "hybrid", *,
                       containers: Optional[ContainerConfig] = None,
                       seed: int = 0,
                       trace: Optional[TraceSpec] = None):
-    """Serve the request stream through a fleet of model-serving nodes,
-    with the cluster front end picking the node per invocation. Returns
-    a ``repro.cluster.ClusterResult`` (serving slots = "cores")."""
-    from ..cluster.sim import ClusterSim
-    reqs = copy.deepcopy(requests) if requests is not None \
-        else requests_from_trace(cfg, trace)
-    # Containers go through ClusterSim (not the factory) so each node's
-    # pool gets its own deterministic seed stream (seed + node index).
-    sim = ClusterSim(
-        n_nodes=n_nodes, cores_per_node=slots_per_node,
-        node_policies=policy, dispatcher=dispatcher, seed=seed,
-        containers=containers,
-        node_factory=_slot_node_factory(cfg, seq_len, n_fifo_frac,
-                                        adapt_pct, rightsize,
-                                        straggler_factor=straggler_factor))
-    res = sim.run(reqs, fresh_tasks=False)
-    res.redispatches = sum(getattr(n.sched, "redispatches", 0)
-                           for n in sim.nodes)
-    return res
+    """Deprecated: build a :class:`repro.Scenario` with a fleet spec
+    and a ``ServingSpec`` and call ``repro.run``. This shim routes
+    through exactly that path (results stay bit-identical). Returns a
+    ``repro.cluster.ClusterResult`` (serving slots = "cores")."""
+    warnings.warn(
+        "run_gateway_fleet() is deprecated; use repro.run(Scenario("
+        "fleet=FleetSpec(...), policy=PolicySpec(serving="
+        "ServingSpec(...)))) instead",
+        DeprecationWarning, stacklevel=2)
+    from ..scenario import (FleetSpec, PolicySpec, Scenario, ServingSpec,
+                            run)
+    sc = Scenario(
+        workload=_request_workload(cfg, requests, trace),
+        fleet=FleetSpec(n_nodes=n_nodes, cores_per_node=slots_per_node,
+                        dispatcher=dispatcher, containers=containers,
+                        seed=seed),
+        policy=PolicySpec(
+            name=policy, adapt_pct=adapt_pct, rightsize=rightsize,
+            serving=ServingSpec(model=cfg, seq_len=seq_len,
+                                n_fifo_frac=n_fifo_frac,
+                                straggler_factor=straggler_factor)))
+    return run(sc).raw

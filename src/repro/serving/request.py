@@ -16,6 +16,7 @@ class RequestSpec:
     prompt_tokens: int
     decode_tokens: int
     mem_gb: float = 0.5          # billed footprint (weights share + KV)
+    func_id: int = 0             # model endpoint (FaaS function) it hits
 
 
 def service_ms(cfg: ModelConfig, prompt: int, decode: int) -> float:

@@ -1,0 +1,160 @@
+"""The ``llm`` workload generator: determinism, prefill/decode token
+accounting, replica economics, and cold-start metering."""
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.containers import ContainerPool
+from repro.core.metrics import collect
+from repro.core.policies import FIFO
+from repro.serving.llm import (LLMSpec, approx_param_bytes, llm_requests,
+                               llm_workload, request_chunks)
+from repro.serving.request import service_ms
+from repro.traces import TraceSpec
+
+TR = TraceSpec(minutes=1, invocations_per_min=200, n_functions=10, seed=5)
+SPEC = LLMSpec(model="deepseek-7b")
+
+
+def _stream(tasks):
+    return [(t.tid, t.arrival, t.service, t.mem_mb, t.func_id)
+            for t in tasks]
+
+
+def test_llm_workload_deterministic():
+    a, meta_a = llm_workload(SPEC, TR)
+    b, meta_b = llm_workload(SPEC, TR)
+    assert _stream(a) == _stream(b)
+    assert meta_a == meta_b
+    # a different trace seed must change the stream
+    c, _ = llm_workload(SPEC, TraceSpec(minutes=1, invocations_per_min=200,
+                                        n_functions=10, seed=6))
+    assert _stream(a) != _stream(c)
+
+
+def test_llm_workload_canonical_tids():
+    tasks, _ = llm_workload(SPEC, TR)
+    assert [t.tid for t in tasks] == list(range(len(tasks)))
+    arrivals = [t.arrival for t in tasks]
+    assert arrivals == sorted(arrivals)
+
+
+def test_requests_match_request_spec():
+    cfg = get_config("deepseek-7b")
+    reqs = llm_requests(SPEC, TR)
+    assert reqs
+    for r in reqs:
+        assert r.decode_tokens >= 1
+        # prompt = U(2, 8) x decode, capped
+        assert r.prompt_tokens <= min(8.0 * r.decode_tokens,
+                                      SPEC.max_prompt)
+        assert r.mem_gb == pytest.approx(SPEC.replica_mem_mb() / 1024.0)
+    # service calibration: decode budget derived from the trace service
+    assert any(r.decode_tokens > 1 for r in reqs)
+    assert cfg.ms_per_token_decode > 0
+
+
+def test_chunks_partition_service_time_exactly():
+    """The chunk services must partition the request's modelled service
+    time: chunking changes scheduling granularity, never total work."""
+    cfg = get_config("deepseek-7b")
+    for req in llm_requests(SPEC, TR)[:50]:
+        chunks = request_chunks(cfg, SPEC, req)
+        total = math.fsum(t.service for t in chunks)
+        want = service_ms(cfg, req.prompt_tokens, req.decode_tokens)
+        assert math.isclose(total, want, rel_tol=1e-9), (total, want)
+        # prefill task carries exactly the prefill share
+        if req.prompt_tokens > 0:
+            assert chunks[0].service == pytest.approx(
+                service_ms(cfg, req.prompt_tokens, 0))
+        # no decode chunk exceeds the configured slice
+        cap = SPEC.decode_chunk_tokens * cfg.ms_per_token_decode
+        for t in chunks[1:]:
+            assert t.service <= cap + 1e-9
+        # ideal streaming cadence: chunk k arrives when chunk k-1's
+        # tokens could first exist
+        for a, b in zip(chunks, chunks[1:]):
+            assert b.arrival == pytest.approx(a.arrival + a.service)
+
+
+def test_whole_decode_single_task():
+    cfg = get_config("deepseek-7b")
+    spec = LLMSpec(model="deepseek-7b", decode_chunk_tokens=0)
+    req = llm_requests(spec, TR)[0]
+    chunks = request_chunks(cfg, spec, req)
+    assert len(chunks) == (2 if req.prompt_tokens > 0 else 1)
+
+
+def test_replica_economics():
+    cfg = get_config("deepseek-7b")
+    params_b = approx_param_bytes(cfg) / 1e9
+    assert 10.0 < params_b < 20.0          # ~13.8 GB bf16 for a 7B
+    assert SPEC.replica_mem_mb() > params_b * 1000.0 / 1.1
+    # cold = weight stream + compile
+    assert SPEC.cold_start_ms() == pytest.approx(
+        params_b / SPEC.weight_gbps * 1000.0 + SPEC.compile_ms)
+    cs = SPEC.container_spec()
+    assert cs.cold_base_ms == pytest.approx(SPEC.cold_start_ms())
+    assert cs.cold_per_gb_ms == 0.0
+    assert cs.capacity_mb == pytest.approx(
+        SPEC.warm_replicas * SPEC.replica_mem_mb())
+
+
+def test_cold_metered_once_per_replica_instantiation():
+    """Two back-to-back requests against the same endpoint inside the
+    keep-alive window must pay ONE weight-load+compile: the second hits
+    the warm replica."""
+    cfg = get_config("deepseek-7b")
+    reqs = llm_requests(SPEC, TR)
+    req = reqs[0]
+    chunks = request_chunks(cfg, SPEC, req)
+    # a follow-up request for the same endpoint, shortly after
+    last_end = chunks[-1].arrival + chunks[-1].service
+    import dataclasses
+    req2 = dataclasses.replace(req, rid=req.rid + 1,
+                               arrival_ms=last_end + 1000.0)
+    tasks = chunks + request_chunks(cfg, SPEC, req2)
+    for i, t in enumerate(tasks):
+        t.tid = i
+    spec_cfg = dataclasses.replace(SPEC.container_spec().to_config(),
+                                   cold_jitter=0.0)
+    pool = ContainerPool(spec_cfg, seed=0)
+    # one lane: every chunk serializes onto the same replica (a second
+    # core would legitimately instantiate a second lane while the first
+    # chunk still holds its sandbox)
+    sched = FIFO(n_cores=1, containers=pool)
+    sched.run(tasks)
+    res = collect(sched, "fifo")
+    stats = pool.stats()
+    assert stats["cold_starts"] == 1
+    cold_tasks = [t for t in res.tasks if t.cold_start]
+    assert len(cold_tasks) == 1
+    # the cold chunk's billed span carries the full load+compile
+    assert cold_tasks[0].init_ms == pytest.approx(SPEC.cold_start_ms())
+    assert cold_tasks[0].execution >= SPEC.cold_start_ms()
+
+
+def test_meta_counts_requests_not_chunks():
+    tasks, meta = llm_workload(SPEC, TR)
+    assert meta["n_chunks"] == len(tasks)
+    assert meta["n_requests"] < meta["n_chunks"]
+    assert meta["n_requests"] == len(llm_requests(SPEC, TR))
+    assert meta["model"] == "deepseek-7b"
+
+
+def test_scenario_llm_summary_uses_request_denominator():
+    from repro import (FleetSpec, PolicySpec, Scenario, WorkloadSpec,
+                      run)
+    res = run(Scenario(
+        workload=WorkloadSpec(kind="llm", trace=TR, llm=SPEC),
+        fleet=FleetSpec(n_nodes=2, cores_per_node=8,
+                        dispatcher="least_loaded", seed=1),
+        policy=PolicySpec(name="hybrid")))
+    s = res.summary()
+    assert s["workload"] == "llm"
+    assert s["n"] == res.meta["n_chunks"]
+    assert s["n_requests"] == res.meta["n_requests"] < s["n"]
+    assert s["usd_per_1k_requests"] == pytest.approx(
+        s["total_cost_usd"] / s["n_requests"] * 1000.0)
+    assert s["cold_starts"] > 0      # replicas instantiated lazily

@@ -1,0 +1,253 @@
+"""Scenario API: legacy-entrypoint shim equality, ContainerSpec
+coercion, and the frozen v1 summary schema."""
+import warnings
+from dataclasses import replace
+
+import pytest
+
+import repro
+from repro import (FleetSpec, PolicySpec, Scenario, ServingSpec,
+                   WorkloadSpec, run)
+from repro.core import ContainerConfig, ContainerSpec, as_container_config
+from repro.core.containers import ContainerPool
+from repro.core.events import Scheduler
+from repro.core.simulate import run_policy
+from repro.cluster.sim import run_cluster
+from repro.cluster.sweep import Cell, run_cell
+from repro.traces import TraceSpec, generate_workload
+from repro.traces.workload import keepalive_hints
+
+TR = TraceSpec(minutes=1, invocations_per_min=400, n_functions=16, seed=3)
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return generate_workload(TR).tasks
+
+
+# -- shim equality: every legacy entrypoint must produce a roll-up
+# bit-identical to the Scenario it now builds internally. ---------------------
+
+def test_run_policy_shim_matches_scenario(tasks):
+    with pytest.warns(DeprecationWarning):
+        old = run_policy("hybrid", tasks, n_cores=16, containers="fixed")
+    new = run(Scenario(
+        workload=WorkloadSpec(kind="tasks", tasks=tasks),
+        fleet=FleetSpec(cores_per_node=16, containers="fixed"),
+        policy=PolicySpec(name="hybrid"))).raw
+    assert old.summary() == new.summary()
+
+
+def test_run_cluster_shim_matches_scenario(tasks):
+    with pytest.warns(DeprecationWarning):
+        old = run_cluster(tasks, n_nodes=3, cores_per_node=6,
+                          dispatcher="least_loaded", containers="fixed",
+                          seed=5)
+    new = run(Scenario(
+        workload=WorkloadSpec(kind="tasks", tasks=tasks),
+        fleet=FleetSpec(n_nodes=3, cores_per_node=6,
+                        dispatcher="least_loaded", containers="fixed",
+                        seed=5),
+        policy=PolicySpec(name="hybrid"))).raw
+    assert old.summary() == new.summary()
+
+
+def test_run_gateway_shim_matches_scenario():
+    from repro.configs import get_config
+    from repro.serving.gateway import requests_from_trace, run_gateway
+    cfg = get_config("deepseek-7b")
+    with pytest.warns(DeprecationWarning):
+        old = run_gateway(cfg, "hybrid", n_slots=12, n_fifo=6, trace=TR,
+                          straggler_factor=3.0)
+    new = run(Scenario(
+        workload=WorkloadSpec(kind="tasks",
+                              tasks=requests_from_trace(cfg, TR),
+                              fresh=False),
+        fleet=FleetSpec(cores_per_node=12),
+        policy=PolicySpec(
+            name="hybrid", adapt_pct=95.0, rightsize=True, n_fifo=6,
+            serving=ServingSpec(model=cfg, straggler_factor=3.0))))
+    assert old.sim.summary() == new.raw.summary()
+    assert old.redispatches == getattr(new.raw, "redispatches", 0)
+
+
+def test_run_gateway_fleet_shim_matches_scenario():
+    from repro.configs import get_config
+    from repro.serving.gateway import (requests_from_trace,
+                                       run_gateway_fleet)
+    cfg = get_config("deepseek-7b")
+    with pytest.warns(DeprecationWarning):
+        old = run_gateway_fleet(cfg, "hybrid", n_nodes=2,
+                                slots_per_node=6, trace=TR, seed=4,
+                                containers="fixed")
+    new = run(Scenario(
+        workload=WorkloadSpec(kind="tasks",
+                              tasks=requests_from_trace(cfg, TR),
+                              fresh=False),
+        fleet=FleetSpec(n_nodes=2, cores_per_node=6,
+                        dispatcher="least_loaded", containers="fixed",
+                        seed=4),
+        policy=PolicySpec(name="hybrid", adapt_pct=95.0, rightsize=True,
+                          serving=ServingSpec(model=cfg)))).raw
+    assert old.summary() == new.summary()
+
+
+def test_run_cell_row_matches_scenario():
+    cell = Cell(node_policy="hybrid", dispatcher="least_loaded",
+                n_nodes=2, cores_per_node=6, containers="fixed",
+                minutes=1, invocations_per_min=300, n_functions=12,
+                seed=2)
+    row = run_cell(cell)
+    res = run(cell.to_scenario())
+    for k, v in res.summary().items():
+        assert row[k] == v, k
+    # the grid axes ride along for the regression-gate cell key
+    assert row["workload"] == "azure"
+    assert row["node_policy"] == "hybrid"
+
+
+def test_shims_reusable_workload_not_consumed(tasks):
+    """The historical contract: callers may reuse their task list."""
+    before = [(t.tid, t.arrival, t.service, t.remaining) for t in tasks]
+    with pytest.warns(DeprecationWarning):
+        run_policy("cfs", tasks, n_cores=16)
+    after = [(t.tid, t.arrival, t.service, t.remaining) for t in tasks]
+    assert before == after
+
+
+# -- ContainerSpec: the one sandbox-pool spec every layer accepts. ------------
+
+def test_container_spec_from_legacy_roundtrip():
+    cfg = ContainerConfig(policy="fixed", capacity_mb=1024.0,
+                          keepalive_ms=5000.0)
+    spec = ContainerSpec.from_legacy(cfg)
+    assert spec.policy == "fixed"
+    assert spec.capacity_mb == 1024.0
+    assert spec.keepalive_ms == 5000.0
+    back = spec.to_config()
+    assert back.policy == cfg.policy
+    assert back.capacity_mb == cfg.capacity_mb
+    assert back.keepalive_ms == cfg.keepalive_ms
+    # idempotent
+    assert ContainerSpec.from_legacy(spec) is spec
+
+
+def test_container_spec_from_strings_and_dicts():
+    assert ContainerSpec.from_legacy(None) is None
+    assert ContainerSpec.from_legacy("off") is None
+    assert ContainerSpec.from_legacy("fixed").policy == "fixed"
+    spec = ContainerSpec.from_legacy(
+        {"policy": "fixed", "capacity_mb": 2048.0})
+    assert spec.capacity_mb == 2048.0
+    with pytest.raises((TypeError, ValueError)):
+        ContainerSpec.from_legacy(42)
+
+
+def test_container_spec_histogram_hints_match_legacy(tasks):
+    """ContainerSpec's histogram policy must reproduce the old
+    hand-rolled generate -> keepalive_hints wiring exactly."""
+    spec = ContainerSpec(policy="histogram", capacity_mb=4096.0,
+                         keepalive_ms=30_000.0)
+    new_cfg = spec.to_config(tasks)
+    base = ContainerConfig(policy="histogram", capacity_mb=4096.0,
+                           keepalive_ms=30_000.0)
+    old_cfg = replace(base, prewarm=keepalive_hints(tasks, base))
+    assert new_cfg.prewarm == old_cfg.prewarm
+    assert new_cfg.policy == old_cfg.policy
+
+
+def test_as_container_config_accepts_everything(tasks):
+    assert as_container_config(None) is None
+    assert as_container_config("off") is None
+    pool = ContainerPool(ContainerConfig(), seed=0)
+    assert as_container_config(pool) is pool
+    cfg = ContainerConfig(capacity_mb=512.0)
+    assert as_container_config(cfg) is cfg
+    out = as_container_config({"policy": "fixed", "capacity_mb": 512.0})
+    assert isinstance(out, ContainerConfig)
+    assert out.capacity_mb == 512.0
+
+
+def test_scheduler_accepts_container_spec(tasks):
+    """Scheduler coerces spec / dict / str directly — no manual
+    ContainerPool plumbing needed anywhere."""
+    from repro.core.policies import FIFO
+    from repro.core.metrics import collect
+    import copy
+    results = []
+    for containers in (ContainerSpec(policy="fixed"), "fixed",
+                       {"policy": "fixed"}):
+        sched = FIFO(n_cores=16, containers=containers)
+        sched.run(copy.deepcopy(tasks))
+        results.append(collect(sched, "fifo").summary())
+    assert results[0] == results[1] == results[2]
+    assert results[0]["cold_starts"] > 0
+
+
+# -- versioned summary schema -------------------------------------------------
+
+# Frozen copy of the v1 key set: the schema contract is additive-only,
+# so this literal must NEVER shrink or change — only grow in a v2.
+V1_KEYS = (
+    "schema_version", "workload", "policy", "dispatcher", "n_nodes",
+    "cores_per_node", "n", "failed", "n_requests", "p99_turnaround_s",
+    "makespan_s", "cost_usd", "total_cost_usd", "usd_per_1k_requests",
+    "cold_starts", "cold_start_rate", "init_cost_usd", "warm_hold_usd",
+    "shed", "rejected_cost_usd", "requeued", "chaos_events", "queued",
+    "spilled", "prewarmed",
+)
+
+
+def test_summary_schema_frozen():
+    assert repro.SCHEMA_VERSION == 1
+    assert set(V1_KEYS) <= set(repro.SUMMARY_KEYS_V1), \
+        "v1 summary keys were removed — the schema is additive-only"
+
+
+@pytest.mark.parametrize("fleet", [False, True])
+def test_summary_carries_v1_keys(tasks, fleet):
+    fl = FleetSpec(n_nodes=2, cores_per_node=8,
+                   dispatcher="least_loaded") if fleet \
+        else FleetSpec(cores_per_node=16)
+    s = run(Scenario(workload=WorkloadSpec(kind="tasks", tasks=tasks),
+                     fleet=fl, policy=PolicySpec(name="hybrid"))).summary()
+    missing = set(repro.SUMMARY_KEYS_V1) - set(s)
+    assert not missing, missing
+    assert s["schema_version"] == repro.SCHEMA_VERSION
+    assert s["n_requests"] == s["n"] > 0
+    assert s["usd_per_1k_requests"] == pytest.approx(
+        s["total_cost_usd"] / s["n_requests"] * 1000.0)
+
+
+def test_summary_same_keys_single_vs_fleet(tasks):
+    """The whole point of the versioned frame: benchmarks, the gate and
+    the dashboard read ONE schema regardless of topology."""
+    single = run(Scenario(
+        workload=WorkloadSpec(kind="tasks", tasks=tasks),
+        fleet=FleetSpec(cores_per_node=16),
+        policy=PolicySpec(name="cfs"))).summary()
+    fleet = run(Scenario(
+        workload=WorkloadSpec(kind="tasks", tasks=tasks),
+        fleet=FleetSpec(n_nodes=2, cores_per_node=8,
+                        dispatcher="least_loaded"),
+        policy=PolicySpec(name="cfs"))).summary()
+    assert set(repro.SUMMARY_KEYS_V1) <= set(single) & set(fleet)
+
+
+def test_scenario_determinism(tasks):
+    a = run(Scenario(workload=WorkloadSpec(kind="tasks", tasks=tasks),
+                     fleet=FleetSpec(n_nodes=2, cores_per_node=8,
+                                     dispatcher="least_loaded", seed=9),
+                     policy=PolicySpec(name="hybrid"))).summary()
+    b = run(Scenario(workload=WorkloadSpec(kind="tasks", tasks=tasks),
+                     fleet=FleetSpec(n_nodes=2, cores_per_node=8,
+                                     dispatcher="least_loaded", seed=9),
+                     policy=PolicySpec(name="hybrid"))).summary()
+    assert a == b
+
+
+def test_lazy_package_exports():
+    assert callable(repro.run)
+    assert repro.Scenario is Scenario
+    with pytest.raises(AttributeError):
+        repro.does_not_exist
