@@ -1,0 +1,178 @@
+"""Monte-Carlo sweep throughput: cells/sec, batched JAX vs mp.Pool.
+
+The batched MC engine (``repro.mc``, DESIGN.md Sec. 16) advances a
+whole (seeds x loads x policies) grid of in-regime sweep cells in one
+vmapped XLA program, bit-identical to the scalar engine. This bench
+measures the throughput side of that trade on a >= 256-cell grid:
+
+* the POOL baseline — ``cluster.sweep.run_sweep`` over the same cells
+  through the ``multiprocessing`` pool, each worker regenerating its
+  workload and running the scalar engine (the pre-PR sweep path,
+  unchanged);
+* the JAX backend — ``run_sweep(..., backend="jax")``, timed COLD
+  (first call: XLA compilation included) and WARM (the compiled
+  program cached, the steady-state cost of every later grid on the
+  same shape bucket).
+
+The headline is ``speedup_vs_pool`` = warm-JAX cells/sec over pool
+cells/sec. READ IT WITH THE MACHINE IN MIND: one compiled program
+does O(padded-slots) vector work per retired event across the whole
+batch, where the scalar engine does O(1) dict work per event and
+fast-forwards dense regimes analytically. On parallel hardware
+(many-core CPU, GPU/TPU) the batch axis is free and the one-program
+shape wins; on a single-core CI runner XLA executes the batch
+serially and the batched backend sits near parity on fifo/hybrid
+grids and behind on slice-expiry-dense pure-CFS cells. ``meta``
+records ``cpu_count`` and the compile time so a number measured on
+one machine is never mistaken for a hardware-independent ratio, and
+CI gates cells/sec run-over-run on the same runner (kind ``mc`` in
+``benchmarks.regression_gate``) rather than against an absolute
+cross-machine target.
+
+Equivalence is re-asserted on a sample of cells each run (summaries
+must match the pool rows exactly) — a throughput number for a wrong
+simulation would be worse than no number.
+
+Standalone::
+
+    python -m benchmarks.mc_bench [--smoke]
+
+Writes ``results/benchmarks/BENCH_mc.json``:
+
+    {"rows": [{"policy": ..., "backend": "pool" | "jax" | "jax_cold",
+               "n_cells": ..., "n_cores": ..., "n_tasks": ...,
+               "wall_s": ..., "cells_per_sec": ...}, ...],
+     "meta": {"headline_speedup_vs_pool": ..., "compile_s": ...,
+              "cpu_count": ..., ...}}
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.cluster.sweep import build_grid, run_sweep
+
+from .common import RESULTS
+
+ARTIFACT = "BENCH_mc.json"
+
+POLICIES = ("fifo", "cfs", "hybrid")
+
+# Full tier: 16 seeds x 6 loads x 3 policies = 288 cells (the >= 256
+# acceptance floor), each one minute of a small Azure-like trace on a
+# 4-core node — the many-small-cells shape Monte-Carlo sweeps take.
+FULL = dict(seeds=range(16), loads=(0.25, 0.5, 1.0, 1.5, 2.0, 3.0),
+            minutes=1, invocations_per_min=60.0, n_functions=10,
+            n_cores=4)
+# Smoke tier (CI): same shape, 12 cells, finishes in well under a
+# minute including the one XLA compile.
+SMOKE = dict(seeds=range(2), loads=(0.5, 1.5),
+             minutes=1, invocations_per_min=60.0, n_functions=10,
+             n_cores=4)
+
+# How many cells of each timed grid get their pool/jax summary rows
+# byte-compared (bit-identity spot check riding along with the bench).
+VERIFY_CELLS = 6
+
+
+def mc_grid(spec: dict) -> list:
+    return build_grid(
+        POLICIES, ["none"], [1], tuple(spec["loads"]),
+        cores_per_node=spec["n_cores"], minutes=spec["minutes"],
+        invocations_per_min=spec["invocations_per_min"],
+        n_functions=spec["n_functions"])
+
+
+def _expand_seeds(grid: list, seeds) -> list:
+    from dataclasses import replace
+    return [replace(c, seed=s) for c in grid for s in seeds]
+
+
+def _strip(row: dict) -> dict:
+    return {k: v for k, v in row.items() if k != "backend"}
+
+
+def bench_grid(spec: dict) -> tuple[list[dict], dict]:
+    grid = _expand_seeds(mc_grid(spec), spec["seeds"])
+    n_cells = len(grid)
+
+    t0 = time.perf_counter()
+    pool_rows = run_sweep(grid, parallel=True)
+    pool_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    jax_rows = run_sweep(grid, backend="jax")
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax_rows = run_sweep(grid, backend="jax")
+    warm_s = time.perf_counter() - t0
+
+    n_jax = sum(r["backend"] == "jax" for r in jax_rows)
+    if n_jax != n_cells:
+        raise RuntimeError(
+            f"{n_cells - n_jax} bench cells fell back to the scalar "
+            "engine — the bench grid must sit fully inside the batched "
+            "regime")
+    step = max(1, n_cells // VERIFY_CELLS)
+    for k in range(0, n_cells, step):
+        if _strip(jax_rows[k]) != pool_rows[k]:
+            raise RuntimeError(
+                f"bit-identity violated on bench cell {k}: "
+                f"{pool_rows[k]} != {jax_rows[k]}")
+
+    n_tasks = pool_rows[0]["n"]
+    # Per-policy walls are not separable inside one batched program;
+    # the artifact's gated rows are the all-policies aggregates per
+    # backend (plus the cold row, reported but gate-exempt: its wall
+    # is dominated by the one-off XLA compile).
+    rows = [
+        {"policy": "all", "backend": "pool", "n_cells": n_cells,
+         "n_cores": spec["n_cores"], "n_tasks": n_tasks,
+         "wall_s": pool_s, "cells_per_sec": n_cells / pool_s},
+        {"policy": "all", "backend": "jax", "n_cells": n_cells,
+         "n_cores": spec["n_cores"], "n_tasks": n_tasks,
+         "wall_s": warm_s, "cells_per_sec": n_cells / warm_s},
+        {"policy": "all", "backend": "jax_cold", "n_cells": n_cells,
+         "n_cores": spec["n_cores"], "n_tasks": n_tasks,
+         "wall_s": cold_s, "cells_per_sec": n_cells / cold_s},
+    ]
+    meta = {
+        "n_cells": n_cells,
+        "n_tasks_per_cell": n_tasks,
+        "grid": {k: (list(v) if isinstance(v, (range, tuple)) else v)
+                 for k, v in spec.items()},
+        "pool_s": pool_s,
+        "jax_cold_s": cold_s,
+        "jax_warm_s": warm_s,
+        "compile_s": cold_s - warm_s,
+        "headline_speedup_vs_pool": pool_s / warm_s,
+        "cpu_count": os.cpu_count(),
+        "verified_cells": len(range(0, n_cells, step)),
+    }
+    return rows, meta
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    rows, meta = bench_grid(SMOKE if smoke else FULL)
+    meta["smoke"] = smoke
+    payload = {"rows": rows, "meta": meta}
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / ARTIFACT).write_text(json.dumps(payload, indent=2))
+    print("policy,backend,n_cells,n_cores,wall_s,cells_per_sec")
+    for r in rows:
+        print(f"{r['policy']},{r['backend']},{r['n_cells']},"
+              f"{r['n_cores']},{r['wall_s']:.3f},"
+              f"{r['cells_per_sec']:.1f}")
+    print(f"# headline: jax-warm vs pool "
+          f"{meta['headline_speedup_vs_pool']:.2f}x on "
+          f"{meta['n_cells']} cells "
+          f"(compile {meta['compile_s']:.1f}s, "
+          f"cpu_count={meta['cpu_count']})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,8 +6,8 @@ or several: given multiple baseline artifacts it collapses them into a
 synthetic per-cell MEDIAN baseline first (``--median-of N`` caps how
 many of the newest are used), so a single lucky or noisy historical
 run cannot anchor the gate. It FAILS (exit 1) on a regression beyond
-``--threshold``. Two artifact kinds are understood, auto-detected from
-the row schema:
+``--threshold``. Three artifact kinds are understood, auto-detected
+from the row schema:
 
 * ``cluster_matrix`` / ``BENCH_resilience`` / ``heavy_traffic`` rows —
   fail when a shared grid cell's ``cost_usd`` goes UP or its
@@ -22,6 +22,15 @@ the row schema:
   engine throughput from the hot-path overhaul is a tracked trajectory,
   not a one-off measurement, and smoke-tier runs never cross-compare
   with full-trace baselines.
+* ``BENCH_mc`` rows (``cells_per_sec`` present) — fail when a shared
+  sweep-throughput cell's cells/sec drops by more than the threshold.
+  Cells are matched on (policy, backend, n_cores, n_cells, n_tasks):
+  the ``backend`` axis keeps the pool baseline and the batched JAX
+  path as separate trajectories on the same runner. ``jax_cold`` rows
+  (wall dominated by the one-off XLA compile) are reported but never
+  fail the gate. Sweep artifacts gain nothing here: their summary rows
+  are backend-invariant by the bit-identity contract, so the cluster
+  key deliberately ignores any ``backend`` field.
 
 Cells present on only one side are reported but do not fail the gate
 (grids evolve). Missing baseline files are skipped with a note; when
@@ -85,6 +94,55 @@ def is_engine_rows(rows: list[dict]) -> bool:
     return bool(rows) and "events_per_sec" in rows[0]
 
 
+def is_mc_rows(rows: list[dict]) -> bool:
+    return bool(rows) and "cells_per_sec" in rows[0]
+
+
+def mc_key(row: dict) -> tuple:
+    # backend separates the pool baseline from the batched-JAX
+    # trajectory; n_cells / n_tasks key the grid scale, so a smoke
+    # artifact never cross-compares with a full-grid baseline.
+    return (row.get("policy"), row.get("backend"), row.get("n_cores"),
+            row.get("n_cells"), row.get("n_tasks"))
+
+
+def compare_mc(prev_rows: list[dict], new_rows: list[dict],
+               threshold: float) -> tuple[list[str], list[str]]:
+    """MC sweep-throughput gate: cells/sec must not drop > threshold.
+    ``jax_cold`` rows are compile-dominated and never fail."""
+    prev = {mc_key(r): r for r in prev_rows}
+    new = {mc_key(r): r for r in new_rows}
+    failures, notes = [], []
+    for k in sorted(set(prev) ^ set(new), key=str):
+        side = "baseline" if k in prev else "new run"
+        notes.append(f"mc cell {k} only in {side}; skipped")
+    shared = sorted(set(prev) & set(new), key=str)
+    if not shared:
+        notes.append("no shared mc cells; nothing to gate")
+        return failures, notes
+    n_cmp = 0
+    for k in shared:
+        p, n = prev[k].get("cells_per_sec"), new[k].get("cells_per_sec")
+        if not p or not n:
+            continue
+        n_cmp += 1
+        ratio = n / p
+        if ratio < 1.0 - threshold:
+            msg = (f"mc cell {k}: cells/sec regressed {ratio - 1.0:+.1%} "
+                   f"({p:.1f} -> {n:.1f})")
+            if k[1] == "jax_cold":
+                notes.append(msg + " [compile-dominated; not gated]")
+            else:
+                failures.append(msg)
+    notes.append(f"compared {len(shared)} mc cells "
+                 f"({n_cmp} on cells/sec)")
+    if n_cmp == 0:
+        failures.append(
+            f"{len(shared)} shared mc cells but 0 comparisons — "
+            "artifact schema drifted? (rows need cells_per_sec)")
+    return failures, notes
+
+
 def median_baseline(rows_lists: list[list[dict]]) -> list[dict]:
     """Collapse N baseline artifacts (NEWEST FIRST) into one synthetic
     baseline: per cell, the median of each gated metric over the runs
@@ -97,7 +155,8 @@ def median_baseline(rows_lists: list[list[dict]]) -> list[dict]:
     if len(rows_lists) == 1:
         return rows_lists[0]
     engine = any(is_engine_rows(rows) for rows in rows_lists)
-    key_fn = engine_key if engine else cell_key
+    mc = not engine and any(is_mc_rows(rows) for rows in rows_lists)
+    key_fn = engine_key if engine else mc_key if mc else cell_key
     cells: dict[tuple, list[dict]] = {}
     order: list[tuple] = []
     for rows in rows_lists:            # newest first
@@ -116,6 +175,11 @@ def median_baseline(rows_lists: list[list[dict]]) -> list[dict]:
                     if r.get("events_per_sec")]
             if vals:
                 synth["events_per_sec"] = statistics.median(vals)
+        elif mc:
+            vals = [r["cells_per_sec"] for r in history
+                    if r.get("cells_per_sec")]
+            if vals:
+                synth["cells_per_sec"] = statistics.median(vals)
         else:
             costs = [r["cost_usd"] for r in history if r.get("cost_usd")]
             if costs:
@@ -256,6 +320,8 @@ def main(argv=None) -> int:
     if is_engine_rows(new_rows) or is_engine_rows(prev_rows):
         failures, more = compare_engine(prev_rows, new_rows,
                                         args.threshold)
+    elif is_mc_rows(new_rows) or is_mc_rows(prev_rows):
+        failures, more = compare_mc(prev_rows, new_rows, args.threshold)
     else:
         failures, more = compare(prev_rows, new_rows, args.threshold)
     notes.extend(more)

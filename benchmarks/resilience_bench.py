@@ -27,9 +27,19 @@ regression gate's resilience cell key) and the headline folded into the
 first row. Standalone: ``python -m benchmarks.resilience_bench
 [--smoke]``; also registered as ``resilience_matrix`` in
 ``benchmarks.run``.
+
+The 16 cells are independent, so the nightly full tier fans out over a
+CI matrix exactly like the heavy-traffic sweep: ``--shard i/n`` runs
+the deterministic i-mod-n slice of the cell list (same partition rule
+as ``cluster.sweep``), ``--merge SHARD.json ... --out FULL.json``
+folds the per-shard artifacts back into ONE canonical artifact — rows
+in the unsharded cell order, the headline recomputed over the complete
+set (a shard alone never carries a headline: it cannot see both of the
+cells the claim compares).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -156,12 +166,49 @@ def _headline(rows) -> dict:
     }
 
 
-def resilience_matrix(smoke: bool = None) -> list[dict]:
+def resilience_matrix(smoke: bool = None,
+                      shard: str = None) -> list[dict]:
     if smoke is None:
         smoke = bool(os.environ.get("CLUSTER_BENCH_SMOKE"))
     spec = _trace(smoke)
     tasks = generate_workload(spec).tasks
-    rows = [_run_cell(tasks, spec, *cell) for cell in _cells()]
+    cells = list(_cells())
+    if shard is not None:
+        from repro.cluster.sweep import shard_grid
+        cells = shard_grid(cells, shard)
+    rows = [_run_cell(tasks, spec, *cell) for cell in cells]
+    if shard is None:
+        head = _headline(rows)
+        rows[0] = {**rows[0],
+                   **{f"headline_{k}": v for k, v in head.items()}}
+    return rows
+
+
+def _cell_order(row: dict) -> int:
+    """Canonical position of a row in the unsharded ``_cells()`` order."""
+    order = {(p, v, c): i for i, (p, v, _d, _a, _pr, c)
+             in enumerate(_cells())}
+    return order[(row["node_policy"], row["variant"], row["chaos"])]
+
+
+def merge_shards(paths: list[str]) -> list[dict]:
+    """Fold per-shard artifacts into the canonical full matrix: rows in
+    unsharded cell order, headline recomputed over the complete set.
+    Raises if the shards do not reassemble exactly the 16-cell grid
+    (a lost shard must fail the merge, not silently shrink the
+    artifact the regression gate trusts)."""
+    rows: list[dict] = []
+    for p in paths:
+        payload = json.loads(open(p).read())
+        rows.extend(payload["matrix"] if isinstance(payload, dict)
+                    else payload)
+    expected = len(list(_cells()))
+    keys = {_cell_order(r) for r in rows}
+    if len(rows) != expected or keys != set(range(expected)):
+        raise SystemExit(
+            f"shards reassemble {sorted(keys)} of 0..{expected - 1} "
+            f"({len(rows)} rows) — refusing to merge a partial matrix")
+    rows.sort(key=_cell_order)
     head = _headline(rows)
     rows[0] = {**rows[0], **{f"headline_{k}": v for k, v in head.items()}}
     return rows
@@ -172,14 +219,35 @@ COLS = ("node_policy", "variant", "chaos", "cost_usd", "total_cost_usd",
         "p99_slowdown")
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from repro.cluster.sweep import print_rows
-    smoke = "--smoke" in sys.argv
-    rows = resilience_matrix(smoke=smoke)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--shard", default=None, metavar="i/n",
+                    help="run only this deterministic 1/n slice of the "
+                         "16-cell matrix (no headline; recombine with "
+                         "--merge)")
+    ap.add_argument("--merge", nargs="+", default=None, metavar="JSON",
+                    help="merge per-shard --out files into --out and "
+                         "exit (headline recomputed; no cells run)")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default "
+                         "results/benchmarks/BENCH_resilience.json)")
+    args = ap.parse_args(argv)
+    out = args.out or str(RESULTS / "BENCH_resilience.json")
+
+    if args.merge:
+        rows = merge_shards(args.merge)
+    else:
+        rows = resilience_matrix(smoke=args.smoke, shard=args.shard)
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "BENCH_resilience.json").write_text(
-        json.dumps({"matrix": rows}, indent=2))
+    with open(out, "w") as f:
+        json.dump({"matrix": rows}, f, indent=2)
     print_rows(rows, COLS)
+    if args.shard:
+        print(f"# shard {args.shard}: {len(rows)} cells -> {out} "
+              f"(headline deferred to --merge)", file=sys.stderr)
+        return
     first = rows[0]
     print(f"# hybrid+prewarm+admission vs cfs+reactive under churn: "
           f"cheaper={first['headline_cheaper']} "

@@ -32,12 +32,19 @@ import json
 import statistics
 from pathlib import Path
 
-from .regression_gate import cell_key, engine_key, load_rows
+from .regression_gate import cell_key, engine_key, load_rows, mc_key
+
+
+def _timing_key(row: dict) -> tuple:
+    return (row.get("module"), row.get("tier"))
+
 
 # kind -> (filename, cell key fn, metric, direction, format)
 KINDS = {
     "engine": ("BENCH_engine.json", engine_key, "events_per_sec",
                "higher", "{:,.0f}"),
+    "mc": ("BENCH_mc.json", mc_key, "cells_per_sec",
+           "higher", "{:,.1f}"),
     "cluster": ("cluster_matrix.json", cell_key, "cost_usd",
                 "lower", "{:.6g}"),
     "resilience": ("BENCH_resilience.json", cell_key, "cost_usd",
@@ -46,6 +53,11 @@ KINDS = {
                       "lower", "{:.6g}"),
     "llm_faas": ("BENCH_llm_faas.json", cell_key, "usd_per_1k_requests",
                  "lower", "{:.6g}"),
+    # Nightly slow-tier per-module test wall-clock (tests/conftest.py
+    # writes the artifact when REPRO_TEST_TIMINGS is set): a module
+    # quietly doubling its runtime trends here like any bench cell.
+    "test_timings": ("test_timings.json", _timing_key, "wall_s",
+                     "lower", "{:.2f}"),
 }
 
 _SPARK = "▁▂▃▄▅▆▇█"

@@ -20,15 +20,22 @@ _SCENARIO_EXPORTS = (
     "SCHEMA_VERSION", "SUMMARY_KEYS_V1",
 )
 
-__all__ = ["__version__", *_SCENARIO_EXPORTS]
+# Batched Monte-Carlo front door (imports JAX only when touched).
+_MC_EXPORTS = ("MonteCarlo", "MonteCarloResult")
+
+__all__ = ["__version__", *_SCENARIO_EXPORTS, *_MC_EXPORTS]
 
 
 def __getattr__(name):
     if name in _SCENARIO_EXPORTS:
         from . import scenario
         return getattr(scenario, name)
+    if name in _MC_EXPORTS:
+        from . import mc
+        return getattr(mc, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(set(globals()) | set(_SCENARIO_EXPORTS))
+    return sorted(set(globals()) | set(_SCENARIO_EXPORTS)
+                  | set(_MC_EXPORTS))

@@ -95,11 +95,14 @@ class Cell:
                     policy=self.containers,
                     capacity_mb=self.container_capacity_mb,
                     keepalive_ms=self.keepalive_ms)
+        # dispatcher="none" selects the single-node engine path (no
+        # ClusterSim): the shape the batched MC backend accelerates.
+        dispatcher = None if self.dispatcher == "none" else self.dispatcher
         return Scenario(
             workload=wl,
             fleet=FleetSpec(n_nodes=self.n_nodes,
                             cores_per_node=self.cores_per_node,
-                            dispatcher=self.dispatcher,
+                            dispatcher=dispatcher,
                             containers=containers, seed=self.seed),
             policy=PolicySpec(name=self.node_policy))
 
@@ -122,12 +125,61 @@ def build_grid(node_policies, dispatchers, n_nodes, load_scales=(1.0,),
 
 
 def run_sweep(grid: list[Cell], *, parallel: bool = True,
-              processes: Optional[int] = None) -> list[dict]:
+              processes: Optional[int] = None,
+              backend: str = "python") -> list[dict]:
+    """Run every cell and return summary rows in grid order.
+
+    ``backend="jax"`` routes cells inside the batched Monte-Carlo
+    regime (single node, no containers — see ``repro.mc.dispatch``)
+    through one vmapped device program and everything else through the
+    usual per-cell path; rows gain a ``backend`` key recording the
+    route.  Results are identical either way — the batched engine is
+    bit-compatible and out-of-regime cells fall back transparently.
+    """
+    if backend == "jax":
+        return _run_sweep_jax(grid, parallel=parallel,
+                              processes=processes)
+    if backend != "python":
+        raise ValueError(f"unknown backend {backend!r}")
     if not parallel or len(grid) <= 1:
         return [run_cell(c) for c in grid]
     processes = processes or min(len(grid), os.cpu_count() or 2)
     with mp.Pool(processes) as pool:
         return pool.map(run_cell, grid)
+
+
+def _run_sweep_jax(grid: list[Cell], *, parallel: bool,
+                   processes: Optional[int]) -> list[dict]:
+    from ..mc.dispatch import supported, tasks_supported
+    from ..mc.engine import run_scenarios
+
+    scs = [c.to_scenario() for c in grid]
+    jax_idx = [k for k, sc in enumerate(scs) if supported(sc) is None]
+    # Build once here (shared with the kernel via ``prebuilt``) so the
+    # dynamic half of the gate can still demote caller-shaped streams.
+    prebuilt = [scs[k].workload.build() for k in jax_idx]
+    keep = [j for j, k in enumerate(jax_idx)
+            if tasks_supported(prebuilt[j][0]) is None]
+    jax_idx = [jax_idx[j] for j in keep]
+    prebuilt = [prebuilt[j] for j in keep]
+
+    rows: list[Optional[dict]] = [None] * len(grid)
+    if jax_idx:
+        batched = run_scenarios([scs[k] for k in jax_idx],
+                                prebuilt=prebuilt)
+        for k, res in zip(jax_idx, batched):
+            row = asdict(grid[k])
+            row.update(res.summary())
+            row["backend"] = "jax"
+            rows[k] = row
+    rest = [k for k in range(len(grid)) if rows[k] is None]
+    if rest:
+        for k, row in zip(rest, run_sweep([grid[k] for k in rest],
+                                          parallel=parallel,
+                                          processes=processes)):
+            row["backend"] = "python"
+            rows[k] = row
+    return rows
 
 
 def compare_serial(grid: list[Cell],
@@ -244,10 +296,13 @@ SUMMARY_COLS = ("node_policy", "dispatcher", "n_nodes", "load_scale",
 
 
 def print_rows(rows: list[dict], cols=SUMMARY_COLS) -> None:
-    """CSV-print summary rows (shared by the sweep CLI and benches)."""
+    """CSV-print summary rows (shared by the sweep CLI and benches).
+    Missing columns print empty: single-node cells (dispatcher
+    ``"none"``) carry no fleet-only keys like ``util_range``."""
     print(",".join(cols))
     for r in rows:
-        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float)
+        print(",".join("" if c not in r
+                       else f"{r[c]:.4g}" if isinstance(r[c], float)
                        else str(r[c]) for c in cols))
 
 
@@ -276,6 +331,11 @@ def main(argv=None) -> None:
     ap.add_argument("--merge", nargs="+", default=None, metavar="JSON",
                     help="merge per-shard --out files into --out and "
                          "exit (no cells are run)")
+    ap.add_argument("--backend", default="python",
+                    choices=("python", "jax"),
+                    help="jax: batch in-regime cells (single-node, no "
+                         "containers) into one vmapped device program; "
+                         "out-of-regime cells fall back per cell")
     ap.add_argument("--serial", action="store_true",
                     help="disable the multiprocessing pool")
     ap.add_argument("--compare-serial", action="store_true",
@@ -337,7 +397,8 @@ def main(argv=None) -> None:
               f"parallel {meta['parallel_s']:.2f}s  "
               f"speedup {meta['speedup']:.2f}x", file=sys.stderr)
     else:
-        rows = run_sweep(grid, parallel=not args.serial)
+        rows = run_sweep(grid, parallel=not args.serial,
+                         backend=args.backend)
 
     print_rows(rows)
     if args.out:

@@ -94,6 +94,11 @@ class ContainerConfig:
     hist_min_ms: float = 2_000.0
     hist_max_ms: float = 120_000.0
     prewarm: Optional[dict] = None    # func_id -> keep-alive hint (ms)
+    # Per-function sandbox cap for SLOT-TRACKED dispatch (request_slot/
+    # release_slot): at most this many invocations of one func_id hold
+    # a sandbox at once; excess dispatches queue FIFO. None = no cap —
+    # and the legacy acquire/release path never checks it.
+    max_concurrency: Optional[int] = None
 
 
 class _Warm:
@@ -154,6 +159,11 @@ class ContainerPool:
         # (t, func_id, tid, mem_mb), drained in canonical time order
         # before any read/mutation at or after t.
         self._pending: list[tuple[float, int, int, float]] = []
+        # Per-function concurrency limiting (request_slot/release_slot):
+        # slots currently held per func_id, and FIFO queues of
+        # (tid, mem_mb) dispatches waiting for one.
+        self._running: dict[int, int] = {}
+        self._waiters: dict[int, deque] = {}
         # histogram policy state
         self._last_seen: dict[int, float] = {}
         self._iat: dict[int, deque] = {}
@@ -167,6 +177,8 @@ class ContainerPool:
         self.prewarmed = 0        # sandboxes provisioned speculatively
         self.warm_mb_ms = 0.0     # integral of idle warm memory over time
         self.n_draws = 0          # cold-start RNG draw counter (stream index)
+        self.queued_concurrency = 0   # dispatches deferred by the cap
+        self.granted_from_queue = 0   # queued dispatches later admitted
 
     # -- internal -----------------------------------------------------------
     def _flush(self, upto: float = float("inf")) -> None:
@@ -368,6 +380,77 @@ class ContainerPool:
         after ``now``)."""
         heapq.heappush(self._pending, (now, func_id, tid, mem_mb))
 
+    # -- per-function concurrency limits ------------------------------------
+    def request_slot(self, func_id: int, mem_mb: float, now: float,
+                     tid: int = -1) -> str:
+        """Slot-tracked dispatch under ``cfg.max_concurrency``: claim a
+        per-function sandbox slot and (on admission) a warm container.
+
+        Returns ``"warm"`` (admitted, warm hit), ``"cold"`` (admitted,
+        pays a cold start) or ``"queued"`` (the function already holds
+        ``max_concurrency`` slots; the dispatch joins a FIFO queue and
+        is granted by a later :meth:`release_slot` — the caller learns
+        which via that call's return value, keyed by ``tid``).
+
+        With a fixed per-function memory size (the FaaS config model —
+        see :meth:`acquire`), the cap bounds warm+running sandboxes of
+        a slot-tracked function: at most ``max_concurrency`` slots run
+        at once, every release returns at most one sandbox to the warm
+        set, and a warm sandbox re-enters service only by converting
+        back into a running slot. The legacy acquire/release path is
+        untouched — callers opt into limiting by using the slot API.
+        """
+        cap = self.cfg.max_concurrency
+        self._flush(now)
+        if cap is not None and self._running.get(func_id, 0) >= cap:
+            self._waiters.setdefault(func_id, deque()).append((tid, mem_mb))
+            self.queued_concurrency += 1
+            return "queued"
+        self._running[func_id] = self._running.get(func_id, 0) + 1
+        return "warm" if self.acquire(func_id, mem_mb, now) else "cold"
+
+    def release_slot(self, func_id: int, mem_mb: float, now: float, *,
+                     keep_warm: bool = True) -> list[tuple[int, str]]:
+        """Finish a slot-tracked invocation: free its concurrency slot,
+        return the sandbox to the warm set (unless ``keep_warm`` is
+        False — crashed/decommissioned sandboxes free the slot only),
+        then admit queued dispatches FIFO while slots remain. Returns
+        the granted waiters as ``[(tid, "warm" | "cold"), ...]`` (at
+        most one per release when a cap is set) so the caller can start
+        them. Raises on a release without a matching request."""
+        self._flush(now)
+        n = self._running.get(func_id, 0)
+        if n <= 0:
+            raise ValueError(f"release_slot({func_id}) without a "
+                             f"matching request_slot")
+        if n == 1:
+            del self._running[func_id]
+        else:
+            self._running[func_id] = n - 1
+        if keep_warm:
+            self.release(func_id, mem_mb, now)
+        granted: list[tuple[int, str]] = []
+        cap = self.cfg.max_concurrency
+        w = self._waiters.get(func_id)
+        while w and (cap is None or self._running.get(func_id, 0) < cap):
+            tid, wmem = w.popleft()
+            self._running[func_id] = self._running.get(func_id, 0) + 1
+            self.granted_from_queue += 1
+            granted.append(
+                (tid, "warm" if self.acquire(func_id, wmem, now)
+                 else "cold"))
+        if w is not None and not w:
+            del self._waiters[func_id]
+        return granted
+
+    def running_counts(self) -> dict[int, int]:
+        """func_id -> slot-tracked running invocations (nonzero only)."""
+        return dict(self._running)
+
+    def queue_depths(self) -> dict[int, int]:
+        """func_id -> dispatches waiting on a concurrency slot."""
+        return {fid: len(q) for fid, q in self._waiters.items()}
+
     def evict_expired(self, now: float) -> int:
         """Reap every container whose keep-alive lapsed; the memory
         meter stops at the expiry instant, not at ``now``."""
@@ -482,6 +565,9 @@ class ContainerPool:
             "prewarmed": self.prewarmed,
             "idle_mb": self.idle_mb,
             "warm_mb_ms": self.warm_mb_ms,
+            "queued_concurrency": self.queued_concurrency,
+            "granted_from_queue": self.granted_from_queue,
+            "queue_depth": sum(len(q) for q in self._waiters.values()),
         }
 
     def check_invariants(self) -> None:
@@ -506,6 +592,21 @@ class ContainerPool:
         assert len(self._cap_heap) <= max(64, 2 * self._n_idle), \
             (f"capacity heap {len(self._cap_heap)} entries for "
              f"{self._n_idle} live containers — compaction not firing")
+        cap = self.cfg.max_concurrency
+        assert all(n > 0 for n in self._running.values()), \
+            "zero/negative slot count left in _running"
+        if cap is None:
+            assert not self._waiters, \
+                "waiters queued with no concurrency cap configured"
+        else:
+            for fid, n in self._running.items():
+                assert n <= cap, \
+                    f"func {fid} holds {n} slots over cap {cap}"
+            for fid, q in self._waiters.items():
+                assert q, "empty waiter queue left behind"
+                assert self._running.get(fid, 0) == cap, \
+                    (f"func {fid} queues {len(q)} dispatches while "
+                     f"holding only {self._running.get(fid, 0)}/{cap}")
 
 
 # -- the ONE way to say "containers" ------------------------------------------
@@ -536,6 +637,7 @@ class ContainerSpec:
     cold_base_ms: Optional[float] = None
     cold_per_gb_ms: Optional[float] = None
     cold_jitter: Optional[float] = None
+    max_concurrency: Optional[int] = None   # per-function slot cap
 
     @property
     def enabled(self) -> bool:
@@ -563,7 +665,8 @@ class ContainerSpec:
                        hints=obj.prewarm is not None,
                        cold_base_ms=obj.cold_base_ms,
                        cold_per_gb_ms=obj.cold_per_gb_ms,
-                       cold_jitter=obj.cold_jitter)
+                       cold_jitter=obj.cold_jitter,
+                       max_concurrency=obj.max_concurrency)
         if isinstance(obj, dict):
             return cls(**obj)
         raise TypeError(f"cannot build ContainerSpec from {type(obj)!r}")
@@ -577,7 +680,8 @@ class ContainerSpec:
         overrides = {k: v for k, v in (
             ("cold_base_ms", self.cold_base_ms),
             ("cold_per_gb_ms", self.cold_per_gb_ms),
-            ("cold_jitter", self.cold_jitter)) if v is not None}
+            ("cold_jitter", self.cold_jitter),
+            ("max_concurrency", self.max_concurrency)) if v is not None}
         cfg = ContainerConfig(policy=self.policy,
                               capacity_mb=self.capacity_mb,
                               keepalive_ms=self.keepalive_ms, **overrides)

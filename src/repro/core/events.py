@@ -68,6 +68,44 @@ _EPS = 1e-9
 _INF = float("inf")
 
 
+# -- regime arithmetic (pure) ---------------------------------------------
+# The closed-form float recipes of the supported fast-forward regime,
+# extracted so the scalar engine and the batched Monte-Carlo engine
+# (repro.mc, DESIGN.md Sec. 16) execute the SAME operation sequences.
+# Bit-identity rests on these being the only places the arithmetic
+# lives: each helper takes ``_min``/``_max`` so the mc kernels can
+# re-bind them to ``jnp.minimum``/``jnp.maximum`` while tracing — the
+# resulting f64 ops are identical to Python's on non-NaN operands.
+
+def chunk_run_ms(remaining, limit=None, *, _min=min, _max=max):
+    """Chunk length granted to a task: remaining work clamped to the
+    policy limit, floored at ``_EPS`` so a chunk always advances time."""
+    run = remaining if limit is None else _min(remaining, limit)
+    return _max(run, _EPS)
+
+
+def chunk_end_ms(t, ctx, run):
+    """Expiry instant of a chunk started at ``t``: left-associated
+    ``(t + ctx) + run`` — the exact sequence ``_start_chunk`` bills."""
+    return (t + ctx) + run
+
+
+def cfs_slice_ms(nr_running, sched_latency_ms, min_granularity_ms,
+                 *, _max=max):
+    """CFS timeslice: target latency split over the runnable count
+    (post-pick, so a lone task sees the full latency), floored at the
+    minimum granularity."""
+    return _max(sched_latency_ms / _max(1, nr_running),
+                min_granularity_ms)
+
+
+def fifo_budget_ms(limit_ms, cpu_time_ms, *, _max=max):
+    """Hybrid FIFO-group budget: time limit minus CPU already consumed,
+    floored at 0.01 ms so an over-budget task still runs one tick
+    before migrating."""
+    return _max(limit_ms - cpu_time_ms, 0.01)
+
+
 @dataclass(slots=True)
 class Task:
     """One serverless function invocation.
@@ -594,8 +632,7 @@ class Scheduler:
                     task.cold_start = True
                     task.init_ms = self.containers.cold_start_ms(task.mem_mb)
                     task.remaining += task.init_ms
-        run = task.remaining if limit is None else min(task.remaining, limit)
-        run = max(run, _EPS)
+        run = chunk_run_ms(task.remaining, limit)
         rate = 1.0
         if self.interference_fn is not None:
             rate = max(0.05, 1.0 - self.interference_fn(t))
@@ -607,7 +644,7 @@ class Scheduler:
         if ctx > 0.0:
             task.ctx_switches += 1
             self.total_ctx += 1
-        return t + ctx + run / rate
+        return chunk_end_ms(t, ctx, run / rate)
 
     def _complete(self, task: Task, t: float) -> None:
         """Single completion path: record, return the sandbox to the

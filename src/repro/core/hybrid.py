@@ -27,7 +27,7 @@ from collections import deque
 from typing import Optional
 
 from .events import (_EPS, _INF, GROUP_CFS, GROUP_FIFO, Core, Scheduler,
-                     Task, cfs_fast_forward)
+                     Task, cfs_fast_forward, cfs_slice_ms, fifo_budget_ms)
 
 
 def percentile(sorted_vals: list[float], pct: float) -> float:
@@ -239,7 +239,7 @@ class HybridScheduler(Scheduler):
             if self.fifo_queue:
                 task = self.fifo_queue.popleft()
                 # Remaining budget before this task must migrate to CFS.
-                budget = max(self.time_limit(t) - task.cpu_time, 0.01)
+                budget = fifo_budget_ms(self.time_limit(t), task.cpu_time)
                 return task, budget
             return None
         if core.rq:
@@ -248,8 +248,8 @@ class HybridScheduler(Scheduler):
         return None
 
     def _cfs_slice(self, core: Core) -> float:
-        nr = max(1, core.nr_running)
-        return max(self.sched_latency_ms / nr, self.min_granularity_ms)
+        return cfs_slice_ms(core.nr_running, self.sched_latency_ms,
+                            self.min_granularity_ms)
 
     # -- fast-forward (DESIGN.md Sec. 13) ---------------------------------
     #
@@ -322,7 +322,7 @@ class HybridScheduler(Scheduler):
                 return None          # core idles at `end`
             # -- pick_next (FIFO branch), replicated ------------------
             ntask = queue.popleft()
-            budget = max(limit - ntask.cpu_time, 0.01)
+            budget = fifo_budget_ms(limit, ntask.cpu_time)
             ctx = ctx_ms if core.last_task is not ntask else 0.0
             if ntask.first_run is None:
                 ntask.first_run = end    # no pool: core-local stamp

@@ -14,7 +14,8 @@ from __future__ import annotations
 from collections import deque
 from typing import Optional
 
-from .events import _EPS, Core, Scheduler, Task, cfs_fast_forward
+from .events import (_EPS, Core, Scheduler, Task, cfs_fast_forward,
+                     cfs_slice_ms)
 
 
 class FIFO(Scheduler):
@@ -172,8 +173,8 @@ class CFS(Scheduler):
         self.kick(core, t)
 
     def slice_for(self, core: Core) -> float:
-        nr = max(1, core.nr_running)
-        return max(self.sched_latency_ms / nr, self.min_granularity_ms)
+        return cfs_slice_ms(core.nr_running, self.sched_latency_ms,
+                            self.min_granularity_ms)
 
     def pick_next(self, core: Core, t: float):
         if core.rq:

@@ -1,0 +1,39 @@
+"""Batched Monte-Carlo engine: whole sweep grids in one JAX program.
+
+Public surface (DESIGN.md Sec. 16):
+
+* :class:`MonteCarlo` / :class:`MonteCarloResult` — Scenario-level
+  (seeds x loads) grids, ``MonteCarlo(sc, seeds=..., loads=...)``;
+* :func:`run_scenarios` — batch a list of in-regime scenarios;
+* :func:`supported` — the regime gate (None = batched, str = reason
+  for scalar fallback).
+
+Bit-identity contract: under ``jax_enable_x64`` (entered per call via
+``jax.experimental.enable_x64`` — the repo's global dtype default is
+untouched) on the CPU backend the batched engine reproduces the
+scalar engine's per-task digests and every cost roll-up exactly.
+Other backends run but carry no bit-level promise.
+
+Heavy imports (jax) are deferred until first use so ``import repro``
+stays light.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "MonteCarlo": ("repro.mc.montecarlo", "MonteCarlo"),
+    "MonteCarloResult": ("repro.mc.montecarlo", "MonteCarloResult"),
+    "run_scenarios": ("repro.mc.engine", "run_scenarios"),
+    "supported": ("repro.mc.dispatch", "supported"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.mc' has no attribute "
+                             f"{name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)

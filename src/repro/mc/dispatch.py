@@ -1,0 +1,91 @@
+"""Regime gate + transparent fallback for the batched MC engine.
+
+``supported(scenario)`` returns ``None`` when a scenario sits inside
+the regime the kernels reproduce bit-for-bit, else a short human
+reason.  Everything the gate refuses routes to the scalar engine —
+callers (``cluster.sweep --backend jax``, ``MonteCarlo``) partition
+their cells with this gate and never change results, only speed
+(DESIGN.md Sec. 16).
+
+The gate is deliberately conservative and STATIC: it looks only at
+the specs, never at run state, so a cell's route is decided before
+any work happens.  In-regime means:
+
+* single node (``FleetSpec.is_fleet`` false), no node_factory,
+* no container pool, no serving slots, no microvm/ghost models,
+* no chaos / admission / pre-warm resilience layers,
+* policy ``fifo`` | ``cfs`` | ``hybrid`` with default knobs (a
+  hybrid may override ``n_fifo`` / ``time_limit_ms`` via ``kw`` —
+  both are traced kernel inputs),
+* workload kinds ``azure``/``synthetic``/``tasks`` whose built task
+  list is canonical: tids equal list indices, arrivals
+  non-decreasing (the heap's (t, seq) arrival order), no aux tasks.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:
+    from ..scenario import Scenario
+
+SUPPORTED_POLICIES = ("fifo", "cfs", "hybrid")
+
+# Hybrid kwargs the kernel accepts as traced inputs; anything else in
+# PolicySpec.kw (adapters, custom latencies, interference) falls back.
+_HYBRID_KW = {"n_fifo", "time_limit_ms"}
+
+
+def supported(sc: "Scenario") -> Optional[str]:
+    """None if the batched engine reproduces ``sc`` bit-for-bit,
+    else the reason it must run on the scalar engine."""
+    fl, pol, res, wl = sc.fleet, sc.policy, sc.resilience, sc.workload
+    if fl.is_fleet:
+        return "fleet (dispatcher/multi-node) runs through ClusterSim"
+    if fl.node_factory is not None:
+        return "custom node_factory"
+    if fl.containers is not None:
+        return "container pool attached"
+    if pol.serving is not None:
+        return "serving slot scheduler"
+    if pol.name not in SUPPORTED_POLICIES:
+        return f"policy {pol.name!r} not batched"
+    if pol.microvm or pol.ghost_mode:
+        return "microvm/ghost system-effect model"
+    if pol.adapt_pct is not None or pol.rightsize:
+        return "adaptive time limit / rightsizer"
+    if pol.n_fifo is not None:
+        # The scalar single-node path reads n_fifo only from pol.kw
+        # (PolicySpec.n_fifo feeds the fleet/serving factories), so
+        # mirroring it here would be guesswork — fall back.
+        return "PolicySpec.n_fifo on the single-node path"
+    if pol.kw:
+        if pol.name != "hybrid" or not set(pol.kw) <= _HYBRID_KW:
+            return f"scheduler kwargs {sorted(pol.kw)} not batched"
+    if res.chaos is not None or res.admission is not None \
+            or res.prewarm is not None:
+        return "resilience layer (chaos/admission/prewarm)"
+    if wl.kind not in ("azure", "synthetic", "tasks"):
+        return f"workload kind {wl.kind!r} not batched"
+    C = fl.cores_per_node
+    if pol.name == "hybrid":
+        n_fifo = pol.kw.get("n_fifo", C // 2)
+        if not 1 <= n_fifo < C:
+            return "hybrid needs 1 <= n_fifo < n_cores"
+    return None
+
+
+def tasks_supported(tasks) -> Optional[str]:
+    """Canonical-stream check on a BUILT task list (dynamic half of
+    the gate — ``kind='tasks'`` lists are caller-shaped)."""
+    prev = float("-inf")
+    for i, t in enumerate(tasks):
+        if t.tid != i:
+            return "tids must equal list indices"
+        if t.arrival < prev:
+            return "arrivals must be non-decreasing"
+        prev = t.arrival
+        if t.aux_of is not None:
+            return "aux (microvm companion) tasks"
+        if t.remaining != t.service:
+            return "partially-run tasks"
+    return None

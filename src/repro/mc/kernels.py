@@ -1,0 +1,505 @@
+"""Batched Monte-Carlo kernels for the supported scheduling regime.
+
+One cell = one (policy, seed, load) trajectory of the single-node
+engine; the kernel below advances a WHOLE GRID of cells in a single
+compiled XLA program via ``jax.vmap`` (DESIGN.md Sec. 16).
+
+The kernel is a faithful re-expression of the scalar event loop
+(`core/events.py` + `core/policies.py` + `core/hybrid.py`) restricted
+to the regime the analytic fast-forwards already closed:
+
+* single node, no container pool, no interference, no util timers,
+* policies: ``fifo``, ``cfs``, ``hybrid`` with a STATIC time limit,
+* default Linux knobs (sched_latency 24 ms, min_granularity 3 ms,
+  ctx_switch 0.06 ms).
+
+Within that regime the event braid has exactly three interacting
+event classes, totally ordered by the scalar heap key ``(t, klass,
+tie)``: arrivals (klass 0, tid order), hybrid FIFO-core expiries
+(klass 2, cid tie-break — they touch shared state: the global queue,
+migration round-robin, CFS runqueues), and CFS-core expiries (klass 2,
+core-local).  CFS expiries before the next arrival/FIFO barrier are
+INDEPENDENT across cores, so the kernel advances every eligible CFS
+core in one vectorized step, and cycles lone-task cores (empty
+runqueue — the solo regime PR 3's fast-forward batches) in a cheap
+``[C]``-wide inner loop.  Barrier events (arrivals in tid order, the
+minimal FIFO expiry) are then re-serialized exactly as the heap
+would.
+
+Bit-identity contract: under ``jax_enable_x64`` on the CPU backend
+every float is computed by the SAME operation sequence as the scalar
+engine — the shared pure helpers of ``core/events.py``
+(`chunk_run_ms`, `chunk_end_ms`, `cfs_slice_ms`, `fifo_budget_ms`)
+re-bound to ``jnp.minimum``/``jnp.maximum`` — so per-task digests
+(completion, first_run, preemptions, ctx_switches, migrations) and
+every cost roll-up derived from them match the scalar engine
+bit-for-bit.  XLA's CPU backend does not reassociate or fuse these
+scalar chains (no FMA contraction across the explicit ``(t + ctx) +
+run`` ordering), which the golden equivalence battery pins.
+
+A plain-FIFO cell runs as the hybrid machinery with ``n_fifo == C``
+and an infinite budget: ``min(rem, inf) == rem`` and ``max(inf - 0.0,
+0.01) == inf`` are bitwise no-ops, completions always beat the
+(unreachable) migration branch, so the braid degenerates to FIFO's
+run-to-completion semantics with identical arithmetic.  A pure-CFS
+cell is ``n_fifo == 0``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.events import (_EPS, cfs_slice_ms, chunk_end_ms,
+                               chunk_run_ms, fifo_budget_ms)
+
+# Default Linux knobs of the supported regime (see module docstring);
+# the dispatch gate (repro.mc.dispatch) refuses cells that override
+# them, so baking them into the compiled program is safe.
+SCHED_LATENCY_MS = 24.0
+MIN_GRANULARITY_MS = 3.0
+CTX_SWITCH_MS = 0.06
+
+_INF = float("inf")
+_I32MAX = 2 ** 31 - 1
+
+# Safety valve: an upper bound on outer-loop iterations so a regime
+# bug hangs nothing — the engine checks the `ok` output and raises.
+# Every processed event makes >= min_granularity progress on some
+# task (or completes/queues one), so real cells sit far below this.
+_MAX_ITERS_PER_TASK = 1024
+
+
+def _sel_tree(pred, new, old):
+    """Per-cell select between two state pytrees (scalar bool pred)."""
+    return {k: jnp.where(pred, new[k], old[k]) for k in old}
+
+
+def make_cell_kernel(n_cores: int, n_slots: int):
+    """Build the single-cell simulator for a static shape bucket.
+
+    ``n_cores`` (C) and ``n_slots`` (N, padded task capacity) are
+    compile-time constants; everything per-cell (arrival/service
+    arrays, task count, FIFO split, migration budget) is traced, so
+    one compilation serves every cell of the bucket and ``jax.vmap``
+    batches them into a single program.
+    """
+    C, N = n_cores, n_slots
+    LAT, GRAN, CTX = SCHED_LATENCY_MS, MIN_GRANULARITY_MS, CTX_SWITCH_MS
+    # The solo regime picks with an empty runqueue: nr_running == 0
+    # after the pop, so the slice is the full target latency. Computed
+    # through the SAME shared helper the scalar engine uses.
+    SOLO_SLICE = cfs_slice_ms(0, LAT, GRAN)
+
+    cids = jnp.arange(C, dtype=jnp.int32)
+
+    def kernel(arrival, service, n_tasks, n_fifo, limit):
+        """Run one cell to completion.
+
+        arrival, service : f64[N]   (padded with +inf / 1.0)
+        n_tasks          : i32      live prefix length
+        n_fifo           : i32      C => plain FIFO, 0 => pure CFS
+        limit            : f64      FIFO budget (inf outside hybrid)
+        """
+        is_fifo = cids < n_fifo
+        n_cfs = C - n_fifo
+        budget = fifo_budget_ms(limit, 0.0, _max=jnp.maximum)
+
+        st = dict(
+            # per-task
+            rem=service,
+            vr=jnp.zeros(N),
+            seq=jnp.zeros(N, jnp.int32),
+            qcore=jnp.zeros(N, jnp.int32),
+            stat=jnp.zeros(N, jnp.int32),   # 0 unarrived, 1 fifo-q,
+                                            # 2 on-rq, 3 running, 4 done
+            fr=jnp.full(N, jnp.nan),
+            comp=jnp.full(N, jnp.nan),
+            npre=jnp.zeros(N, jnp.int32),
+            nctx=jnp.zeros(N, jnp.int32),
+            nmig=jnp.zeros(N, jnp.int32),
+            # per-core
+            cur=jnp.full(C, -1, jnp.int32),
+            end=jnp.full(C, _INF),
+            clen=jnp.zeros(C),
+            last=jnp.full(C, -1, jnp.int32),
+            minvr=jnp.zeros(C),
+            seqc=jnp.zeros(C, jnp.int32),
+            rqn=jnp.zeros(C, jnp.int32),
+            # scalars
+            ptr=jnp.int32(0),
+            rr=jnp.int32(0),
+            rrc=jnp.int32(0),
+            it=jnp.int32(0),
+        )
+
+        def t_arr(st):
+            p = st["ptr"]
+            return jnp.where(p < n_tasks, arrival[jnp.minimum(p, N - 1)],
+                             _INF)
+
+        def fifo_candidate(st):
+            """Minimal pending FIFO-group expiry: (time, cid, any)."""
+            busy = is_fifo & (st["cur"] >= 0)
+            e = jnp.where(busy, st["end"], _INF)
+            tmin = jnp.min(e)
+            fcid = jnp.argmax(busy & (e == tmin)).astype(jnp.int32)
+            return tmin, fcid, jnp.any(busy)
+
+        # -- shared pick machinery ------------------------------------
+        def cfs_pick_start(st, pickm, t_c, ctx_ref):
+            """Pop-and-start on every core where ``pickm`` (bool[C]).
+
+            ``t_c``   f64[C]: the instant each picking core picks at.
+            ``ctx_ref`` i32[C]: the "last_task" each core compares the
+            popped task against (ctx charge iff different).
+            Mirrors pick_next's rq_pop + slice_for + _start_chunk.
+            """
+            stat, qcore, vr, seq = st["stat"], st["qcore"], st["vr"], st["seq"]
+            member = (stat[None, :] == 2) & (qcore[None, :] == cids[:, None])
+            vkey = jnp.where(member, vr[None, :], _INF)
+            vmin = jnp.min(vkey, axis=1)
+            tie = member & (vkey == vmin[:, None])
+            skey = jnp.where(tie, seq[None, :], _I32MAX)
+            smin = jnp.min(skey, axis=1)
+            ntid = jnp.argmax(tie & (seq[None, :] == smin[:, None]),
+                              axis=1).astype(jnp.int32)
+            pickm = pickm & jnp.any(member, axis=1)
+
+            drop = jnp.where(pickm, ntid, N)
+            # rq_pop: min_vruntime ratchets to the popped key.
+            minvr = jnp.where(pickm, jnp.maximum(st["minvr"], vmin),
+                              st["minvr"])
+            rqn = st["rqn"] - pickm.astype(jnp.int32)
+            stat = stat.at[drop].set(3, mode="drop")
+            # slice_for reads nr_running AFTER the pop, core.task still
+            # unset: nr == len(rq) == rqn.
+            slc = cfs_slice_ms(rqn, LAT, GRAN, _max=jnp.maximum)
+            ctx = jnp.where(ctx_ref == ntid, 0.0, CTX)
+            gat = jnp.where(pickm, ntid, 0)
+            fr_v = st["fr"][gat]
+            fr = st["fr"].at[
+                jnp.where(pickm & jnp.isnan(fr_v), ntid, N)
+            ].set(t_c, mode="drop")
+            nctx = st["nctx"].at[
+                jnp.where(pickm & (ctx > 0.0), ntid, N)
+            ].add(1, mode="drop")
+            run = chunk_run_ms(st["rem"][gat], slc,
+                               _min=jnp.minimum, _max=jnp.maximum)
+            nend = chunk_end_ms(t_c, ctx, run)
+            return dict(st, stat=stat, fr=fr, nctx=nctx, minvr=minvr,
+                        rqn=rqn,
+                        cur=jnp.where(pickm, ntid, st["cur"]),
+                        end=jnp.where(pickm, nend, st["end"]),
+                        clen=jnp.where(pickm, run, st["clen"])), pickm
+
+        # -- step 1: solo fast path -----------------------------------
+        # A CFS core running its only task (empty rq) cycles
+        # slice-expiry -> push -> pop(self) -> start with no shared
+        # reads: batch those rounds in a [C]-wide inner loop, bounded
+        # by the SAME barrier the eligibility test uses.
+        def solo_loop(st, ta, tf, fcid):
+            def before_barrier(e):
+                return (e < ta) & ((e < tf) | ((e == tf) & (cids < fcid)))
+
+            cur, rqn = st["cur"], st["rqn"]
+            act0 = (~is_fifo) & (cur >= 0) & (rqn == 0) & \
+                before_barrier(st["end"])
+            tid = jnp.where(cur >= 0, cur, 0)
+            lane0 = dict(
+                act=act0, any=act0,
+                t=st["end"], L=st["clen"],
+                r=st["rem"][tid], v=st["vr"][tid],
+                mv=st["minvr"],
+                np=jnp.zeros(C, jnp.int32), sq=jnp.zeros(C, jnp.int32),
+                done=jnp.zeros(C, bool), ct=jnp.zeros(C),
+            )
+
+            def body(ln):
+                r2 = ln["r"] - ln["L"]
+                d = r2 <= _EPS
+                v2 = ln["v"] + ln["L"]
+                mv2 = jnp.maximum(ln["mv"], v2)
+                run = chunk_run_ms(r2, SOLO_SLICE,
+                                   _min=jnp.minimum, _max=jnp.maximum)
+                # ctx == 0.0: the core keeps its own task.
+                t2 = chunk_end_ms(ln["t"], 0.0, run)
+                cont = ln["act"] & ~d & before_barrier(t2)
+                a = ln["act"]
+                nd = a & d
+                adv = a & ~d
+                return dict(
+                    act=cont, any=ln["any"] | a,
+                    t=jnp.where(adv, t2, ln["t"]),
+                    L=jnp.where(adv, run, ln["L"]),
+                    r=jnp.where(a, jnp.where(d, 0.0, r2), ln["r"]),
+                    v=jnp.where(adv, v2, ln["v"]),
+                    mv=jnp.where(adv, mv2, ln["mv"]),
+                    np=ln["np"] + adv.astype(jnp.int32),
+                    sq=ln["sq"] + adv.astype(jnp.int32),
+                    done=ln["done"] | nd,
+                    ct=jnp.where(nd, ln["t"], ln["ct"]),
+                )
+
+            ln = lax.while_loop(lambda ln: jnp.any(ln["act"]), body, lane0)
+
+            touched = ln["any"]
+            sidx = jnp.where(touched, tid, N)
+            didx = jnp.where(ln["done"], tid, N)
+            return dict(
+                st,
+                rem=st["rem"].at[sidx].set(ln["r"], mode="drop"),
+                vr=st["vr"].at[sidx].set(ln["v"], mode="drop"),
+                npre=st["npre"].at[sidx].add(ln["np"], mode="drop"),
+                comp=st["comp"].at[didx].set(ln["ct"], mode="drop"),
+                stat=st["stat"].at[didx].set(4, mode="drop"),
+                minvr=jnp.where(touched, ln["mv"], st["minvr"]),
+                seqc=st["seqc"] + ln["sq"],
+                last=jnp.where(touched, tid, st["last"]),
+                cur=jnp.where(ln["done"], -1, st["cur"]),
+                end=jnp.where(ln["done"], _INF,
+                              jnp.where(touched, ln["t"], st["end"])),
+                clen=jnp.where(ln["done"], 0.0,
+                               jnp.where(touched, ln["L"], st["clen"])),
+            )
+
+        # -- step 2: vectorized CFS expiries --------------------------
+        def cfs_advance(st, elig):
+            """Advance every eligible CFS core one event: expire the
+            in-flight chunk (complete or vruntime-charge + rq_push),
+            then pick-and-start from the core's own runqueue — the
+            exact hook order of `_run_core`."""
+            cur = st["cur"]
+            tid = jnp.where(elig, cur, 0)
+            sidx = jnp.where(elig, cur, N)
+            t_c, L = st["end"], st["clen"]
+            rem2 = st["rem"][tid] - L
+            d = rem2 <= _EPS
+            pb = elig & ~d                      # pushback (chunk limit)
+            de = elig & d                       # completion
+            pidx = jnp.where(pb, cur, N)
+            vr2 = st["vr"][tid] + L
+            st = dict(
+                st,
+                rem=st["rem"].at[sidx].set(jnp.where(d, 0.0, rem2),
+                                           mode="drop"),
+                comp=st["comp"].at[jnp.where(de, cur, N)].set(t_c,
+                                                              mode="drop"),
+                vr=st["vr"].at[pidx].set(vr2, mode="drop"),
+                npre=st["npre"].at[pidx].add(1, mode="drop"),
+                seq=st["seq"].at[pidx].set(st["seqc"], mode="drop"),
+                qcore=st["qcore"].at[pidx].set(cids, mode="drop"),
+                stat=st["stat"].at[sidx].set(jnp.where(d, 4, 2),
+                                             mode="drop"),
+                seqc=st["seqc"] + pb.astype(jnp.int32),
+                rqn=st["rqn"] + pb.astype(jnp.int32),
+                last=jnp.where(elig, cur, st["last"]),
+                cur=jnp.where(elig, -1, cur),
+                # the in-flight record is consumed; an empty-rq pick
+                # leaves the core idle (restored below if it picks).
+                end=jnp.where(elig, _INF, st["end"]),
+                clen=jnp.where(elig, 0.0, st["clen"]),
+            )
+            picked, _ = cfs_pick_start(st, elig, t_c, st["last"])
+            return picked
+
+        # -- step 3: the minimal FIFO-group expiry --------------------
+        def fifo_advance(st, fcid, t_f):
+            c = fcid
+            cur = st["cur"][c]
+            tid = jnp.where(cur >= 0, cur, 0)
+            L = st["clen"][c]
+            rem2 = st["rem"][tid] - L
+            d = rem2 <= _EPS
+            st = dict(
+                st,
+                rem=st["rem"].at[tid].set(jnp.where(d, 0.0, rem2)),
+                comp=jnp.where(d, st["comp"].at[tid].set(t_f), st["comp"]),
+                stat=jnp.where(d, st["stat"].at[tid].set(4), st["stat"]),
+                last=st["last"].at[c].set(cur),
+                cur=st["cur"].at[c].set(-1),
+            )
+            # -- budget expiry: migrate to a CFS core, round robin ----
+            mig = ~d
+            tgt = n_fifo + st["rrc"] % jnp.maximum(n_cfs, 1)
+            midx = jnp.where(mig, tid, N)
+            vrm = jnp.maximum(st["vr"][tid], st["minvr"][tgt])
+            st_m = dict(
+                st,
+                npre=st["npre"].at[midx].add(1, mode="drop"),
+                nmig=st["nmig"].at[midx].add(1, mode="drop"),
+                rrc=st["rrc"] + mig.astype(jnp.int32),
+                vr=st["vr"].at[midx].set(vrm, mode="drop"),
+                seq=st["seq"].at[midx].set(st["seqc"][tgt], mode="drop"),
+                qcore=st["qcore"].at[midx].set(tgt, mode="drop"),
+                stat=st["stat"].at[midx].set(2, mode="drop"),
+            )
+            st_m["seqc"] = st_m["seqc"].at[jnp.where(mig, tgt, C)].add(
+                1, mode="drop")
+            st_m["rqn"] = st_m["rqn"].at[jnp.where(mig, tgt, C)].add(
+                1, mode="drop")
+            # kick(target): pick iff the target core is idle.
+            kick = mig & (st_m["cur"][tgt] < 0)
+            picked, _ = cfs_pick_start(
+                st_m, (cids == tgt) & kick, jnp.full(C, t_f),
+                st_m["last"])
+            st = _sel_tree(mig, picked, st)
+
+            # -- then the FIFO core itself picks from the global queue
+            qm = st["stat"] == 1
+            anyq = jnp.any(qm)
+            ntid = jnp.argmax(qm).astype(jnp.int32)   # min tid: queue
+            # order == arrival order == tid order (fresh tasks only).
+            ctx = jnp.where(st["last"][c] == ntid, 0.0, CTX)
+            fr_v = st["fr"][ntid]
+            run = chunk_run_ms(st["rem"][ntid], budget,
+                               _min=jnp.minimum, _max=jnp.maximum)
+            nend = chunk_end_ms(t_f, ctx, run)
+            started = dict(
+                st,
+                stat=st["stat"].at[ntid].set(3),
+                fr=jnp.where(jnp.isnan(fr_v), st["fr"].at[ntid].set(t_f),
+                             st["fr"]),
+                nctx=jnp.where(ctx > 0.0, st["nctx"].at[ntid].add(1),
+                               st["nctx"]),
+                cur=st["cur"].at[c].set(ntid),
+                end=st["end"].at[c].set(nend),
+                clen=st["clen"].at[c].set(run),
+            )
+            return _sel_tree(anyq, started, st)
+
+        # -- step 4: one arrival --------------------------------------
+        def arrival_step(st, ta):
+            tid = jnp.minimum(st["ptr"], N - 1)
+            st = dict(st, ptr=st["ptr"] + 1)
+
+            # hybrid / plain-fifo routing: global FIFO queue + first
+            # idle FIFO core (idle_core scans in cid order).
+            st_q = dict(st, stat=st["stat"].at[tid].set(1))
+            idle = is_fifo & (st_q["cur"] < 0)
+            anyi = jnp.any(idle)
+            c = jnp.argmax(idle).astype(jnp.int32)
+            qm = st_q["stat"] == 1
+            ntid = jnp.argmax(qm).astype(jnp.int32)
+            ctx = jnp.where(st_q["last"][c] == ntid, 0.0, CTX)
+            fr_v = st_q["fr"][ntid]
+            run = chunk_run_ms(st_q["rem"][ntid], budget,
+                               _min=jnp.minimum, _max=jnp.maximum)
+            nend = chunk_end_ms(ta, ctx, run)
+            st_d = dict(
+                st_q,
+                stat=st_q["stat"].at[ntid].set(3),
+                fr=jnp.where(jnp.isnan(fr_v),
+                             st_q["fr"].at[ntid].set(ta), st_q["fr"]),
+                nctx=jnp.where(ctx > 0.0, st_q["nctx"].at[ntid].add(1),
+                               st_q["nctx"]),
+                cur=st_q["cur"].at[c].set(ntid),
+                end=st_q["end"].at[c].set(nend),
+                clen=st_q["clen"].at[c].set(run),
+            )
+            st_f = _sel_tree(anyi, st_d, st_q)
+
+            # pure-CFS routing: least-loaded with rotating scan start,
+            # early-exit on idle == lexicographic (nr, rotation) argmin.
+            nr = st["rqn"] + (st["cur"] >= 0).astype(jnp.int32)
+            rot = (cids - st["rr"]) % C
+            nmin = jnp.min(nr)
+            cand = nr == nmin
+            rmin = jnp.min(jnp.where(cand, rot, C))
+            core = jnp.argmax(cand & (rot == rmin)).astype(jnp.int32)
+            vrp = jnp.maximum(st["vr"][tid], st["minvr"][core])
+            st_c = dict(
+                st,
+                rr=(st["rr"] + 1) % C,
+                vr=st["vr"].at[tid].set(vrp),
+                seq=st["seq"].at[tid].set(st["seqc"][core]),
+                qcore=st["qcore"].at[tid].set(core),
+                stat=st["stat"].at[tid].set(2),
+                seqc=st["seqc"].at[core].add(1),
+                rqn=st["rqn"].at[core].add(1),
+            )
+            kick = st_c["cur"][core] < 0
+            picked, _ = cfs_pick_start(
+                st_c, (cids == core) & kick, jnp.full(C, ta),
+                st_c["last"])
+            st_c = _sel_tree(kick, picked, st_c)
+
+            return _sel_tree(n_fifo > 0, st_f, st_c)
+
+        # -- outer loop ------------------------------------------------
+        max_it = jnp.int32(_MAX_ITERS_PER_TASK) * \
+            jnp.maximum(n_tasks, 1) + 64
+
+        def cond(st):
+            live = (st["ptr"] < n_tasks) | jnp.any(st["cur"] >= 0)
+            return live & (st["it"] < max_it)
+
+        def body(st):
+            st = dict(st, it=st["it"] + 1)
+            ta = t_arr(st)
+            tf, fcid, _ = fifo_candidate(st)
+            st = solo_loop(st, ta, tf, fcid)
+
+            tf, fcid, anyf = fifo_candidate(st)
+            e = st["end"]
+            elig = (~is_fifo) & (st["cur"] >= 0) & (e < ta) & \
+                ((e < tf) | ((e == tf) & (cids < fcid)))
+            any_cfs = jnp.any(elig)
+            do_f = anyf & ~any_cfs & (tf < ta)
+            do_a = ~any_cfs & ~do_f & (st["ptr"] < n_tasks)
+
+            st_cfs = cfs_advance(st, elig)
+            st_fifo = fifo_advance(st, fcid, tf)
+            st_arr = arrival_step(st, ta)
+            return _sel_tree(
+                any_cfs, st_cfs,
+                _sel_tree(do_f, st_fifo, _sel_tree(do_a, st_arr, st)))
+
+        out = lax.while_loop(cond, body, st)
+        live = jnp.arange(N) < n_tasks
+        ok = jnp.all(jnp.where(live, out["stat"] == 4, True)) & \
+            (out["it"] < max_it)
+        return dict(completion=out["comp"], first_run=out["fr"],
+                    preemptions=out["npre"], ctx_switches=out["nctx"],
+                    migrations=out["nmig"], ok=ok, n_iters=out["it"])
+
+    return kernel
+
+
+# One compiled program per (C, N) shape bucket; each call batches an
+# arbitrary number of cells along the leading axis.
+_GRID_CACHE: dict = {}
+
+
+def grid_kernel(n_cores: int, n_slots: int):
+    key = (n_cores, n_slots)
+    fn = _GRID_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(jax.vmap(make_cell_kernel(n_cores, n_slots)))
+        _GRID_CACHE[key] = fn
+    return fn
+
+
+def run_grid(arrival, service, n_tasks, n_fifo, limit, *, n_cores: int):
+    """Advance a whole grid of cells in one device program.
+
+    arrival, service : f64[B, N]
+    n_tasks, n_fifo  : i32[B]
+    limit            : f64[B]
+
+    Returns a dict of [B, N] observable arrays (see ``make_cell_kernel``)
+    as NumPy, computed under x64 on whatever backend JAX selected.
+    """
+    from jax.experimental import enable_x64
+
+    n_slots = arrival.shape[1]
+    with enable_x64():
+        fn = grid_kernel(n_cores, n_slots)
+        out = fn(jnp.asarray(arrival, jnp.float64),
+                 jnp.asarray(service, jnp.float64),
+                 jnp.asarray(n_tasks, jnp.int32),
+                 jnp.asarray(n_fifo, jnp.int32),
+                 jnp.asarray(limit, jnp.float64))
+        return {k: jax.device_get(v) for k, v in out.items()}

@@ -1,0 +1,128 @@
+"""``MonteCarlo``: one Scenario, a grid of (seeds x loads), one launch.
+
+The Scenario-level front door of the batched engine (DESIGN.md
+Sec. 16): take a base scenario, cross it with trace seeds and load
+scales, advance every resulting cell in a single vmapped device
+program, and return per-cell summary rows ready for the sweep/bench/
+gate toolchain.  Cells the batched regime cannot reproduce bit-for-bit
+fall back to the scalar engine transparently (``meta["fallback"]``
+counts them).
+
+    mc = MonteCarlo(scenario, seeds=range(32), loads=(0.5, 1.0, 2.0))
+    rows = mc.run().rows          # 96 cells, one compiled program
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import TYPE_CHECKING, Optional, Sequence
+
+from ..traces.azure import TraceSpec
+from .dispatch import supported, tasks_supported
+
+if TYPE_CHECKING:
+    from ..scenario import Scenario, ScenarioResult
+
+
+@dataclass
+class MonteCarloResult:
+    results: list["ScenarioResult"]
+    seeds: tuple
+    loads: tuple
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def rows(self) -> list[dict]:
+        out = []
+        k = 0
+        for seed in self.seeds:
+            for load in self.loads:
+                r = self.results[k]
+                row = dict(seed=seed, load_scale=load,
+                           backend=self.meta["backends"][k])
+                row.update(r.summary())
+                out.append(row)
+                k += 1
+        return out
+
+
+@dataclass
+class MonteCarlo:
+    """Expand ``scenario`` over ``seeds`` x ``loads`` and run the grid.
+
+    ``seeds`` re-seed the workload's :class:`TraceSpec` (the workload
+    must be trace-driven — ``azure``/``synthetic``); ``loads``
+    override ``WorkloadSpec.load_scale``.  ``backend="jax"`` uses the
+    batched engine wherever :func:`repro.mc.dispatch.supported`
+    allows and the scalar engine elsewhere; ``backend="python"``
+    forces the scalar engine everywhere (the equivalence baseline).
+    """
+
+    scenario: "Scenario"
+    seeds: Sequence[int] = (0,)
+    loads: Sequence[float] = (1.0,)
+    backend: str = "jax"
+
+    def cells(self) -> list["Scenario"]:
+        wl = self.scenario.workload
+        if wl.kind not in ("azure", "synthetic"):
+            raise ValueError("MonteCarlo needs a trace-driven workload "
+                             "(kind='azure') to re-seed")
+        base_trace = wl.trace or TraceSpec()
+        out = []
+        for seed in self.seeds:
+            trace = replace(base_trace, seed=seed)
+            for load in self.loads:
+                out.append(replace(
+                    self.scenario,
+                    workload=replace(wl, trace=trace, load_scale=load)))
+        return out
+
+    def run(self) -> MonteCarloResult:
+        from ..scenario import run as run_scalar
+        from .engine import run_scenarios
+
+        cells = self.cells()
+        backends = []
+        use_jax = []
+        if self.backend == "jax":
+            for sc in cells:
+                ok = supported(sc) is None
+                use_jax.append(ok)
+                backends.append("jax" if ok else "python")
+        elif self.backend == "python":
+            use_jax = [False] * len(cells)
+            backends = ["python"] * len(cells)
+        else:
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+        results: list[Optional["ScenarioResult"]] = [None] * len(cells)
+        jax_idx = [k for k, u in enumerate(use_jax) if u]
+        if jax_idx:
+            # Build workloads once per (seed, load): sharing the trace
+            # generation across cells is fine — build() is
+            # deterministic per spec and each cell gets its own list.
+            prebuilt = [cells[k].workload.build() for k in jax_idx]
+            # A caller-shaped task stream can still force a fallback.
+            keep = []
+            for j, k in enumerate(jax_idx):
+                if tasks_supported(prebuilt[j][0]) is None:
+                    keep.append(j)
+                else:
+                    use_jax[k] = False
+                    backends[k] = "python"
+            jax_idx = [jax_idx[j] for j in keep]
+            prebuilt = [prebuilt[j] for j in keep]
+        if jax_idx:
+            for k, res in zip(jax_idx,
+                              run_scenarios([cells[k] for k in jax_idx],
+                                            prebuilt=prebuilt)):
+                results[k] = res
+        for k, sc in enumerate(cells):
+            if results[k] is None:
+                results[k] = run_scalar(sc)
+
+        return MonteCarloResult(
+            results=results, seeds=tuple(self.seeds),
+            loads=tuple(self.loads),
+            meta={"backends": backends,
+                  "fallback": sum(b == "python" for b in backends)})

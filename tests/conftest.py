@@ -1,8 +1,41 @@
+import json
+import os
+
 import numpy as np
 import pytest
 
 from repro.core.events import Task
 from repro.traces import TraceSpec, generate_workload
+
+# Per-module wall-clock accounting, written as a benchmark-style
+# artifact when REPRO_TEST_TIMINGS names a path — the nightly slow
+# tier exports its timings into the trend dashboard
+# (benchmarks.trend_report kind "test_timings"), so a test module
+# quietly doubling its runtime shows up as a trend regression instead
+# of an unexplained nightly slowdown.
+_TIMINGS: dict = {}
+
+
+def pytest_runtest_logreport(report):
+    if not os.environ.get("REPRO_TEST_TIMINGS") or report.when != "call":
+        return
+    module = report.nodeid.split("::")[0]
+    tier = "slow" if "slow" in report.keywords else "fast"
+    acc = _TIMINGS.setdefault((module, tier), [0, 0.0])
+    acc[0] += 1
+    acc[1] += report.duration
+
+
+def pytest_sessionfinish(session, exitstatus):
+    path = os.environ.get("REPRO_TEST_TIMINGS")
+    if not path or not _TIMINGS:
+        return
+    rows = [{"module": module, "tier": tier, "n_tests": n,
+             "wall_s": round(wall, 3)}
+            for (module, tier), (n, wall) in sorted(_TIMINGS.items())]
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
 
 
 def pytest_addoption(parser):

@@ -529,3 +529,129 @@ def test_serving_fleet_pools_get_distinct_seed_streams():
     finally:
         ContainerPool.__init__ = orig
     assert sorted(seen) == [7, 8, 9]
+
+
+# -- per-function concurrency limits -------------------------------------------
+
+def test_concurrency_cap_queues_excess_and_grants_fifo():
+    p = _pool(capacity_mb=4096, keepalive_ms=1e9, max_concurrency=2)
+    assert p.request_slot(7, 256, 0.0, tid=1) == "cold"
+    assert p.request_slot(7, 256, 1.0, tid=2) == "cold"
+    assert p.request_slot(7, 256, 2.0, tid=3) == "queued"
+    assert p.request_slot(7, 256, 3.0, tid=4) == "queued"
+    assert p.running_counts() == {7: 2}
+    assert p.queue_depths() == {7: 2}
+    p.check_invariants()
+    # A completion frees one slot; the HEAD waiter is admitted warm
+    # (the finishing invocation just returned its sandbox).
+    assert p.release_slot(7, 256, 10.0) == [(3, "warm")]
+    assert p.release_slot(7, 256, 11.0) == [(4, "warm")]
+    assert p.release_slot(7, 256, 12.0) == []
+    assert p.release_slot(7, 256, 13.0) == []
+    assert p.running_counts() == {} and p.queue_depths() == {}
+    s = p.stats()
+    assert s["queued_concurrency"] == 2
+    assert s["granted_from_queue"] == 2
+    assert s["queue_depth"] == 0
+    p.check_invariants()
+
+
+def test_concurrency_cap_is_per_function():
+    p = _pool(keepalive_ms=1e9, max_concurrency=1)
+    assert p.request_slot(1, 128, 0.0, tid=0) == "cold"
+    assert p.request_slot(2, 128, 0.0, tid=1) == "cold"  # other func free
+    assert p.request_slot(1, 128, 0.0, tid=2) == "queued"
+    assert p.running_counts() == {1: 1, 2: 1}
+    assert p.queue_depths() == {1: 1}
+
+
+def test_no_cap_never_queues():
+    p = _pool(keepalive_ms=1e9)  # max_concurrency=None
+    for tid in range(10):
+        assert p.request_slot(4, 128, float(tid), tid=tid) != "queued"
+    assert p.running_counts() == {4: 10}
+    assert p.release_slot(4, 128, 20.0) == []
+    p.check_invariants()
+
+
+def test_release_slot_crash_path_and_mismatched_release():
+    p = _pool(keepalive_ms=1e9, max_concurrency=1)
+    p.request_slot(3, 256, 0.0, tid=0)
+    assert p.request_slot(3, 256, 1.0, tid=1) == "queued"
+    # keep_warm=False models a crashed/decommissioned sandbox: the slot
+    # frees (the waiter runs) but nothing returns to the warm set.
+    assert p.release_slot(3, 256, 5.0, keep_warm=False) == [(1, "cold")]
+    assert not p.has_warm(3, 5.0)
+    p.release_slot(3, 256, 6.0)
+    with pytest.raises(ValueError, match="without a matching"):
+        p.release_slot(3, 256, 7.0)
+    p.check_invariants()
+
+
+def test_max_concurrency_threads_through_spec():
+    from repro.core.containers import ContainerSpec, as_container_config
+    assert ContainerSpec().to_config().max_concurrency is None
+    assert ContainerSpec(max_concurrency=3).to_config().max_concurrency == 3
+    assert ContainerSpec.from_legacy(
+        ContainerConfig(max_concurrency=2)).max_concurrency == 2
+    assert as_container_config(
+        {"max_concurrency": 4}).max_concurrency == 4
+
+
+def test_concurrency_slots_property():
+    """Random dispatch/complete interleavings: the cap is never
+    exceeded, waiters exist only while the function is saturated,
+    grants are FIFO, with a fixed per-function memory size warm+running
+    sandboxes stay within the cap, and the ledgers reconcile."""
+    pytest.importorskip(
+        "hypothesis", reason="install the [test] extra for property tests")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(
+        st.tuples(st.floats(0.0, 2_000.0), st.integers(0, 3),
+                  st.booleans()),  # True = dispatch, False = complete
+        min_size=1, max_size=80)
+
+    @settings(max_examples=40, deadline=None)
+    @given(ops, st.integers(1, 3), st.integers(0, 3))
+    def check(seq, cap, seed):
+        mem = {fid: 128.0 * (fid + 1) for fid in range(4)}
+        p = ContainerPool(ContainerConfig(capacity_mb=1e6,
+                                          keepalive_ms=1e9,
+                                          max_concurrency=cap), seed=seed)
+        running = {f: [] for f in range(4)}
+        queued = {f: [] for f in range(4)}
+        now, tid, n_queued, n_granted = 0.0, 0, 0, 0
+        for dt, fid, is_dispatch in seq:
+            now += dt
+            if is_dispatch:
+                r = p.request_slot(fid, mem[fid], now, tid=tid)
+                if r == "queued":
+                    queued[fid].append(tid)
+                    n_queued += 1
+                else:
+                    assert r in ("warm", "cold")
+                    running[fid].append(tid)
+                tid += 1
+            elif running[fid]:
+                running[fid].pop(0)
+                for gtid, how in p.release_slot(fid, mem[fid], now):
+                    assert gtid == queued[fid].pop(0)  # FIFO grants
+                    assert how in ("warm", "cold")
+                    running[fid].append(gtid)
+                    n_granted += 1
+            p.check_invariants()
+            counts, depths = p.running_counts(), p.queue_depths()
+            live, _ = p.live_view(now)
+            for f in range(4):
+                assert counts.get(f, 0) == len(running[f]) <= cap
+                assert depths.get(f, 0) == len(queued[f])
+                assert live.get(f, 0) + len(running[f]) <= cap
+                if queued[f]:  # never queue while a slot is free
+                    assert len(running[f]) == cap
+        s = p.stats()
+        assert s["queued_concurrency"] == n_queued
+        assert s["granted_from_queue"] == n_granted
+        assert s["queue_depth"] == sum(len(q) for q in queued.values())
+
+    check()

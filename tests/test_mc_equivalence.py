@@ -1,0 +1,246 @@
+"""Batched Monte-Carlo engine vs the scalar engine (DESIGN.md Sec. 16).
+
+The contract under test: for every in-regime cell, ``repro.mc`` must
+reproduce the scalar engine's per-task observables and summary
+roll-ups BIT-FOR-BIT (x64 CPU), and everything out of regime must be
+refused by the static gate — never silently approximated.
+
+Fast tier: the gate itself and the python-backend front door (no JAX).
+Slow tier (``--slow``): compiled equivalence — smoke trace, golden
+battery across seeds x policies, sweep-backend parity, and a
+hypothesis sweep over randomized small task grids.
+"""
+from dataclasses import replace
+
+import pytest
+
+import repro
+from conftest import mk_tasks
+from repro import FleetSpec, PolicySpec, Scenario, WorkloadSpec
+from repro.mc import MonteCarlo, supported
+from repro.mc.dispatch import tasks_supported
+from repro.mc.engine import _bucket, cell_params
+from repro.traces import TraceSpec
+
+SMOKE_TRACE = TraceSpec(minutes=1, invocations_per_min=60.0,
+                        n_functions=10, seed=0)
+
+
+def _scenario(policy, n_cores=4, trace=SMOKE_TRACE, **kw):
+    return Scenario(
+        workload=WorkloadSpec(kind="azure", trace=trace),
+        fleet=FleetSpec(cores_per_node=n_cores),
+        policy=PolicySpec(name=policy, kw=kw))
+
+
+def digest(res):
+    """Exact per-task observable tuple; repr() so two floats compare
+    bit-for-bit, not approximately."""
+    return sorted((t.tid, repr(t.completion), t.preemptions,
+                   t.ctx_switches, repr(t.first_run), t.migrations)
+                  for t in res.raw.tasks)
+
+
+def assert_bit_identical(sc):
+    from repro.mc.engine import run_scenarios
+    scalar = repro.run(sc)
+    batched = run_scenarios([sc])[0]
+    assert digest(batched) == digest(scalar)
+    assert batched.summary() == scalar.summary()
+
+
+# -- fast tier: the static regime gate -----------------------------------------
+
+def test_gate_accepts_the_batched_regime():
+    for policy in ("fifo", "cfs", "hybrid"):
+        assert supported(_scenario(policy)) is None
+    assert supported(_scenario("hybrid", n_fifo=1,
+                               time_limit_ms=500.0)) is None
+
+
+@pytest.mark.parametrize("sc, why", [
+    (replace(_scenario("cfs"), fleet=FleetSpec(n_nodes=2,
+                                               cores_per_node=4,
+                                               dispatcher="least_loaded")),
+     "fleet"),
+    (replace(_scenario("cfs"),
+             fleet=FleetSpec(cores_per_node=4, containers="fixed")),
+     "container"),
+    (_scenario("fifo_quantum"), "not batched"),
+    (replace(_scenario("hybrid"),
+             policy=PolicySpec(name="hybrid", microvm=True)), "microvm"),
+    (replace(_scenario("hybrid"),
+             policy=PolicySpec(name="hybrid", adapt_pct=95.0)),
+     "adaptive"),
+    (replace(_scenario("hybrid"),
+             policy=PolicySpec(name="hybrid", n_fifo=2)),
+     "PolicySpec.n_fifo"),
+    (_scenario("cfs", sched_latency_ms=10.0), "kwargs"),
+    (_scenario("hybrid", n_fifo=0), "1 <= n_fifo"),
+    (_scenario("hybrid", n_fifo=4), "1 <= n_fifo"),
+])
+def test_gate_refuses_out_of_regime(sc, why):
+    reason = supported(sc)
+    assert reason is not None and why in reason
+
+
+def test_gate_refuses_noncanonical_task_streams():
+    ok = mk_tasks([(0, 100), (50, 100)])
+    assert tasks_supported(ok) is None
+    assert "non-decreasing" in tasks_supported(
+        mk_tasks([(50, 100), (0, 100)]))
+    shifted = mk_tasks([(0, 100)])
+    shifted[0].tid = 7
+    assert "indices" in tasks_supported(shifted)
+    ran = mk_tasks([(0, 100)])
+    ran[0].remaining = 40.0
+    assert "partially-run" in tasks_supported(ran)
+
+
+def test_cell_params_and_bucket():
+    C = 8
+    assert cell_params(_scenario("fifo", n_cores=C)) == (C, float("inf"))
+    assert cell_params(_scenario("cfs", n_cores=C)) == (0, float("inf"))
+    assert cell_params(_scenario("hybrid", n_cores=C)) == (4, 1633.0)
+    assert cell_params(_scenario("hybrid", n_cores=C, n_fifo=3,
+                                 time_limit_ms=250.0)) == (3, 250.0)
+    assert _bucket(1) == 64 and _bucket(64) == 64
+    assert _bucket(65) == 128 and _bucket(94) == 128
+
+
+# -- fast tier: the MonteCarlo front door (scalar backend, no JAX) -------------
+
+def test_montecarlo_cells_cross_seeds_and_loads():
+    mc = MonteCarlo(_scenario("hybrid"), seeds=(3, 4), loads=(0.5, 2.0))
+    cells = mc.cells()
+    assert [(c.workload.trace.seed, c.workload.load_scale)
+            for c in cells] == [(3, 0.5), (3, 2.0), (4, 0.5), (4, 2.0)]
+    assert all(c.policy == mc.scenario.policy for c in cells)
+
+
+def test_montecarlo_python_backend_rows():
+    mc = MonteCarlo(_scenario("fifo"), seeds=(0,), loads=(1.0, 2.0),
+                    backend="python")
+    out = mc.run()
+    assert out.meta["backends"] == ["python", "python"]
+    rows = out.rows
+    assert [r["load_scale"] for r in rows] == [1.0, 2.0]
+    assert all(r["backend"] == "python" and r["n"] > 0 for r in rows)
+    # Heavier load must not lose work, only compress arrivals.
+    assert rows[0]["n"] == rows[1]["n"]
+
+
+def test_montecarlo_requires_trace_driven_workload():
+    sc = Scenario(workload=WorkloadSpec(kind="tasks",
+                                        tasks=mk_tasks([(0, 100)])),
+                  fleet=FleetSpec(cores_per_node=2))
+    with pytest.raises(ValueError, match="trace-driven"):
+        MonteCarlo(sc).cells()
+
+
+def test_run_scenarios_refuses_out_of_regime():
+    from repro.mc.engine import run_scenarios
+    sc = replace(_scenario("cfs"),
+                 fleet=FleetSpec(cores_per_node=4, containers="fixed"))
+    with pytest.raises(ValueError, match="outside the batched regime"):
+        run_scenarios([sc])
+
+
+# -- slow tier: compiled bit-identity ------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["fifo", "cfs", "hybrid"])
+def test_smoke_equivalence(policy):
+    assert_bit_identical(_scenario(policy))
+
+
+@pytest.mark.slow
+def test_hybrid_knobs_equivalence():
+    assert_bit_identical(_scenario("hybrid", n_fifo=1))
+    assert_bit_identical(_scenario("hybrid", n_fifo=3,
+                                   time_limit_ms=400.0))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("policy", ["fifo", "cfs", "hybrid"])
+def test_golden_battery(policy, seed):
+    """The issue's acceptance battery: denser trace, 8 cores, three
+    seeds x three policies, every observable bit-identical."""
+    trace = TraceSpec(minutes=1, invocations_per_min=300.0,
+                      n_functions=25, seed=seed)
+    assert_bit_identical(_scenario(policy, n_cores=8, trace=trace))
+
+
+@pytest.mark.slow
+def test_montecarlo_jax_matches_python():
+    base = _scenario("hybrid")
+    kw = dict(seeds=(0, 1), loads=(0.5, 1.5))
+    jax_rows = MonteCarlo(base, backend="jax", **kw).run().rows
+    py_rows = MonteCarlo(base, backend="python", **kw).run().rows
+    assert [r["backend"] for r in jax_rows] == ["jax"] * 4
+    strip = lambda r: {k: v for k, v in r.items() if k != "backend"}
+    assert [strip(r) for r in jax_rows] == [strip(r) for r in py_rows]
+
+
+@pytest.mark.slow
+def test_montecarlo_mixed_grid_falls_back_transparently():
+    """A fleet-shaped scenario is out of regime: the jax backend must
+    route it to the scalar engine, not refuse the whole grid."""
+    sc = replace(_scenario("cfs"),
+                 fleet=FleetSpec(cores_per_node=4, containers="fixed"))
+    out = MonteCarlo(sc, seeds=(0,), loads=(1.0,), backend="jax").run()
+    assert out.meta == {"backends": ["python"], "fallback": 1}
+    assert out.rows[0]["n"] > 0
+
+
+@pytest.mark.slow
+def test_sweep_backend_parity():
+    from repro.cluster.sweep import build_grid, run_sweep
+    grid = build_grid(("fifo", "cfs", "hybrid"), ["none"], [1],
+                      (1.0, 2.0), cores_per_node=4, minutes=1,
+                      invocations_per_min=60.0, n_functions=10, seed=0)
+    py = run_sweep(grid, parallel=False)
+    jx = run_sweep(grid, parallel=False, backend="jax")
+    assert [r["backend"] for r in jx] == ["jax"] * len(jx)
+    strip = lambda r: {k: v for k, v in r.items() if k != "backend"}
+    assert [strip(r) for r in jx] == [strip(r) for r in py]
+
+
+# -- slow tier: randomized small grids (hypothesis) ----------------------------
+
+@pytest.mark.slow
+def test_property_batched_matches_scalar():
+    pytest.importorskip(
+        "hypothesis", reason="install the [test] extra for property tests")
+    from hypothesis import given, settings, strategies as st
+    from repro.mc.engine import run_scenarios
+
+    # Arrivals/services on a coarse ms grid (exactly representable
+    # floats keep the scalar/batched comparison about scheduling, not
+    # about decimal literals), every count padded into ONE (C=2, N=64)
+    # bucket so the whole sweep pays a single XLA compile.
+    specs = st.lists(
+        st.tuples(st.integers(0, 2_000), st.integers(1, 400)),
+        min_size=1, max_size=12)
+
+    @settings(max_examples=20, deadline=None)
+    @given(specs=specs,
+           policy=st.sampled_from(["fifo", "cfs", "hybrid"]),
+           n_fifo=st.integers(1, 1),
+           limit=st.sampled_from([200.0, 1633.0]))
+    def check(specs, policy, n_fifo, limit):
+        specs = sorted(specs)
+        tasks = mk_tasks([(float(a), float(s)) for a, s in specs])
+        kw = dict(n_fifo=n_fifo, time_limit_ms=limit) \
+            if policy == "hybrid" else {}
+        sc = Scenario(workload=WorkloadSpec(kind="tasks", tasks=tasks),
+                      fleet=FleetSpec(cores_per_node=2),
+                      policy=PolicySpec(name=policy, kw=kw))
+        assert supported(sc) is None
+        scalar = repro.run(sc)
+        batched = run_scenarios([sc])[0]
+        assert digest(batched) == digest(scalar)
+        assert batched.summary() == scalar.summary()
+
+    check()
