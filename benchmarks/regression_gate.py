@@ -76,10 +76,15 @@ def cell_key(row: dict) -> tuple:
     # was an Azure-trace run), so old baselines stay comparable and the
     # llm-FaaS bench's cells simply become new cells under the same key
     # function.
+    # The topology axes (zones / spot / retry) default "off" the same
+    # way: flat-fleet baselines keep their keys, and BENCH_topology's
+    # zoned/spot/retry cells become new cells under the same function.
     return (row.get("node_policy"), row.get("dispatcher"),
             row.get("n_nodes"), row.get("load_scale", 1.0),
             row.get("containers", "off"), row.get("chaos", "off"),
             row.get("admission", "off"), row.get("prewarm", "off"),
+            row.get("zones", "off"), row.get("spot", "off"),
+            row.get("retry", "off"),
             row.get("minutes"), row.get("invocations_per_min"),
             row.get("n_functions"), row.get("workload", "azure"),
             row.get("model"))

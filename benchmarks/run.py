@@ -11,6 +11,7 @@ from . import cluster_bench as C
 from . import paper_figures as F
 from . import llm_faas_bench as L
 from . import resilience_bench as R
+from . import topology_bench as T
 from . import serving_bench as S
 from .common import emit, timed
 
@@ -30,6 +31,7 @@ BENCHES = [
     ("roofline_table", S.roofline_table),
     ("cluster_matrix", C.cluster_matrix),
     ("resilience_matrix", R.resilience_matrix),
+    ("topology_matrix", T.topology_matrix),
     ("llm_faas", L.llm_faas_matrix),
 ]
 

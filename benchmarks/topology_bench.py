@@ -1,0 +1,260 @@
+"""Topology benchmark: correlated zone failure x spot churn x retry.
+
+The resilience bench measures uncorrelated churn (one node at a time);
+real outages are CORRELATED — a zone loses power, a rack loses its
+switch, the spot market reclaims every discounted machine at once. This
+bench runs a 2-zone fleet with a heterogeneous SKU mix (std + spot in
+both zones) through the ``zone_failure_preset`` storm — a brownout
+(slow-not-dead degrade) in one zone, a full zone kill in the other,
+then a fleet-wide spot revocation, with heals trickling in — and asks
+what the degradation stack buys:
+
+variant  dispatcher     retry policy                     topology pricing
+none     least_loaded   off (instant requeue storms)     labels only
+retry    least_loaded   backoff + jitter + budget        labels only
+full     cost_aware*    backoff + jitter + budget        SKU $ + zone hops
+
+(* cost_aware prices each route in dollars: SKU multiplier, spot
+discount, and the cross-zone hop priced like billed latency.)
+
+Each variant runs for {cfs, hybrid} node fleets x chaos {off,
+zonefail}. The retry budget is sized so nothing is shed (the breaker is
+off): every cell completes the identical invocation set and the dollars
+are directly comparable. Headline: hybrid+full under the zone-failure
+storm must be STRICTLY cheaper than cfs+none under the same storm —
+the paper's margin, measured while a zone is down and the spot capacity
+is being repossessed.
+
+Emits ``results/benchmarks/BENCH_topology.json`` with one row per cell
+(keyed on node_policy/dispatcher/chaos plus the topology axes
+zones/spot/retry — the regression gate's topology cell key) and the
+headline folded into the first row. Standalone: ``python -m
+benchmarks.topology_bench [--smoke]``; also registered as
+``topology_matrix`` in ``benchmarks.run``. ``--shard i/n`` and
+``--merge`` follow the resilience bench's contract: deterministic
+disjoint slices, headline recomputed only over the reassembled full
+matrix.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.cluster import (ClusterSim, RetryPolicy, TopologySpec,
+                           zone_failure_preset)
+from repro.core import ContainerConfig
+from repro.traces import TraceSpec, generate_workload
+
+from .common import RESULTS
+
+CORES = 8
+
+# 2 zones x 3 racks x 1 node: z0 = {std, spot, std}, z1 = {spot, std,
+# spot} — both zones hold revocable discounted capacity, so the spot
+# revocation event bites whichever zone survives the kill. Heals come
+# up as std machines in z0 (the surviving zone).
+TOPOLOGY = TopologySpec(zones=("z0", "z1"), racks_per_zone=3,
+                        nodes_per_rack=1,
+                        sku_pattern=("std", "spot", "std", "spot",
+                                     "std", "spot"),
+                        cross_zone_ms=30.0, heal_zone="z0")
+
+# Budget sized above the storm's worst retry chain (breaker off): no
+# cell sheds, so every cell completes the identical invocation set and
+# the headline compares dollars for the SAME work.
+RETRY = RetryPolicy(base_ms=250.0, cap_ms=8_000.0, jitter_frac=0.5,
+                    budget=8, breaker_threshold=0)
+
+VARIANTS = (
+    # (variant, dispatcher, retry?)
+    ("none", "least_loaded", False),
+    ("retry", "least_loaded", True),
+    ("full", "cost_aware", True),
+)
+
+HEAD_WIN = ("hybrid", "full", "zonefail")
+HEAD_BASE = ("cfs", "none", "zonefail")
+
+
+def _trace(smoke: bool) -> TraceSpec:
+    # 1800/min on 48 cores leaves calm-weather headroom; the zone kill
+    # halves the fleet mid-storm, which is exactly when the retry and
+    # pricing layers must earn their keep. Full tier doubles horizon
+    # and function population, not the rate.
+    return TraceSpec(minutes=1 if smoke else 2,
+                     invocations_per_min=1800.0,
+                     n_functions=40 if smoke else 80, seed=0)
+
+
+def _cells():
+    # Both tiers run the SAME 12 cells; only the trace scale differs.
+    for policy in ("cfs", "hybrid"):
+        for variant, disp, retry in VARIANTS:
+            for chaos in ("off", "zonefail"):
+                yield policy, variant, disp, retry, chaos
+
+
+def _run_cell(tasks, spec, policy, variant, disp, retry,
+              chaos) -> dict:
+    horizon_ms = spec.minutes * 60_000.0
+    sim = ClusterSim(
+        cores_per_node=CORES, node_policies=policy, dispatcher=disp,
+        seed=0, containers=ContainerConfig(keepalive_ms=30_000.0),
+        topology=TOPOLOGY)
+    res = sim.run(
+        tasks,
+        chaos=zone_failure_preset(horizon_ms, kill="z1", brownout="z0",
+                                  node_policy=policy)
+        if chaos == "zonefail" else None,
+        retry=RETRY if retry else None)
+    s = res.summary()
+    row = {
+        "node_policy": policy,
+        "variant": variant,
+        "dispatcher": disp,
+        "chaos": chaos,
+        # Topology axes of the regression-gate cell key (all default
+        # "off" there, so flat-fleet baselines never cross-compare).
+        "zones": str(len(TOPOLOGY.zones)),
+        "spot": "on",
+        "retry": "on" if retry else "off",
+        "n_nodes": TOPOLOGY.n_nodes,
+        "cores_per_node": CORES,
+        # Trace scale keys the gate cell: smoke- and full-tier
+        # artifacts must never cross-compare as if same-scale.
+        "minutes": spec.minutes,
+        "invocations_per_min": spec.invocations_per_min,
+        "n_functions": spec.n_functions,
+    }
+    for k in ("n", "failed", "shed", "cost_usd", "rejected_cost_usd",
+              "init_cost_usd", "warm_hold_usd", "cold_start_rate",
+              "cold_starts", "requeued", "chaos_events", "retries",
+              "retry_wait_ms", "revoked", "degraded_ms", "cross_zone",
+              "spot_savings_usd", "p99_slowdown", "makespan_s"):
+        row[k] = s[k]
+    row["total_cost_usd"] = res.total_cost_usd()
+    return row
+
+
+def _pick(rows, policy, variant, chaos):
+    for r in rows:
+        if (r["node_policy"], r["variant"], r["chaos"]) == \
+                (policy, variant, chaos):
+            return r
+    raise KeyError((policy, variant, chaos))
+
+
+def _headline(rows) -> dict:
+    win, base = _pick(rows, *HEAD_WIN), _pick(rows, *HEAD_BASE)
+    calm_win = _pick(rows, HEAD_WIN[0], HEAD_WIN[1], "off")
+    calm_base = _pick(rows, HEAD_BASE[0], HEAD_BASE[1], "off")
+    return {
+        "full_hybrid_zonefail_cost_usd": win["total_cost_usd"],
+        "none_cfs_zonefail_cost_usd": base["total_cost_usd"],
+        "saving_under_zonefail": 1.0 - win["total_cost_usd"]
+        / base["total_cost_usd"],
+        "saving_calm": 1.0 - calm_win["total_cost_usd"]
+        / calm_base["total_cost_usd"],
+        # Apples-to-apples guard: the headline only means something if
+        # both cells completed the same invocations.
+        "same_completed_set": win["n"] == base["n"]
+        and win["shed"] == base["shed"] == 0,
+        "cheaper": win["total_cost_usd"] < base["total_cost_usd"],
+    }
+
+
+def topology_matrix(smoke: bool = None,
+                    shard: str = None) -> list[dict]:
+    if smoke is None:
+        smoke = bool(os.environ.get("CLUSTER_BENCH_SMOKE"))
+    spec = _trace(smoke)
+    tasks = generate_workload(spec).tasks
+    cells = list(_cells())
+    if shard is not None:
+        from repro.cluster.sweep import shard_grid
+        cells = shard_grid(cells, shard)
+    rows = [_run_cell(tasks, spec, *cell) for cell in cells]
+    if shard is None:
+        head = _headline(rows)
+        rows[0] = {**rows[0],
+                   **{f"headline_{k}": v for k, v in head.items()}}
+    return rows
+
+
+def _cell_order(row: dict) -> int:
+    """Canonical position of a row in the unsharded ``_cells()`` order."""
+    order = {(p, v, c): i for i, (p, v, _d, _r, c)
+             in enumerate(_cells())}
+    return order[(row["node_policy"], row["variant"], row["chaos"])]
+
+
+def merge_shards(paths: list[str]) -> list[dict]:
+    """Fold per-shard artifacts into the canonical full matrix: rows in
+    unsharded cell order, headline recomputed over the complete set.
+    Raises if the shards do not reassemble exactly the 12-cell grid."""
+    rows: list[dict] = []
+    for p in paths:
+        payload = json.loads(open(p).read())
+        rows.extend(payload["matrix"] if isinstance(payload, dict)
+                    else payload)
+    expected = len(list(_cells()))
+    keys = {_cell_order(r) for r in rows}
+    if len(rows) != expected or keys != set(range(expected)):
+        raise SystemExit(
+            f"shards reassemble {sorted(keys)} of 0..{expected - 1} "
+            f"({len(rows)} rows) — refusing to merge a partial matrix")
+    rows.sort(key=_cell_order)
+    head = _headline(rows)
+    rows[0] = {**rows[0], **{f"headline_{k}": v for k, v in head.items()}}
+    return rows
+
+
+COLS = ("node_policy", "variant", "chaos", "cost_usd", "total_cost_usd",
+        "retries", "requeued", "revoked", "cross_zone",
+        "spot_savings_usd", "p99_slowdown")
+
+
+def main(argv=None) -> None:
+    from repro.cluster.sweep import print_rows
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--shard", default=None, metavar="i/n",
+                    help="run only this deterministic 1/n slice of the "
+                         "12-cell matrix (no headline; recombine with "
+                         "--merge)")
+    ap.add_argument("--merge", nargs="+", default=None, metavar="JSON",
+                    help="merge per-shard --out files into --out and "
+                         "exit (headline recomputed; no cells run)")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default "
+                         "results/benchmarks/BENCH_topology.json)")
+    args = ap.parse_args(argv)
+    out = args.out or str(RESULTS / "BENCH_topology.json")
+
+    if args.merge:
+        rows = merge_shards(args.merge)
+    else:
+        rows = topology_matrix(smoke=args.smoke, shard=args.shard)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"matrix": rows}, f, indent=2)
+    print_rows(rows, COLS)
+    if args.shard:
+        print(f"# shard {args.shard}: {len(rows)} cells -> {out} "
+              f"(headline deferred to --merge)", file=sys.stderr)
+        return
+    first = rows[0]
+    print(f"# hybrid+retry+priced-dispatch vs cfs+instant-requeue under "
+          f"zone failure + spot churn: cheaper={first['headline_cheaper']} "
+          f"(saving {first['headline_saving_under_zonefail']:.1%} storm, "
+          f"{first['headline_saving_calm']:.1%} calm; "
+          f"same completed set={first['headline_same_completed_set']})",
+          file=sys.stderr)
+    if not first["headline_cheaper"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

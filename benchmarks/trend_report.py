@@ -49,6 +49,8 @@ KINDS = {
                 "lower", "{:.6g}"),
     "resilience": ("BENCH_resilience.json", cell_key, "cost_usd",
                    "lower", "{:.6g}"),
+    "topology": ("BENCH_topology.json", cell_key, "cost_usd",
+                 "lower", "{:.6g}"),
     "heavy_traffic": ("heavy_traffic.json", cell_key, "cost_usd",
                       "lower", "{:.6g}"),
     "llm_faas": ("BENCH_llm_faas.json", cell_key, "usd_per_1k_requests",

@@ -9,7 +9,8 @@ fleet-level roll-ups (``metrics``), and a parallel grid runner
 (``sweep``).
 """
 from .admission import AdmissionConfig, AdmissionControl, make_admission
-from .chaos import ChaosEvent, ChaosSchedule, churn_preset, kill_heal
+from .chaos import (ChaosEvent, ChaosSchedule, churn_preset, kill_heal,
+                    zone_failure_preset)
 from .dispatch import (DISPATCHERS, AffinityDispatch, CostAwareDispatch,
                        Dispatcher, JoinIdleQueueDispatch,
                        LeastLoadedDispatch, RandomDispatch,
@@ -17,9 +18,11 @@ from .dispatch import (DISPATCHERS, AffinityDispatch, CostAwareDispatch,
                        WarmLeastLoadedDispatch, make_dispatcher)
 from .metrics import ClusterResult
 from .prewarm import PrewarmConfig, Provisioner, build_plan
+from .retry import RetryPolicy, RetryState, make_retry
 from .sim import ClusterNode, ClusterSim, run_cluster
 from .sweep import (PRESETS, Cell, build_grid, compare_serial, merge_rows,
                     run_cell, run_sweep, shard_grid)
+from .topology import SKUS, NodePlacement, NodeSKU, TopologySpec, as_sku
 
 __all__ = [
     "DISPATCHERS", "AffinityDispatch", "CostAwareDispatch", "Dispatcher",
@@ -31,5 +34,7 @@ __all__ = [
     "AdmissionConfig", "AdmissionControl", "make_admission",
     "ChaosEvent", "ChaosSchedule", "churn_preset", "kill_heal",
     "PrewarmConfig", "Provisioner", "build_plan", "merge_rows",
-    "shard_grid",
+    "shard_grid", "zone_failure_preset", "RetryPolicy", "RetryState",
+    "make_retry", "SKUS", "NodePlacement", "NodeSKU", "TopologySpec",
+    "as_sku",
 ]

@@ -102,6 +102,7 @@ class AdmissionControl:
         self.queued = 0          # queue decisions (a task may queue twice)
         self.spilled = 0
         self.shed_no_capacity = 0  # fleet vanished under a queued task
+        self.shed_retry = 0       # retry budget / circuit breaker sheds
         self.queue_wait_ms = 0.0  # total front-door delay actually served
 
     # -- token bucket ----------------------------------------------------
@@ -175,6 +176,17 @@ class AdmissionControl:
         self._queued_since.pop(task.tid, None)
         self._refund_token(task)
 
+    def on_retry_shed(self, task) -> None:
+        """A chaos-lost invocation ran out of retry budget (or its
+        function's circuit breaker is open): the retry layer sheds it
+        through THIS front door so the admission books stay the single
+        source of shed accounting. The task was admitted and served
+        once, so there is no token to refund — the count is the point."""
+        self.shed += 1
+        self.shed_retry += 1
+        self._queued_since.pop(task.tid, None)
+        self._refund_token(task)
+
     def _refund_token(self, task) -> None:
         """A task shed before dispatch gives its rate token (consumed
         or reserved) back: the work never ran, so later invocations of
@@ -200,6 +212,7 @@ class AdmissionControl:
             "queued": self.queued,
             "spilled": self.spilled,
             "shed_no_capacity": self.shed_no_capacity,
+            "shed_retry": self.shed_retry,
             "queue_wait_ms": self.queue_wait_ms,
         }
 

@@ -61,6 +61,8 @@ class Dispatcher:
     # completion back via observe_completion (in canonical
     # (completion, tid) order, so feedback never depends on node order).
     wants_feedback = False
+    # Failure-domain topology, attached by the fleet when one exists.
+    topology = None
 
     def __init__(self, seed: int = 0):
         self.seed = seed
@@ -73,6 +75,13 @@ class Dispatcher:
 
     def on_topology_change(self, nodes: Sequence["ClusterNode"]) -> None:
         """Called when nodes join or leave the fleet."""
+
+    def attach_topology(self, topology) -> None:
+        """Called once, before the first ``on_topology_change``, when
+        the fleet carries a failure-domain topology. Base dispatchers
+        ignore it; ``cost_aware`` prices SKU multipliers and cross-zone
+        hops with it."""
+        self.topology = topology
 
     def observe_completion(self, task: Task) -> None:
         """Completion feedback hook (only called when wants_feedback)."""
@@ -294,6 +303,8 @@ class CostAwareDispatch(Dispatcher):
     def select(self, task, nodes, t):
         p = price_per_ms(task.mem_mb)
         coeff = self.coeff
+        topo = self.topology
+        home = topo.home_zone(task.func_id) if topo is not None else None
         best, best_score, best_load = 0, None, 0.0
         for i, node in enumerate(nodes):
             s = node.snapshot()
@@ -306,6 +317,17 @@ class CostAwareDispatch(Dispatcher):
                 cold = expected_cold_ms(task.mem_mb) if base is None \
                     else expected_cold_ms(task.mem_mb, base, per_gb)
             score = cold * p + s["load"] * coeff * p
+            # SKU-aware pricing: the billed-ms terms scale by the
+            # node's effective $/ms multiplier (spot discount folded
+            # in), and a dispatch outside the home zone adds the hop's
+            # latency priced like billed time. Multiplying by an exact
+            # 1.0 and adding nothing keeps flat fleets bit-identical.
+            mult = getattr(node, "price_mult", 1.0)
+            if mult != 1.0:
+                score *= mult
+            if home is not None and node.zone is not None \
+                    and node.zone != home:
+                score += topo.cross_zone_ms * p
             if best_score is None or score < best_score:
                 best, best_score, best_load = i, score, s["load"]
         if self.learn:

@@ -30,7 +30,8 @@ from typing import Optional
 
 import numpy as np
 
-from ..core.cost import rejected_request_cost_usd, workload_cost_usd
+from ..core.cost import (duration_cost_usd, rejected_request_cost_usd,
+                         workload_cost_usd)
 from ..core.metrics import SimResult
 
 
@@ -49,6 +50,13 @@ class ClusterResult:
     chaos_events: list = field(default_factory=list)
     admission: Optional[dict] = None               # AdmissionControl.stats()
     prewarm_stats: Optional[dict] = None           # Provisioner.stats()
+    # -- failure-domain topology (DESIGN.md Sec. 17) ------------------------
+    # One dict per node_results row: zone/rack/SKU labels and price
+    # multipliers (empty list on flat fleets — every multiplier 1.0).
+    node_meta: list = field(default_factory=list)
+    cross_zone: int = 0                            # out-of-zone dispatches
+    retry_stats: Optional[dict] = None             # RetryState.stats()
+    degraded_ms: float = 0.0                       # sum of degrade intervals
 
     # -- task views (cached: summary() walks these repeatedly) --------------
     @cached_property
@@ -115,9 +123,53 @@ class ClusterResult:
     def p_slowdown(self, pct: float) -> float:
         return float(np.percentile(self.slowdown(), pct))
 
+    def _price_mults(self) -> Optional[list]:
+        """Per-node effective price multipliers, or None when every node
+        bills at the flat rate (the historical — and bit-identical —
+        single-sum path)."""
+        if not self.node_meta:
+            return None
+        mults = [m.get("price_mult", 1.0) for m in self.node_meta]
+        return mults if any(m != 1.0 for m in mults) else None
+
     def cost_usd(self) -> float:
-        return workload_cost_usd(self.execution(),
-                                 mem_mb=[t.mem_mb for t in self.tasks])
+        mults = self._price_mults()
+        if mults is None:
+            return workload_cost_usd(self.execution(),
+                                     mem_mb=[t.mem_mb for t in self.tasks])
+        # Heterogeneous SKUs: each node's bill is priced at ITS
+        # multiplier over its own (completion, tid)-sorted completions,
+        # then exactly summed — still order-canonical, because node_
+        # results order is the fleet's deterministic roster order.
+        per_node = []
+        for r, mult in zip(self.node_results, mults):
+            done = sorted((t for t in r.tasks if t.completion is not None),
+                          key=lambda t: (t.completion, t.tid))
+            per_node.append(workload_cost_usd(
+                [t.execution for t in done],
+                mem_mb=[t.mem_mb for t in done], price_mult=mult))
+        return math.fsum(per_node)
+
+    def spot_savings_usd(self) -> float:
+        """Money NOT billed because work landed on discounted spot
+        capacity: each spot node's duration bill at its base SKU rate
+        times its discount. Zero without a topology (or without spot
+        nodes) — reported so the bench headline can show the price of
+        chasing the discount (revocations requeue work) next to the
+        discount itself."""
+        if not self.node_meta:
+            return 0.0
+        out = []
+        for r, m in zip(self.node_results, self.node_meta):
+            if not m.get("spot") or not m.get("spot_discount"):
+                continue
+            done = sorted((t for t in r.tasks if t.completion is not None),
+                          key=lambda t: (t.completion, t.tid))
+            base = duration_cost_usd([t.execution for t in done],
+                                     [t.mem_mb for t in done])
+            out.append(base * m.get("base_price_mult", 1.0)
+                       * m["spot_discount"])
+        return math.fsum(out)
 
     def rejected_cost_usd(self) -> float:
         """Per-request fees incurred by admission-shed invocations —
@@ -129,8 +181,14 @@ class ClusterResult:
         return self.cost_usd() + self.rejected_cost_usd()
 
     def requeued(self) -> int:
-        """Invocations re-dispatched after a chaos kill."""
-        return sum(e.get("requeued", 0) for e in self.chaos_events)
+        """Invocations re-dispatched after a chaos kill — lost in-flight
+        work plus concurrency-slot waiters stranded on dead nodes."""
+        return sum(e.get("requeued", 0) + e.get("slot_requeued", 0)
+                   for e in self.chaos_events)
+
+    def revoked(self) -> int:
+        """Nodes reclaimed by spot revocation events."""
+        return sum(e.get("revoked", 0) for e in self.chaos_events)
 
     # -- container lifecycle ------------------------------------------------
     # Fleet values aggregate the per-node SimResult helpers so the
@@ -159,7 +217,8 @@ class ClusterResult:
             return None
         keys = ("warm_hits", "cold_starts", "evictions_ttl",
                 "evictions_capacity", "evictions_flush", "dropped",
-                "prewarmed", "warm_mb_ms")
+                "prewarmed", "warm_mb_ms", "queued_concurrency",
+                "granted_from_queue")
         agg = {k: sum(s[k] for s in per_node) for k in keys}
         total = agg["warm_hits"] + agg["cold_starts"]
         agg["cold_start_rate"] = (agg["cold_starts"] / total) if total else 0.0
@@ -205,6 +264,15 @@ class ClusterResult:
             "queued": (self.admission or {}).get("queued", 0),
             "spilled": (self.admission or {}).get("spilled", 0),
             "prewarmed": (self.prewarm_stats or {}).get("placed", 0),
+            # Topology / retry accounting (DESIGN.md Sec. 17): stable
+            # zeros when the fleet is flat and no retry policy is set.
+            "retries": (self.retry_stats or {}).get("retries", 0),
+            "retry_wait_ms": (self.retry_stats or {}).get(
+                "retry_wait_ms", 0.0),
+            "revoked": self.revoked(),
+            "degraded_ms": self.degraded_ms,
+            "cross_zone": self.cross_zone,
+            "spot_savings_usd": self.spot_savings_usd(),
         }
         if self.redispatches:
             out["redispatches"] = self.redispatches

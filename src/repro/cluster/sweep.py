@@ -69,10 +69,16 @@ class Cell:
     # Workload kind: "azure" | "llm".
     workload: str = "azure"
     model: str = "deepseek-7b"
+    # Failure-domain axes (DESIGN.md Sec. 17): "off" keeps the flat
+    # fleet; "zoned" places n_nodes across 2 zones with a std/spot SKU
+    # mix (n_nodes must be even). retry="on" attaches the default
+    # backoff policy for chaos-lost work.
+    topology: str = "off"
+    retry: str = "off"
 
     def to_scenario(self) -> "Scenario":
-        from ..scenario import (FleetSpec, PolicySpec, Scenario,
-                                WorkloadSpec)
+        from ..scenario import (FleetSpec, PolicySpec, ResilienceSpec,
+                                Scenario, WorkloadSpec)
         trace = TraceSpec(minutes=self.minutes,
                           invocations_per_min=self.invocations_per_min,
                           n_functions=self.n_functions, seed=self.seed)
@@ -98,13 +104,32 @@ class Cell:
         # dispatcher="none" selects the single-node engine path (no
         # ClusterSim): the shape the batched MC backend accelerates.
         dispatcher = None if self.dispatcher == "none" else self.dispatcher
+        topology = None
+        if self.topology == "zoned":
+            from .topology import TopologySpec
+            if self.n_nodes % 2:
+                raise ValueError("topology='zoned' needs an even "
+                                 f"n_nodes, got {self.n_nodes}")
+            topology = TopologySpec(
+                zones=("z0", "z1"), racks_per_zone=self.n_nodes // 2,
+                nodes_per_rack=1, sku_pattern=("std", "spot"))
+        elif self.topology != "off":
+            raise ValueError(f"unknown topology axis {self.topology!r}")
+        if self.retry not in ("off", "on"):
+            raise ValueError(f"unknown retry axis {self.retry!r}")
+        resilience = ResilienceSpec()
+        if self.retry == "on":
+            from .retry import RetryPolicy
+            resilience = ResilienceSpec(retry=RetryPolicy())
         return Scenario(
             workload=wl,
             fleet=FleetSpec(n_nodes=self.n_nodes,
                             cores_per_node=self.cores_per_node,
                             dispatcher=dispatcher,
-                            containers=containers, seed=self.seed),
-            policy=PolicySpec(name=self.node_policy))
+                            containers=containers, seed=self.seed,
+                            topology=topology),
+            policy=PolicySpec(name=self.node_policy),
+            resilience=resilience)
 
 
 def run_cell(cell: Cell) -> dict:
@@ -225,7 +250,8 @@ def shard_grid(grid: list[Cell], shard: str) -> list[Cell]:
 def _row_key(row: dict) -> tuple:
     return tuple(str(row.get(k)) for k in (
         "node_policy", "dispatcher", "n_nodes", "load_scale",
-        "containers", "seed", "minutes", "workload", "model"))
+        "containers", "seed", "minutes", "workload", "model",
+        "topology", "retry"))
 
 
 def merge_rows(paths: list[str]) -> list[dict]:
@@ -322,6 +348,12 @@ def main(argv=None) -> None:
                     help="container lifecycle layer / keep-alive policy")
     ap.add_argument("--container-capacity-mb", type=float, default=4096.0)
     ap.add_argument("--keepalive-ms", type=float, default=30_000.0)
+    ap.add_argument("--topology", default="off", choices=("off", "zoned"),
+                    help="zoned: place nodes across 2 zones with a "
+                         "std/spot SKU mix (needs even --nodes)")
+    ap.add_argument("--retry", default="off", choices=("off", "on"),
+                    help="attach the default backoff retry policy for "
+                         "chaos-lost work")
     ap.add_argument("--preset", default=None, choices=sorted(PRESETS),
                     help="named grid (overrides the grid-shape flags)")
     ap.add_argument("--shard", default=None, metavar="i/n",
@@ -367,7 +399,8 @@ def main(argv=None) -> None:
             n_functions=p["n_functions"], seed=args.seed,
             containers=p["containers"],
             container_capacity_mb=args.container_capacity_mb,
-            keepalive_ms=args.keepalive_ms)
+            keepalive_ms=args.keepalive_ms,
+            topology=args.topology, retry=args.retry)
     else:
         grid = build_grid(
             _csv(args.policies), _csv(args.dispatchers),
@@ -377,7 +410,8 @@ def main(argv=None) -> None:
             n_functions=args.n_functions, seed=args.seed,
             containers=args.containers,
             container_capacity_mb=args.container_capacity_mb,
-            keepalive_ms=args.keepalive_ms)
+            keepalive_ms=args.keepalive_ms,
+            topology=args.topology, retry=args.retry)
 
     if args.shard:
         full = len(grid)

@@ -382,7 +382,7 @@ class ContainerPool:
 
     # -- per-function concurrency limits ------------------------------------
     def request_slot(self, func_id: int, mem_mb: float, now: float,
-                     tid: int = -1) -> str:
+                     tid: int = -1, *, claim: bool = True) -> str:
         """Slot-tracked dispatch under ``cfg.max_concurrency``: claim a
         per-function sandbox slot and (on admission) a warm container.
 
@@ -391,6 +391,12 @@ class ContainerPool:
         ``max_concurrency`` slots; the dispatch joins a FIFO queue and
         is granted by a later :meth:`release_slot` — the caller learns
         which via that call's return value, keyed by ``tid``).
+
+        ``claim=False`` does SLOT ACCOUNTING ONLY — no warm container
+        is acquired and ``"admitted"`` replaces the warm/cold verdict.
+        This is the cluster-dispatch mode: the node's scheduler decides
+        cold vs warm itself on the engine's first-dispatch path, and
+        the slot layer must not consume the sandbox it will look for.
 
         With a fixed per-function memory size (the FaaS config model —
         see :meth:`acquire`), the cap bounds warm+running sandboxes of
@@ -407,17 +413,23 @@ class ContainerPool:
             self.queued_concurrency += 1
             return "queued"
         self._running[func_id] = self._running.get(func_id, 0) + 1
+        if not claim:
+            return "admitted"
         return "warm" if self.acquire(func_id, mem_mb, now) else "cold"
 
     def release_slot(self, func_id: int, mem_mb: float, now: float, *,
-                     keep_warm: bool = True) -> list[tuple[int, str]]:
+                     keep_warm: bool = True,
+                     claim: bool = True) -> list[tuple[int, str]]:
         """Finish a slot-tracked invocation: free its concurrency slot,
         return the sandbox to the warm set (unless ``keep_warm`` is
         False — crashed/decommissioned sandboxes free the slot only),
         then admit queued dispatches FIFO while slots remain. Returns
         the granted waiters as ``[(tid, "warm" | "cold"), ...]`` (at
         most one per release when a cap is set) so the caller can start
-        them. Raises on a release without a matching request."""
+        them. With ``claim=False`` (cluster-dispatch mode, see
+        :meth:`request_slot`) grants do not touch the warm set and
+        report as ``"granted"``. Raises on a release without a
+        matching request."""
         self._flush(now)
         n = self._running.get(func_id, 0)
         if n <= 0:
@@ -436,12 +448,28 @@ class ContainerPool:
             tid, wmem = w.popleft()
             self._running[func_id] = self._running.get(func_id, 0) + 1
             self.granted_from_queue += 1
-            granted.append(
-                (tid, "warm" if self.acquire(func_id, wmem, now)
-                 else "cold"))
+            if not claim:
+                granted.append((tid, "granted"))
+            else:
+                granted.append(
+                    (tid, "warm" if self.acquire(func_id, wmem, now)
+                     else "cold"))
         if w is not None and not w:
             del self._waiters[func_id]
         return granted
+
+    def drain_slots(self) -> list[int]:
+        """Node decommission: forget all slot accounting. Running slots
+        die with the machine (their invocations are requeued by the
+        cluster layer) and queued waiters are STRANDED — their tids are
+        returned so the caller can requeue the waiting dispatches
+        through the front-end dispatcher instead of leaking them (a
+        plain :meth:`flush` wipes the warm set but must NOT touch slot
+        state: a warm-pool loss does not abort running invocations)."""
+        stranded = [tid for q in self._waiters.values() for tid, _ in q]
+        self._running.clear()
+        self._waiters.clear()
+        return stranded
 
     def running_counts(self) -> dict[int, int]:
         """func_id -> slot-tracked running invocations (nonzero only)."""

@@ -50,8 +50,13 @@ def price_per_ms(mem_mb: float) -> float:
     return (mem_mb / 1024.0) * PRICE_PER_GB_SECOND / 1000.0
 
 
-def invocation_cost_usd(execution_ms: float, mem_mb: float) -> float:
-    return execution_ms * price_per_ms(mem_mb) + PRICE_PER_REQUEST
+def invocation_cost_usd(execution_ms: float, mem_mb: float,
+                        price_mult: float = 1.0) -> float:
+    """One invocation's bill. ``price_mult`` scales the DURATION share
+    only (heterogeneous node SKUs / spot discounts — the per-request
+    fee is a front-door charge, identical on every machine)."""
+    return execution_ms * price_per_ms(mem_mb) * price_mult \
+        + PRICE_PER_REQUEST
 
 
 def cold_start_cost_usd(init_ms: float, mem_mb: float) -> float:
@@ -78,11 +83,14 @@ def warm_pool_hold_cost_usd(warm_mb_ms: float) -> float:
 
 def workload_cost_usd(execution_ms: Iterable[float],
                       mem_mb: Optional[Iterable[float]] = None,
-                      fixed_mem_mb: Optional[float] = None) -> float:
+                      fixed_mem_mb: Optional[float] = None,
+                      price_mult: float = 1.0) -> float:
     """Total user-facing cost of a workload.
 
     With ``fixed_mem_mb`` set, prices every invocation at that size
     (Fig. 1 / Fig. 20 style); otherwise uses per-invocation sizes.
+    ``price_mult`` scales every invocation's duration share (a node
+    SKU's memory price / spot discount — see ``invocation_cost_usd``).
 
     Summation is ``math.fsum`` (exactly rounded), so the total is
     bit-identical under ANY permutation of the invocations — cost
@@ -91,10 +99,20 @@ def workload_cost_usd(execution_ms: Iterable[float],
     depend on the order tasks arrived at the completed list.
     """
     if fixed_mem_mb is not None:
-        return math.fsum(invocation_cost_usd(e, fixed_mem_mb)
+        return math.fsum(invocation_cost_usd(e, fixed_mem_mb, price_mult)
                          for e in execution_ms)
     assert mem_mb is not None
-    return math.fsum(invocation_cost_usd(e, m)
+    return math.fsum(invocation_cost_usd(e, m, price_mult)
+                     for e, m in zip(execution_ms, mem_mb))
+
+
+def duration_cost_usd(execution_ms: Iterable[float],
+                      mem_mb: Iterable[float]) -> float:
+    """The duration share of a workload's bill alone (no per-request
+    fees), exactly rounded — the base that SKU price multipliers and
+    spot discounts scale, so spot savings are priced from the same sum
+    the bill itself uses."""
+    return math.fsum(e * price_per_ms(m)
                      for e, m in zip(execution_ms, mem_mb))
 
 

@@ -566,7 +566,22 @@ class Scheduler:
             # live ones at the decommission instant.
             self.containers.settle(self.now)
             self.containers.flush(self.now)
+            # A dead machine holds no concurrency slots and owes its
+            # queued slot waiters nothing — the cluster layer requeues
+            # the waiting TASKS through the dispatcher; this clears the
+            # pool-side accounting so invariants hold on the corpse.
+            self.containers.drain_slots()
         return self
+
+    def set_interference(self, fn) -> None:
+        """Attach or adjust the interference function mid-run (SKU clock
+        multipliers, chaos ``degrade`` events). Disables the analytic
+        fast-forward ONE-WAY: barriers stop being maintained the moment
+        interference appears, so re-enabling later would fast-forward
+        over missing barrier state. Chunks already in flight keep their
+        rate; the new rate applies from the next chunk start."""
+        self.interference_fn = fn
+        self._use_ff = False
 
     # -- load snapshot (cluster dispatch) ---------------------------------
     def n_running(self) -> int:

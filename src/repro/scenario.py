@@ -46,7 +46,9 @@ from .cluster.chaos import ChaosSchedule
 from .cluster.metrics import ClusterResult
 from .cluster.prewarm import (PrewarmConfig, Provisioner,
                               make_prewarm_config)
+from .cluster.retry import RetryPolicy
 from .cluster.sim import ClusterSim
+from .cluster.topology import TopologySpec
 from .core.containers import (ContainerConfig, ContainerSpec,
                               as_container_config)
 from .core.events import Task
@@ -72,6 +74,10 @@ SUMMARY_KEYS_V1 = (
     "cold_starts", "cold_start_rate", "init_cost_usd", "warm_hold_usd",
     "shed", "rejected_cost_usd", "requeued", "chaos_events",
     "queued", "spilled", "prewarmed",
+    # -- v1 additive growth: failure-domain topology + retry layer
+    # (DESIGN.md Sec. 17); stable zeros when those layers are off.
+    "retries", "retry_wait_ms", "revoked", "degraded_ms",
+    "cross_zone", "spot_savings_usd",
 )
 
 
@@ -145,11 +151,15 @@ class FleetSpec:
     seed: int = 0
     nodes: Optional[Sequence] = None
     node_factory: Optional[object] = None
+    # Failure-domain topology (zones/racks/SKUs — DESIGN.md Sec. 17).
+    # When set it IS the fleet shape: node count and placement come
+    # from the topology, and ``n_nodes`` is ignored.
+    topology: Optional[TopologySpec] = None
 
     @property
     def is_fleet(self) -> bool:
         return (self.dispatcher is not None or self.n_nodes > 1
-                or self.nodes is not None)
+                or self.nodes is not None or self.topology is not None)
 
 
 @dataclass(frozen=True)
@@ -196,6 +206,10 @@ class ResilienceSpec:
     admission: Union[None, dict, AdmissionConfig, AdmissionControl] = None
     prewarm: Union[None, dict, PrewarmConfig, Provisioner,
                    Sequence] = None
+    # Retry layer for chaos-lost work: capped exponential backoff with
+    # deterministic jitter, retry budget, per-function circuit breaker
+    # (None keeps PR 5's instant-requeue semantics, bit-identically).
+    retry: Union[None, dict, RetryPolicy] = None
 
     def materialize_prewarm(self, tasks) -> Union[None, Provisioner,
                                                   Sequence]:
@@ -256,6 +270,8 @@ class ScenarioResult:
             "cold_start_rate": 0.0,
             "init_cost_usd": 0.0, "warm_hold_usd": 0.0,
             "rejected_cost_usd": 0.0,
+            "retry_wait_ms": 0.0, "degraded_ms": 0.0,
+            "spot_savings_usd": 0.0,
         })
         out.update(self.raw.summary())
         for k, v in self.meta.items():
@@ -353,9 +369,10 @@ def _run_fleet(tasks: list[Task], containers, sc: Scenario,
         dispatcher=fl.dispatcher if fl.dispatcher is not None
         else "least_loaded",
         seed=fl.seed, node_factory=factory, containers=containers,
-        admission=res.admission)
+        admission=res.admission, topology=fl.topology)
     out = sim.run(tasks, fresh_tasks=False, chaos=res.chaos,
-                  prewarm=res.materialize_prewarm(tasks))
+                  prewarm=res.materialize_prewarm(tasks),
+                  retry=res.retry)
     if serving is not None:
         out.redispatches = sum(getattr(n.sched, "redispatches", 0)
                                for n in sim.nodes)

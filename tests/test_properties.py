@@ -199,3 +199,71 @@ def test_no_warm_hit_after_keepalive_expiry(idle_gap, ttl):
     # round to the same value.
     assert hit == (100.0 + idle_gap < 100.0 + ttl)
     pool.check_invariants()
+
+
+# -- correlated-failure topology (DESIGN.md Sec. 17) ---------------------------
+
+@st.composite
+def chaos_and_retry(draw):
+    """A randomized correlated chaos schedule plus a retry policy."""
+    from repro.cluster import ChaosEvent, ChaosSchedule, RetryPolicy
+    events = []
+    for _ in range(draw(st.integers(min_value=1, max_value=4))):
+        t = draw(st.floats(min_value=1_000.0, max_value=50_000.0))
+        action = draw(st.sampled_from(
+            ("kill_zone", "kill_rack", "revoke_spot", "degrade",
+             "restore", "heal")))
+        kw = {}
+        if action in ("kill_zone", "degrade", "restore"):
+            kw["zone"] = draw(st.sampled_from(("z0", "z1")))
+        if action == "kill_rack":
+            kw["rack"] = draw(st.sampled_from(
+                ("z0-r0", "z0-r1", "z1-r0", "z1-r1")))
+        if action == "degrade":
+            kw["severity"] = draw(st.floats(min_value=0.1, max_value=0.9))
+        events.append(ChaosEvent(t=t, action=action, **kw))
+    budget = draw(st.integers(min_value=0, max_value=6))
+    seed = draw(st.integers(min_value=0, max_value=3))
+    return (ChaosSchedule(events=tuple(events), heal_spec="hybrid"),
+            RetryPolicy(budget=budget, base_ms=50.0, cap_ms=2_000.0),
+            seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(chaos_and_retry())
+def test_chaos_partitions_arrivals_and_bounds_retries(params):
+    """Under ANY correlated schedule: completed + shed partitions the
+    arrival set, retries never exceed the budget, and the same seed +
+    schedule roll up bit-identically."""
+    import json
+
+    from repro.cluster import ClusterSim, TopologySpec
+
+    chaos, policy, seed = params
+    topo = TopologySpec(zones=("z0", "z1"), racks_per_zone=2,
+                        nodes_per_rack=1,
+                        sku_pattern=("std", "spot", "std", "spot"))
+    tasks = _mk([(i * 40.0, 300.0) for i in range(60)])
+    for i, t in enumerate(tasks):
+        t.func_id = i % 7
+
+    def go():
+        import copy
+        sim = ClusterSim(cores_per_node=2, node_policies="hybrid",
+                         seed=seed,
+                         containers=ContainerConfig(keepalive_ms=30_000.0,
+                                                    cold_jitter=0.0),
+                         topology=topo)
+        res = sim.run(copy.deepcopy(tasks), chaos=chaos, retry=policy)
+        return sim, res
+
+    sim, res = go()
+    done = {t.tid for t in res.tasks}
+    shed = {t.tid for t in sim.shed}
+    assert done.isdisjoint(shed)
+    assert done | shed == {t.tid for t in tasks}
+    assert all(t.retries <= policy.budget
+               for t in list(res.tasks) + list(sim.shed))
+    _, res2 = go()
+    assert json.dumps(res.summary(), sort_keys=True) == \
+        json.dumps(res2.summary(), sort_keys=True)

@@ -1,0 +1,416 @@
+"""Correlated-failure topology: zones/racks/SKUs, retry storms with
+backoff + breaker, slow-not-dead degradation, zone-aware dispatch, and
+the per-function concurrency cap wired into the cluster dispatch path."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.cluster import (ChaosEvent, ChaosSchedule, ClusterSim,
+                           RetryPolicy, RetryState, SKUS, TopologySpec,
+                           as_sku, make_retry, zone_failure_preset)
+from repro.cluster.topology import NodePlacement, SlowdownDial
+from repro.core import ContainerConfig, Task
+from repro.scenario import (FleetSpec, PolicySpec, ResilienceSpec,
+                            Scenario, SUMMARY_KEYS_V1, WorkloadSpec, run)
+from repro.traces import TraceSpec
+
+from conftest import mk_tasks
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from benchmarks import regression_gate as gate  # noqa: E402
+from benchmarks import trend_report  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def fleet_workload():
+    from repro.traces import TraceSpec, generate_workload
+    spec = TraceSpec(minutes=1, invocations_per_min=900, n_functions=40,
+                     seed=3)
+    return generate_workload(spec).tasks
+
+
+CC = ContainerConfig(keepalive_ms=30_000.0, cold_jitter=0.0)
+
+TOPO = TopologySpec(zones=("z0", "z1"), racks_per_zone=2,
+                    nodes_per_rack=1,
+                    sku_pattern=("std", "spot", "std", "spot"),
+                    cross_zone_ms=30.0, heal_zone="z0")
+
+
+# -- topology spec -------------------------------------------------------------
+
+def test_placement_fills_racks_in_order():
+    topo = TopologySpec(zones=("a", "b"), racks_per_zone=2,
+                        nodes_per_rack=2, sku_pattern=("std", "spot"))
+    places = topo.placement()
+    assert topo.n_nodes == len(places) == 8
+    assert [p.zone for p in places] == ["a"] * 4 + ["b"] * 4
+    assert [p.rack for p in places] == \
+        ["a-r0", "a-r0", "a-r1", "a-r1", "b-r0", "b-r0", "b-r1", "b-r1"]
+    # SKU pattern cycles over nodes in placement order.
+    assert [p.sku.name for p in places] == ["std", "spot"] * 4
+    # Placement is a pure function of the spec.
+    assert topo.placement() == places
+
+
+def test_home_zone_and_heal_placement():
+    topo = TopologySpec(zones=("z0", "z1", "z2"), heal_zone="z2")
+    assert [topo.home_zone(f) for f in range(6)] == \
+        ["z0", "z1", "z2", "z0", "z1", "z2"]
+    heal = topo.heal_placement()
+    assert heal.zone == "z2" and heal.rack == "z2-heal"
+    assert heal.sku.name == "std"
+
+
+def test_topology_validation_errors():
+    with pytest.raises(ValueError):
+        TopologySpec(zones=())
+    with pytest.raises(ValueError):
+        TopologySpec(racks_per_zone=0)
+    with pytest.raises(ValueError):
+        TopologySpec(cross_zone_ms=-1.0)
+    with pytest.raises(KeyError):
+        TopologySpec(sku_pattern=("gpu-9000",))
+    with pytest.raises(ValueError):
+        import dataclasses
+        dataclasses.replace(SKUS["std"], clock=0.0)
+    with pytest.raises(ValueError):
+        import dataclasses
+        dataclasses.replace(SKUS["std"], spot_discount=0.5)  # non-spot
+
+
+def test_sku_effective_price_and_dial():
+    spot = as_sku("spot")
+    assert spot.effective_price_mult == pytest.approx(
+        spot.price_mult * (1.0 - spot.spot_discount))
+    assert as_sku("std").effective_price_mult == 1.0
+    # rate = clock * (1 - degrade); fn(t) = 1 - rate.
+    dial = SlowdownDial(clock=0.8)
+    assert dial(0.0) == pytest.approx(1.0 - 0.8)
+    dial.degrade = 0.5
+    assert dial(123.0) == pytest.approx(1.0 - 0.8 * 0.5)
+    dial.degrade = 0.0
+    assert dial(999.0) == pytest.approx(0.2)
+
+
+# -- retry policy --------------------------------------------------------------
+
+def test_backoff_doubles_and_caps():
+    pol = RetryPolicy(base_ms=100.0, cap_ms=500.0, jitter_frac=0.0)
+    waits = [pol.backoff_ms(a, tid=7, seed=0) for a in range(1, 6)]
+    assert waits == [100.0, 200.0, 400.0, 500.0, 500.0]
+
+
+def test_backoff_jitter_is_deterministic_and_bounded():
+    pol = RetryPolicy(base_ms=100.0, cap_ms=1e9, jitter_frac=0.5)
+    a = pol.backoff_ms(3, tid=42, seed=11)
+    assert a == pol.backoff_ms(3, tid=42, seed=11)       # pure function
+    assert a != pol.backoff_ms(3, tid=43, seed=11)       # spreads by tid
+    assert a != pol.backoff_ms(3, tid=42, seed=12)       # and by seed
+    assert 400.0 <= a <= 600.0                           # 400 * (1 ± 0.5/...)
+
+
+def test_retry_budget_sheds():
+    st = RetryState(RetryPolicy(budget=2, jitter_frac=0.0), seed=0)
+    task = mk_tasks([(0.0, 100.0)])[0]
+    verdicts = []
+    for _ in range(4):
+        verdict, when = st.on_failure(task, 1_000.0)
+        verdicts.append(verdict)
+        if verdict == "retry":
+            task.retries += 1
+    assert verdicts == ["retry", "retry", "shed", "shed"]
+    s = st.stats()
+    assert s["retries"] == 2 and s["shed_budget"] == 2
+    assert s["retry_wait_ms"] > 0.0
+
+
+def test_circuit_breaker_trips_per_function():
+    pol = RetryPolicy(budget=100, breaker_threshold=3,
+                      breaker_window_ms=1_000.0, jitter_frac=0.0)
+    st = RetryState(pol, seed=0)
+    tasks = mk_tasks([(0.0, 10.0)] * 6)
+    for task in tasks:
+        task.func_id = 5
+    # Three failures inside the window trip the breaker; the next shed.
+    outs = [st.on_failure(t, 100.0 + i) for i, t in enumerate(tasks[:4])]
+    assert [v for v, _ in outs] == ["retry", "retry", "retry", "shed"]
+    assert st.stats()["breaker_trips"] == 1
+    assert st.stats()["shed_breaker"] == 1
+    # A different function is unaffected.
+    other = tasks[4]
+    other.func_id = 9
+    assert st.on_failure(other, 105.0)[0] == "retry"
+    # Outside the window the breaker closes again.
+    late = tasks[5]
+    assert st.on_failure(late, 10_000.0)[0] == "retry"
+
+
+def test_make_retry_coercions():
+    assert make_retry(None, seed=0) is None
+    st = make_retry({"budget": 3}, seed=1)
+    assert isinstance(st, RetryState) and st.policy.budget == 3
+    st2 = make_retry(RetryPolicy(budget=4), seed=2)
+    assert st2.policy.budget == 4
+    assert make_retry(st2, seed=9) is st2
+
+
+# -- correlated chaos ----------------------------------------------------------
+
+def _sim(policy="hybrid", dispatcher="least_loaded", topo=TOPO, **kw):
+    return ClusterSim(cores_per_node=8, node_policies=policy,
+                      dispatcher=dispatcher, seed=0, containers=CC,
+                      topology=topo, **kw)
+
+
+def test_topology_actions_require_topology(fleet_workload):
+    chaos = ChaosSchedule(events=(
+        ChaosEvent(t=10_000.0, action="kill_zone", zone="z1"),))
+    sim = ClusterSim(n_nodes=2, cores_per_node=8, containers=CC)
+    with pytest.raises(ValueError, match="topology"):
+        sim.run(fleet_workload, chaos=chaos)
+
+
+def test_kill_zone_removes_whole_zone_and_work_completes(fleet_workload):
+    chaos = ChaosSchedule(events=(
+        ChaosEvent(t=15_000.0, action="kill_zone", zone="z1"),))
+    sim = _sim()
+    res = sim.run(fleet_workload, chaos=chaos)
+    assert all(n.zone == "z0" for n in sim.nodes)
+    assert len(sim.nodes) == 2          # z1's two nodes are gone
+    assert len(res.tasks) == len(fleet_workload)
+    assert not res.failed
+    rec = next(r for r in res.chaos_events if r["action"] == "kill_zone")
+    assert len(rec["nodes"]) == 2
+
+
+def test_revoke_spot_kills_only_spot_nodes(fleet_workload):
+    chaos = ChaosSchedule(events=(
+        ChaosEvent(t=15_000.0, action="revoke_spot"),))
+    sim = _sim()
+    res = sim.run(fleet_workload, chaos=chaos)
+    assert all(not n.spot for n in sim.nodes)
+    assert len(sim.nodes) == 2
+    assert res.revoked() == 2
+    assert res.summary()["revoked"] == 2
+    assert len(res.tasks) == len(fleet_workload)
+
+
+def test_degrade_slows_and_restore_closes_interval(fleet_workload):
+    chaos = ChaosSchedule(events=(
+        ChaosEvent(t=5_000.0, action="degrade", zone="z0", severity=0.6),
+        ChaosEvent(t=25_000.0, action="restore", zone="z0"),
+    ))
+    res = _sim().run(fleet_workload, chaos=chaos)
+    s = res.summary()
+    # Two z0 nodes degraded for 20s each.
+    assert s["degraded_ms"] == pytest.approx(40_000.0)
+    assert len(res.tasks) == len(fleet_workload)
+    # Slow-not-dead: the brownout stretches executions vs a calm run.
+    calm = _sim().run(fleet_workload)
+    assert res.summary()["p99_slowdown"] >= calm.summary()["p99_slowdown"]
+
+
+def test_unclosed_degrade_interval_is_still_metered(fleet_workload):
+    chaos = ChaosSchedule(events=(
+        ChaosEvent(t=5_000.0, action="degrade", zone="z1", severity=0.3),))
+    res = _sim().run(fleet_workload, chaos=chaos)
+    assert res.summary()["degraded_ms"] > 0.0
+
+
+# -- retry integration ---------------------------------------------------------
+
+def test_retry_storm_waits_and_bounded_by_budget(fleet_workload):
+    chaos = zone_failure_preset(60_000.0, kill="z1", brownout="z0",
+                                node_policy="hybrid")
+    sim = _sim()
+    res = sim.run(fleet_workload, chaos=chaos,
+                  retry=RetryPolicy(budget=8, breaker_threshold=0))
+    s = res.summary()
+    assert s["retries"] > 0 and s["retry_wait_ms"] > 0.0
+    assert all(t.retries <= 8 for t in res.tasks)
+    # Budget sized above the storm: nothing shed, everything completes.
+    assert s["shed"] == 0
+    assert s["n"] == len(fleet_workload)
+
+
+def test_tiny_retry_budget_sheds_through_admission(fleet_workload):
+    chaos = zone_failure_preset(60_000.0, kill="z1", brownout="z0",
+                                node_policy="hybrid")
+    sim = _sim(admission={"max_queue_ms": 1e12})
+    res = sim.run(fleet_workload, chaos=chaos,
+                  retry=RetryPolicy(budget=0, jitter_frac=0.0))
+    s = res.summary()
+    assert s["shed"] > 0
+    assert sim.admission.stats()["shed_retry"] == s["shed"]
+    # Partition: every arrival either completed or was shed, never both.
+    done = {t.tid for t in res.tasks}
+    shed = {t.tid for t in sim.shed}
+    assert done.isdisjoint(shed)
+    assert done | shed == {t.tid for t in fleet_workload}
+
+
+# -- zone-aware dispatch & pricing ---------------------------------------------
+
+def test_cross_zone_dispatch_counted_and_penalized(fleet_workload):
+    sim = _sim()
+    res = sim.run(fleet_workload)
+    s = res.summary()
+    assert s["cross_zone"] == sim.cross_zone
+    # least_loaded ignores zones, so a busy fleet does hop.
+    assert s["cross_zone"] > 0
+
+
+def test_cost_aware_prefers_home_zone(fleet_workload):
+    base = _sim(dispatcher="least_loaded").run(fleet_workload).summary()
+    aware = _sim(dispatcher="cost_aware").run(fleet_workload).summary()
+    assert aware["cross_zone"] < base["cross_zone"]
+
+
+def test_spot_savings_and_sku_pricing(fleet_workload):
+    res = _sim().run(fleet_workload)
+    s = res.summary()
+    assert s["spot_savings_usd"] > 0.0
+    # Spot discount makes the heterogeneous bill cheaper than the same
+    # placement priced all-std.
+    flat = TopologySpec(zones=("z0", "z1"), racks_per_zone=2,
+                        nodes_per_rack=1, sku_pattern=("std",),
+                        cross_zone_ms=30.0)
+    flat_cost = _sim(topo=flat).run(fleet_workload).summary()["cost_usd"]
+    assert s["cost_usd"] < flat_cost
+    meta = {m["sku"] for m in res.node_meta}
+    assert meta == {"std", "spot"}
+
+
+def test_flat_fleet_new_summary_keys_are_zero(fleet_workload):
+    """No topology, no retry: the additive keys exist and read zero."""
+    sim = ClusterSim(n_nodes=4, cores_per_node=8, containers=CC)
+    s = sim.run(fleet_workload).summary()
+    for key in ("retries", "revoked", "cross_zone"):
+        assert s[key] == 0
+    for key in ("retry_wait_ms", "degraded_ms", "spot_savings_usd"):
+        assert s[key] == 0.0
+
+
+def test_full_stack_same_seed_bit_identical(fleet_workload):
+    import copy
+
+    def go():
+        chaos = zone_failure_preset(60_000.0, node_policy="hybrid")
+        sim = _sim(dispatcher="cost_aware")
+        res = sim.run(copy.deepcopy(fleet_workload), chaos=chaos,
+                      retry=RetryPolicy(budget=8, breaker_threshold=0))
+        return json.dumps(res.summary(), sort_keys=True)
+
+    assert go() == go()
+
+
+# -- satellite 1: concurrency cap shapes cluster traffic -----------------------
+
+def test_slot_cap_queues_and_grants_in_fleet_metrics():
+    """With max_concurrency=1, same-function dispatches to one node
+    serialize through the pool slot queue — the waits show up in the
+    fleet container stats and the cap is actually respected."""
+    cc = ContainerConfig(keepalive_ms=1e9, cold_jitter=0.0,
+                         max_concurrency=1)
+    tasks = mk_tasks([(0.0, 400.0), (0.0, 400.0), (0.0, 400.0)])
+    sim = ClusterSim(n_nodes=1, cores_per_node=8, containers=cc)
+    res = sim.run(tasks)
+    assert len(res.tasks) == 3 and not res.failed
+    cs = res.container_stats()
+    assert cs["queued_concurrency"] == 2
+    assert cs["granted_from_queue"] == 2
+    # Cap=1: executions of the single function never overlap.
+    spans = sorted((t.first_run, t.completion) for t in res.tasks)
+    for (_, end), (start, _) in zip(spans, spans[1:]):
+        assert start >= end - 1e-6
+
+
+def test_slot_cap_off_is_bit_identical(fleet_workload):
+    """No cap configured: the slot-routed dispatch path is bypassed and
+    the fleet roll-up matches the historical direct-inject path."""
+    a = ClusterSim(n_nodes=3, cores_per_node=8, containers=CC)
+    sa = a.run(fleet_workload).summary()
+    big = ContainerConfig(keepalive_ms=30_000.0, cold_jitter=0.0,
+                          max_concurrency=10_000)
+    b = ClusterSim(n_nodes=3, cores_per_node=8, containers=big)
+    sb = b.run(fleet_workload).summary()
+    assert sa["cost_usd"] == sb["cost_usd"]
+    assert sa["p99_slowdown"] == sb["p99_slowdown"]
+
+
+# -- satellite 2: node death with queued slot waiters --------------------------
+
+def test_remove_node_grants_slot_waiters():
+    cc = ContainerConfig(keepalive_ms=1e9, cold_jitter=0.0,
+                         max_concurrency=1)
+    tasks = mk_tasks([(0.0, 500.0), (0.0, 500.0)])
+    sim = ClusterSim(n_nodes=1, cores_per_node=8, containers=cc)
+    res = sim.run(tasks)
+    # Graceful drain granted the waiter; nothing stranded, both done.
+    assert len(res.tasks) == 2 and not res.failed
+    assert res.container_stats()["granted_from_queue"] >= 1
+
+
+def test_zone_kill_requeues_slot_waiters(fleet_workload):
+    """A killed node holding queued slot waiters must hand them back to
+    the dispatcher, not strand them: everything still completes and the
+    requeue is visible in the chaos log."""
+    cc = ContainerConfig(keepalive_ms=30_000.0, cold_jitter=0.0,
+                         max_concurrency=1)
+    chaos = ChaosSchedule(events=(
+        ChaosEvent(t=10_000.0, action="kill_zone", zone="z1"),))
+    sim = ClusterSim(cores_per_node=8, node_policies="hybrid",
+                     dispatcher="least_loaded", seed=0, containers=cc,
+                     topology=TOPO)
+    res = sim.run(fleet_workload, chaos=chaos)
+    assert len(res.tasks) == len(fleet_workload)
+    assert not res.failed
+    rec = next(r for r in res.chaos_events if r["action"] == "kill_zone")
+    assert rec.get("slot_requeued", 0) + rec.get("requeued", 0) > 0
+
+
+# -- scenario API --------------------------------------------------------------
+
+def test_scenario_runs_topology_and_retry():
+    sc = Scenario(
+        workload=WorkloadSpec(trace=TraceSpec(
+            minutes=1, invocations_per_min=600, n_functions=20, seed=5)),
+        fleet=FleetSpec(topology=TOPO, cores_per_node=8,
+                        dispatcher="least_loaded"),
+        policy=PolicySpec(),
+        resilience=ResilienceSpec(
+            chaos=zone_failure_preset(60_000.0, node_policy="hybrid"),
+            retry=RetryPolicy(budget=8, breaker_threshold=0)),
+    )
+    s = run(sc).summary()
+    assert set(SUMMARY_KEYS_V1) <= set(s)
+    assert s["n"] > 0 and s["chaos_events"] > 0
+    assert s["retries"] >= 0 and s["degraded_ms"] > 0.0
+
+
+# -- gate / trend wiring -------------------------------------------------------
+
+def test_gate_cell_key_topology_axes_default_off():
+    old = {"node_policy": "cfs", "dispatcher": "least_loaded",
+           "chaos": "off", "minutes": 1}
+    new = dict(old, zones="2", spot="on", retry="on")
+    assert gate.cell_key(old) != gate.cell_key(new)
+    # Old rows (pre-topology artifacts) key identically to new rows
+    # with the axes explicitly off.
+    assert gate.cell_key(old) == gate.cell_key(
+        dict(old, zones="off", spot="off", retry="off"))
+
+
+def test_trend_report_knows_topology_kind():
+    fname, key_fn, metric, direction, _ = trend_report.KINDS["topology"]
+    assert fname == "BENCH_topology.json"
+    assert key_fn is gate.cell_key
+    assert (metric, direction) == ("cost_usd", "lower")
+
+
+# The hypothesis property over randomized correlated chaos schedules
+# lives in tests/test_properties.py (module-level importorskip there
+# would otherwise skip this whole file when hypothesis is absent).
