@@ -2,30 +2,36 @@
 
 The batched MC engine (``repro.mc``, DESIGN.md Sec. 16) advances a
 whole (seeds x loads x policies) grid of in-regime sweep cells in one
-vmapped XLA program, bit-identical to the scalar engine. This bench
-measures the throughput side of that trade on a >= 256-cell grid:
+vmapped XLA program, bit-identical to the scalar engine. Since ISSUE 9
+the kernel retires MANY scheduling events per ``lax.while_loop``
+iteration (alternation-cycle + window closed forms + micro-step
+chain), so this bench reports two axes:
 
-* the POOL baseline — ``cluster.sweep.run_sweep`` over the same cells
-  through the ``multiprocessing`` pool, each worker regenerating its
-  workload and running the scalar engine (the pre-PR sweep path,
-  unchanged);
-* the JAX backend — ``run_sweep(..., backend="jax")``, timed COLD
-  (first call: XLA compilation included) and WARM (the compiled
-  program cached, the steady-state cost of every later grid on the
-  same shape bucket).
+* WALL — cells/sec for the POOL baseline (``cluster.sweep.run_sweep``
+  over the multiprocessing pool at full worker count, each worker
+  running the scalar engine) vs the JAX backend timed COLD (first
+  call: XLA compilation included) and WARM (compiled program cached).
+* ALGORITHM — kernel iterations and events retired per cell from the
+  kernel's own counters. ``events_per_cell / iters_per_cell`` is the
+  multi-event win, and because the PR 7 one-event kernel ran at
+  exactly one event per iteration, ``events_per_cell`` IS its
+  iteration count: ``iter_reduction_vs_one_event`` is directly the
+  "x fewer iterations" acceptance number, visible even on 1-core CI
+  where wall-clock hides it.
 
-The headline is ``speedup_vs_pool`` = warm-JAX cells/sec over pool
-cells/sec. READ IT WITH THE MACHINE IN MIND: one compiled program
-does O(padded-slots) vector work per retired event across the whole
-batch, where the scalar engine does O(1) dict work per event and
+READ THE WALL HEADLINE WITH THE MACHINE IN MIND: one compiled program
+does O(padded-slots) vector work per iteration across the whole
+batch and the vmapped while-loop runs to the batch's SLOWEST cell,
+where the scalar engine does O(1) dict work per event and
 fast-forwards dense regimes analytically. On parallel hardware
 (many-core CPU, GPU/TPU) the batch axis is free and the one-program
 shape wins; on a single-core CI runner XLA executes the batch
-serially and the batched backend sits near parity on fifo/hybrid
-grids and behind on slice-expiry-dense pure-CFS cells. ``meta``
-records ``cpu_count`` and the compile time so a number measured on
-one machine is never mistaken for a hardware-independent ratio, and
-CI gates cells/sec run-over-run on the same runner (kind ``mc`` in
+serially and the pool baseline stays ahead. ``meta`` records
+``cpu_count``, ``pool_workers``, the compile time, and the persistent
+compile-cache hit evidence (entry counts when
+``REPRO_MC_COMPILE_CACHE`` is set), so a number measured on one
+machine is never mistaken for a hardware-independent ratio; CI gates
+cells/sec run-over-run on same-``cpu_count`` runners (kind ``mc`` in
 ``benchmarks.regression_gate``) rather than against an absolute
 cross-machine target.
 
@@ -35,7 +41,11 @@ simulation would be worse than no number.
 
 Standalone::
 
-    python -m benchmarks.mc_bench [--smoke]
+    python -m benchmarks.mc_bench [--smoke] [--median-of N]
+
+``--median-of N`` repeats each timed measurement N times and keeps
+the median (matching engine_bench's smoke aggregation) — sub-second
+smoke grids otherwise gate on single-run scheduler noise.
 
 Writes ``results/benchmarks/BENCH_mc.json``:
 
@@ -43,14 +53,18 @@ Writes ``results/benchmarks/BENCH_mc.json``:
                "n_cells": ..., "n_cores": ..., "n_tasks": ...,
                "wall_s": ..., "cells_per_sec": ...}, ...],
      "meta": {"headline_speedup_vs_pool": ..., "compile_s": ...,
-              "cpu_count": ..., ...}}
+              "cpu_count": ..., "padded_slots": ...,
+              "iters_per_cell": ..., "events_per_cell": ...,
+              "iter_reduction_vs_one_event": ..., ...}}
 """
 from __future__ import annotations
 
 import json
 import os
+import statistics
 import sys
 import time
+from dataclasses import asdict
 
 from repro.cluster.sweep import build_grid, run_sweep
 
@@ -77,6 +91,17 @@ SMOKE = dict(seeds=range(2), loads=(0.5, 1.5),
 VERIFY_CELLS = 6
 
 
+def _cpu_count() -> int:
+    """Cores this process may actually use. ``os.cpu_count()`` ignores
+    affinity masks, so under CI's ``taskset -c 0,1`` pinning it would
+    report the whole runner and the gate key would lie about the
+    machine the walls were measured on."""
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:  # non-Linux
+        return os.cpu_count() or 2
+
+
 def mc_grid(spec: dict) -> list:
     return build_grid(
         POLICIES, ["none"], [1], tuple(spec["loads"]),
@@ -94,27 +119,67 @@ def _strip(row: dict) -> dict:
     return {k: v for k, v in row.items() if k != "backend"}
 
 
-def bench_grid(spec: dict) -> tuple[list[dict], dict]:
+def _jax_sweep(grid: list) -> tuple[list[dict], int, int]:
+    """The sweep runner's jax route, inlined so the TIMED run also
+    yields the kernel's iteration/event counters (``run_sweep`` rows
+    drop ``mc_stats``). Returns (rows, total_iters, total_events)."""
+    from repro.mc.dispatch import supported, tasks_supported
+    from repro.mc.engine import run_scenarios
+
+    scs = [c.to_scenario() for c in grid]
+    prebuilt = []
+    for sc in scs:
+        why = supported(sc)
+        if why is None:
+            built = sc.workload.build()
+            why = tasks_supported(built[0])
+            prebuilt.append(built)
+        if why is not None:
+            raise RuntimeError(
+                f"bench cell outside the batched regime ({why}) — the "
+                "bench grid must ride the device end to end")
+    results = run_scenarios(scs, prebuilt=prebuilt)
+    rows, iters, events = [], 0, 0
+    for cell, res in zip(grid, results):
+        row = asdict(cell)
+        row.update(res.summary())
+        row["backend"] = "jax"
+        rows.append(row)
+        iters += res.mc_stats["iters"]
+        events += res.mc_stats["events"]
+    return rows, iters, events
+
+
+def bench_grid(spec: dict, median_of: int = 1) -> tuple[list[dict], dict]:
+    from repro.mc.dispatch import compile_cache_entries, enable_compile_cache
+    from repro.mc.engine import _bucket
+
     grid = _expand_seeds(mc_grid(spec), spec["seeds"])
     n_cells = len(grid)
+    pool_workers = min(n_cells, _cpu_count())
 
-    t0 = time.perf_counter()
-    pool_rows = run_sweep(grid, parallel=True)
-    pool_s = time.perf_counter() - t0
+    pool_walls = []
+    for _ in range(median_of):
+        t0 = time.perf_counter()
+        pool_rows = run_sweep(grid, parallel=True,
+                              processes=pool_workers)
+        pool_walls.append(time.perf_counter() - t0)
+    pool_s = statistics.median(pool_walls)
 
+    cache_dir = enable_compile_cache()
+    cache_before = compile_cache_entries()
     t0 = time.perf_counter()
-    jax_rows = run_sweep(grid, backend="jax")
+    jax_rows, _, _ = _jax_sweep(grid)
     cold_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    jax_rows = run_sweep(grid, backend="jax")
-    warm_s = time.perf_counter() - t0
+    cache_after_cold = compile_cache_entries()
 
-    n_jax = sum(r["backend"] == "jax" for r in jax_rows)
-    if n_jax != n_cells:
-        raise RuntimeError(
-            f"{n_cells - n_jax} bench cells fell back to the scalar "
-            "engine — the bench grid must sit fully inside the batched "
-            "regime")
+    warm_walls = []
+    for _ in range(median_of):
+        t0 = time.perf_counter()
+        jax_rows, iters, events = _jax_sweep(grid)
+        warm_walls.append(time.perf_counter() - t0)
+    warm_s = statistics.median(warm_walls)
+
     step = max(1, n_cells // VERIFY_CELLS)
     for k in range(0, n_cells, step):
         if _strip(jax_rows[k]) != pool_rows[k]:
@@ -126,29 +191,52 @@ def bench_grid(spec: dict) -> tuple[list[dict], dict]:
     # Per-policy walls are not separable inside one batched program;
     # the artifact's gated rows are the all-policies aggregates per
     # backend (plus the cold row, reported but gate-exempt: its wall
-    # is dominated by the one-off XLA compile).
+    # is dominated by the one-off XLA compile). cpu_count rides on
+    # every row because the gate keys on it: both backends' walls
+    # scale with core count (pool workers / XLA intra-op threads), so
+    # differently-sized runners must never cross-compare.
+    cpus = _cpu_count()
     rows = [
         {"policy": "all", "backend": "pool", "n_cells": n_cells,
          "n_cores": spec["n_cores"], "n_tasks": n_tasks,
+         "cpu_count": cpus,
          "wall_s": pool_s, "cells_per_sec": n_cells / pool_s},
         {"policy": "all", "backend": "jax", "n_cells": n_cells,
          "n_cores": spec["n_cores"], "n_tasks": n_tasks,
+         "cpu_count": cpus,
          "wall_s": warm_s, "cells_per_sec": n_cells / warm_s},
         {"policy": "all", "backend": "jax_cold", "n_cells": n_cells,
          "n_cores": spec["n_cores"], "n_tasks": n_tasks,
+         "cpu_count": cpus,
          "wall_s": cold_s, "cells_per_sec": n_cells / cold_s},
     ]
     meta = {
         "n_cells": n_cells,
         "n_tasks_per_cell": n_tasks,
+        "padded_slots": _bucket(n_tasks),
         "grid": {k: (list(v) if isinstance(v, (range, tuple)) else v)
                  for k, v in spec.items()},
+        "median_of": median_of,
         "pool_s": pool_s,
+        "pool_workers": pool_workers,
         "jax_cold_s": cold_s,
         "jax_warm_s": warm_s,
         "compile_s": cold_s - warm_s,
         "headline_speedup_vs_pool": pool_s / warm_s,
-        "cpu_count": os.cpu_count(),
+        # Kernel-side counters: events_per_cell is exactly what the
+        # PR 7 one-event kernel spent in iterations, so the reduction
+        # ratio is the hardware-independent multi-event win.
+        "iters_per_cell": iters / n_cells,
+        "events_per_cell": events / n_cells,
+        "events_per_iter": events / max(iters, 1),
+        "iter_reduction_vs_one_event": events / max(iters, 1),
+        "compile_cache": (
+            None if cache_dir is None else
+            {"dir": cache_dir, "entries_before": cache_before,
+             "entries_after_cold": cache_after_cold,
+             # cold run hit the cache iff no new entries appeared
+             "cold_was_hit": cache_after_cold == cache_before}),
+        "cpu_count": cpus,
         "verified_cells": len(range(0, n_cells, step)),
     }
     return rows, meta
@@ -157,7 +245,11 @@ def bench_grid(spec: dict) -> tuple[list[dict], dict]:
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     smoke = "--smoke" in argv
-    rows, meta = bench_grid(SMOKE if smoke else FULL)
+    median_of = 1
+    if "--median-of" in argv:
+        median_of = int(argv[argv.index("--median-of") + 1])
+    rows, meta = bench_grid(SMOKE if smoke else FULL,
+                            median_of=median_of)
     meta["smoke"] = smoke
     payload = {"rows": rows, "meta": meta}
     RESULTS.mkdir(parents=True, exist_ok=True)
@@ -172,6 +264,10 @@ def main(argv=None) -> None:
           f"{meta['n_cells']} cells "
           f"(compile {meta['compile_s']:.1f}s, "
           f"cpu_count={meta['cpu_count']})", file=sys.stderr)
+    print(f"# kernel: {meta['iters_per_cell']:.1f} iters/cell for "
+          f"{meta['events_per_cell']:.1f} events/cell = "
+          f"{meta['iter_reduction_vs_one_event']:.1f}x fewer "
+          f"iterations than the one-event kernel", file=sys.stderr)
 
 
 if __name__ == "__main__":

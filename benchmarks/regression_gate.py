@@ -24,9 +24,12 @@ from the row schema:
   with full-trace baselines.
 * ``BENCH_mc`` rows (``cells_per_sec`` present) — fail when a shared
   sweep-throughput cell's cells/sec drops by more than the threshold.
-  Cells are matched on (policy, backend, n_cores, n_cells, n_tasks):
-  the ``backend`` axis keeps the pool baseline and the batched JAX
-  path as separate trajectories on the same runner. ``jax_cold`` rows
+  Cells are matched on (policy, backend, n_cores, n_cells, n_tasks,
+  cpu_count): the ``backend`` axis keeps the pool baseline and the
+  batched JAX path as separate trajectories on the same runner, and
+  ``cpu_count`` keeps differently-sized runners from ever
+  cross-comparing (both backends' walls scale with host cores).
+  ``jax_cold`` rows
   (wall dominated by the one-off XLA compile) are reported but never
   fail the gate. Sweep artifacts gain nothing here: their summary rows
   are backend-invariant by the bit-identity contract, so the cluster
@@ -107,8 +110,15 @@ def mc_key(row: dict) -> tuple:
     # backend separates the pool baseline from the batched-JAX
     # trajectory; n_cells / n_tasks key the grid scale, so a smoke
     # artifact never cross-compares with a full-grid baseline.
+    # cpu_count keys the RUNNER: both backends' walls scale with core
+    # count (pool worker fan-out, XLA intra-op threads), so a 1-core
+    # runner's cells/sec must never gate against a 4-core baseline —
+    # rows from differently-sized machines simply become disjoint
+    # cells (reported, skipped). Pre-ISSUE-9 artifacts lack the field
+    # and land on cpu_count=None, disjoint from every new runner.
     return (row.get("policy"), row.get("backend"), row.get("n_cores"),
-            row.get("n_cells"), row.get("n_tasks"))
+            row.get("n_cells"), row.get("n_tasks"),
+            row.get("cpu_count"))
 
 
 def compare_mc(prev_rows: list[dict], new_rows: list[dict],

@@ -155,11 +155,13 @@ def run_sweep(grid: list[Cell], *, parallel: bool = True,
     """Run every cell and return summary rows in grid order.
 
     ``backend="jax"`` routes cells inside the batched Monte-Carlo
-    regime (single node, no containers — see ``repro.mc.dispatch``)
-    through one vmapped device program and everything else through the
-    usual per-cell path; rows gain a ``backend`` key recording the
-    route.  Results are identical either way — the batched engine is
-    bit-compatible and out-of-regime cells fall back transparently.
+    regime (single node or flat ``round_robin``/``random`` fleets, no
+    containers — see ``repro.mc.dispatch``) through one vmapped device
+    program and everything else through the usual per-cell path; rows
+    gain a ``backend`` key recording the route, and fallback rows a
+    ``fallback_reason`` counter key.  Results are identical either
+    way — the batched engine is bit-compatible and out-of-regime cells
+    fall back transparently.
     """
     if backend == "jax":
         return _run_sweep_jax(grid, parallel=parallel,
@@ -175,16 +177,28 @@ def run_sweep(grid: list[Cell], *, parallel: bool = True,
 
 def _run_sweep_jax(grid: list[Cell], *, parallel: bool,
                    processes: Optional[int]) -> list[dict]:
-    from ..mc.dispatch import supported, tasks_supported
+    from ..mc.dispatch import reason_key, supported, tasks_supported
     from ..mc.engine import run_scenarios
 
     scs = [c.to_scenario() for c in grid]
-    jax_idx = [k for k, sc in enumerate(scs) if supported(sc) is None]
+    # Per-cell gate refusal keys (None = batched): fallback rows carry
+    # theirs as ``fallback_reason`` so a sweep that silently routes
+    # most cells to the scalar path never reads as "batched".
+    reasons: list[Optional[str]] = []
+    for sc in scs:
+        why = supported(sc)
+        reasons.append(None if why is None else reason_key(why))
+    jax_idx = [k for k in range(len(scs)) if reasons[k] is None]
     # Build once here (shared with the kernel via ``prebuilt``) so the
     # dynamic half of the gate can still demote caller-shaped streams.
     prebuilt = [scs[k].workload.build() for k in jax_idx]
-    keep = [j for j, k in enumerate(jax_idx)
-            if tasks_supported(prebuilt[j][0]) is None]
+    keep = []
+    for j, k in enumerate(jax_idx):
+        why = tasks_supported(prebuilt[j][0])
+        if why is None:
+            keep.append(j)
+        else:
+            reasons[k] = reason_key(why)
     jax_idx = [jax_idx[j] for j in keep]
     prebuilt = [prebuilt[j] for j in keep]
 
@@ -203,6 +217,7 @@ def _run_sweep_jax(grid: list[Cell], *, parallel: bool,
                                           parallel=parallel,
                                           processes=processes)):
             row["backend"] = "python"
+            row["fallback_reason"] = reasons[k]
             rows[k] = row
     return rows
 
@@ -365,7 +380,8 @@ def main(argv=None) -> None:
                          "exit (no cells are run)")
     ap.add_argument("--backend", default="python",
                     choices=("python", "jax"),
-                    help="jax: batch in-regime cells (single-node, no "
+                    help="jax: batch in-regime cells (single-node or "
+                         "flat round_robin/random fleets, no "
                          "containers) into one vmapped device program; "
                          "out-of-regime cells fall back per cell")
     ap.add_argument("--serial", action="store_true",

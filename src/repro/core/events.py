@@ -106,6 +106,15 @@ def fifo_budget_ms(limit_ms, cpu_time_ms, *, _max=max):
     return _max(limit_ms - cpu_time_ms, 0.01)
 
 
+def chunk_completes(remaining, run):
+    """Completion predicate for a chunk of length ``run``: the
+    subtraction FIRST, then the ``_EPS`` compare — the one float
+    expression that decides whether a chunk retires its task.  Pure
+    elementwise ops, so the batched kernels evaluate it on arrays
+    unchanged."""
+    return (remaining - run) <= _EPS
+
+
 @dataclass(slots=True)
 class Task:
     """One serverless function invocation.
@@ -882,9 +891,9 @@ def cfs_fast_forward(sched: Scheduler, core: Core, end: float, hz: float):
         # task's final partial chunk (run == remaining < s). Retire
         # the completion chain from it when batching is on.
         if not (sched._batch_complete
-                and task.remaining - core.chunk_len <= _EPS):
+                and chunk_completes(task.remaining, core.chunk_len)):
             return end
-    elif task.remaining - s > _EPS:
+    elif not chunk_completes(task.remaining, s):
         bound = sched._next_barrier(core.chunk_start, core)
         if bound - end < s:
             return end               # window too short to batch a round

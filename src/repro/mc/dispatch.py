@@ -1,19 +1,29 @@
 """Regime gate + transparent fallback for the batched MC engine.
 
 ``supported(scenario)`` returns ``None`` when a scenario sits inside
-the regime the kernels reproduce bit-for-bit, else a short human
-reason.  Everything the gate refuses routes to the scalar engine —
-callers (``cluster.sweep --backend jax``, ``MonteCarlo``) partition
-their cells with this gate and never change results, only speed
+the regime the kernels reproduce bit-for-bit, else a :class:`Refusal`
+— a plain human-readable string that additionally carries a stable
+``key`` for fallback accounting (``reason_key``), so sweeps can report
+*why* cells fell back instead of silently reading as "batched".
+Everything the gate refuses routes to the scalar engine — callers
+(``cluster.sweep --backend jax``, ``MonteCarlo``) partition their
+cells with this gate and never change results, only speed
 (DESIGN.md Sec. 16).
 
 The gate is deliberately conservative and STATIC: it looks only at
 the specs, never at run state, so a cell's route is decided before
 any work happens.  In-regime means:
 
-* single node (``FleetSpec.is_fleet`` false), no node_factory,
+* single node, OR a flat multi-node fleet behind a STATE-OBLIVIOUS
+  dispatcher (``round_robin`` | ``random``): those routing decisions
+  are a pure function of dispatch order and ``FleetSpec.seed``, so the
+  fleet decomposes into independent per-node cells the kernel batches
+  side by side (recombined by the canonical (completion, tid)
+  roll-up).  State-AWARE dispatchers (least_loaded, affinity, ...)
+  observe node heartbeats and still run through ``ClusterSim``;
+* no node_factory, no heterogeneous ``nodes`` override, no topology,
 * no container pool, no serving slots, no microvm/ghost models,
-* no chaos / admission / pre-warm resilience layers,
+* no chaos / admission / pre-warm / retry resilience layers,
 * policy ``fifo`` | ``cfs`` | ``hybrid`` with default knobs (a
   hybrid may override ``n_fifo`` / ``time_limit_ms`` via ``kw`` —
   both are traced kernel inputs),
@@ -23,6 +33,7 @@ any work happens.  In-regime means:
 """
 from __future__ import annotations
 
+import os
 from typing import TYPE_CHECKING, Optional
 
 if TYPE_CHECKING:
@@ -30,62 +41,154 @@ if TYPE_CHECKING:
 
 SUPPORTED_POLICIES = ("fifo", "cfs", "hybrid")
 
+# Fleet dispatchers whose routing is a pure function of (dispatch
+# order, seed) — no node state observed, so assignments replay in
+# Python and each node becomes an independent batched cell.
+REPLAYABLE_DISPATCHERS = ("round_robin", "random")
+
 # Hybrid kwargs the kernel accepts as traced inputs; anything else in
 # PolicySpec.kw (adapters, custom latencies, interference) falls back.
 _HYBRID_KW = {"n_fifo", "time_limit_ms"}
 
 
-def supported(sc: "Scenario") -> Optional[str]:
+class Refusal(str):
+    """A refusal reason: behaves as the human-readable message
+    everywhere (tests match substrings, errors interpolate it) while
+    carrying a stable ``key`` the fallback counters aggregate on."""
+
+    key: str
+
+    def __new__(cls, key: str, msg: str) -> "Refusal":
+        self = super().__new__(cls, msg)
+        self.key = key
+        return self
+
+
+def reason_key(why) -> str:
+    """Stable counter key for a gate refusal (``"other"`` for plain
+    strings from older callers)."""
+    return getattr(why, "key", "other")
+
+
+def supported(sc: "Scenario") -> Optional[Refusal]:
     """None if the batched engine reproduces ``sc`` bit-for-bit,
     else the reason it must run on the scalar engine."""
     fl, pol, res, wl = sc.fleet, sc.policy, sc.resilience, sc.workload
     if fl.is_fleet:
-        return "fleet (dispatcher/multi-node) runs through ClusterSim"
+        if fl.topology is not None:
+            return Refusal("topology",
+                           "failure-domain topology attached")
+        if fl.nodes is not None:
+            return Refusal("hetero_nodes",
+                           "heterogeneous per-node policy override")
+        disp = fl.dispatcher if fl.dispatcher is not None \
+            else "least_loaded"
+        if not isinstance(disp, str):
+            return Refusal("fleet_dispatcher",
+                           "fleet dispatcher instance (unreplayable "
+                           "state) runs through ClusterSim")
+        if disp not in REPLAYABLE_DISPATCHERS:
+            return Refusal(
+                "fleet_dispatcher",
+                f"fleet dispatcher {disp!r} is state-aware; runs "
+                f"through ClusterSim")
     if fl.node_factory is not None:
-        return "custom node_factory"
+        return Refusal("node_factory", "custom node_factory")
     if fl.containers is not None:
-        return "container pool attached"
+        return Refusal("containers", "container pool attached")
     if pol.serving is not None:
-        return "serving slot scheduler"
+        return Refusal("serving", "serving slot scheduler")
     if pol.name not in SUPPORTED_POLICIES:
-        return f"policy {pol.name!r} not batched"
+        return Refusal("policy", f"policy {pol.name!r} not batched")
     if pol.microvm or pol.ghost_mode:
-        return "microvm/ghost system-effect model"
+        return Refusal("system_model",
+                       "microvm/ghost system-effect model")
     if pol.adapt_pct is not None or pol.rightsize:
-        return "adaptive time limit / rightsizer"
+        return Refusal("adaptive", "adaptive time limit / rightsizer")
     if pol.n_fifo is not None:
-        # The scalar single-node path reads n_fifo only from pol.kw
-        # (PolicySpec.n_fifo feeds the fleet/serving factories), so
+        # The scalar engine reads n_fifo only from pol.kw on the
+        # single-node path and via a policy node_factory on fleets, so
         # mirroring it here would be guesswork — fall back.
-        return "PolicySpec.n_fifo on the single-node path"
+        return Refusal("n_fifo",
+                       "PolicySpec.n_fifo feeds node factories; the "
+                       "batched path reads kw only")
     if pol.kw:
         if pol.name != "hybrid" or not set(pol.kw) <= _HYBRID_KW:
-            return f"scheduler kwargs {sorted(pol.kw)} not batched"
+            return Refusal("kwargs",
+                           f"scheduler kwargs {sorted(pol.kw)} "
+                           f"not batched")
     if res.chaos is not None or res.admission is not None \
-            or res.prewarm is not None:
-        return "resilience layer (chaos/admission/prewarm)"
+            or res.prewarm is not None or res.retry is not None:
+        return Refusal("resilience",
+                       "resilience layer (chaos/admission/prewarm/"
+                       "retry)")
     if wl.kind not in ("azure", "synthetic", "tasks"):
-        return f"workload kind {wl.kind!r} not batched"
+        return Refusal("workload", f"workload kind {wl.kind!r} "
+                                   f"not batched")
     C = fl.cores_per_node
     if pol.name == "hybrid":
         n_fifo = pol.kw.get("n_fifo", C // 2)
         if not 1 <= n_fifo < C:
-            return "hybrid needs 1 <= n_fifo < n_cores"
+            return Refusal("hybrid_split",
+                           "hybrid needs 1 <= n_fifo < n_cores")
     return None
 
 
-def tasks_supported(tasks) -> Optional[str]:
+def tasks_supported(tasks) -> Optional[Refusal]:
     """Canonical-stream check on a BUILT task list (dynamic half of
     the gate — ``kind='tasks'`` lists are caller-shaped)."""
     prev = float("-inf")
     for i, t in enumerate(tasks):
         if t.tid != i:
-            return "tids must equal list indices"
+            return Refusal("stream_tids", "tids must equal list indices")
         if t.arrival < prev:
-            return "arrivals must be non-decreasing"
+            return Refusal("stream_order",
+                           "arrivals must be non-decreasing")
         prev = t.arrival
         if t.aux_of is not None:
-            return "aux (microvm companion) tasks"
+            return Refusal("aux_tasks", "aux (microvm companion) tasks")
         if t.remaining != t.service:
-            return "partially-run tasks"
+            return Refusal("partial_tasks", "partially-run tasks")
     return None
+
+
+# -- persistent compilation cache ----------------------------------------------
+
+_CACHE_DIR: Optional[str] = None
+
+
+def enable_compile_cache(path: Optional[str] = None) -> Optional[str]:
+    """Opt in to JAX's persistent compilation cache.
+
+    ``path`` wins; otherwise the ``REPRO_MC_COMPILE_CACHE`` env var is
+    consulted.  Returns the active cache directory (None when neither
+    is set — caching stays off, the historical default).  Idempotent:
+    the first enabled directory sticks for the process, matching
+    JAX's own one-shot config.  Compiled (C, N)-bucket programs then
+    survive process restarts, which removes the ~8 s ``jax_cold``
+    penalty from smoke-scale runs (ISSUE 9 satellite).
+    """
+    global _CACHE_DIR
+    if _CACHE_DIR is not None:
+        return _CACHE_DIR
+    path = path or os.environ.get("REPRO_MC_COMPILE_CACHE")
+    if not path:
+        return None
+    import jax
+
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    # Bucket programs compile in ~1 s; without this floor the cache
+    # would skip exactly the programs we want it to keep.
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    _CACHE_DIR = path
+    return path
+
+
+def compile_cache_entries() -> Optional[int]:
+    """Number of entries in the active persistent cache (None when
+    caching is off) — benches diff this across a run to attribute
+    wall-clock to recompiles vs kernel slowdowns."""
+    if _CACHE_DIR is None or not os.path.isdir(_CACHE_DIR):
+        return None
+    return len(os.listdir(_CACHE_DIR))

@@ -1,21 +1,25 @@
 """Batching layer: Scenario cells -> packed arrays -> one device program.
 
 ``run_scenarios`` takes a list of in-regime scenarios (see
-``repro.mc.dispatch.supported``), groups them into (n_cores, padded
-task count) shape buckets, advances each bucket's whole grid in ONE
-vmapped XLA program, then rebuilds ordinary ``Task`` /
-``SimResult`` / ``ScenarioResult`` objects from the output arrays —
-so every downstream consumer (summary schema, cost roll-ups, gate,
-dashboard) reads exactly what the scalar engine would have produced,
-bit-for-bit (DESIGN.md Sec. 16).
+``repro.mc.dispatch.supported``), decomposes each into kernel UNITS —
+a single-node cell is one unit; an admitted flat fleet becomes one
+unit per node, holding the dispatch subsequence its state-oblivious
+dispatcher (round_robin/random) is replayed to in Python — groups
+units into (n_cores, padded task count) shape buckets, advances each
+bucket's whole grid in ONE vmapped XLA program, then rebuilds ordinary
+``Task`` / ``SimResult`` / ``ClusterResult`` / ``ScenarioResult``
+objects from the output arrays — so every downstream consumer (summary
+schema, cost roll-ups, gate, dashboard) reads exactly what the scalar
+engine would have produced, bit-for-bit (DESIGN.md Sec. 16).
 """
 from __future__ import annotations
 
+import random
 from typing import TYPE_CHECKING, Optional, Sequence
 
 import numpy as np
 
-from .dispatch import supported, tasks_supported
+from .dispatch import enable_compile_cache, supported, tasks_supported
 
 if TYPE_CHECKING:
     from ..scenario import Scenario, ScenarioResult
@@ -47,6 +51,57 @@ def cell_params(sc: "Scenario") -> tuple[int, float]:
     return n_fifo, limit
 
 
+def replay_assignments(sc: "Scenario", n_tasks: int) -> list[int]:
+    """Node index per task, in canonical stream order — exact because
+    the admitted dispatchers never observe node state: ``round_robin``
+    is a counter over dispatch order, ``random`` draws once per
+    dispatch from ``random.Random(fleet.seed)``, and the gate's
+    canonical-stream check (tids == indices, arrivals non-decreasing)
+    makes ``ClusterSim``'s (arrival, tid) dispatch order the list
+    order."""
+    name = sc.fleet.dispatcher
+    n = sc.fleet.n_nodes
+    if name == "round_robin":
+        return [k % n for k in range(n_tasks)]
+    if name == "random":
+        rng = random.Random(sc.fleet.seed)
+        return [rng.randrange(n) for _ in range(n_tasks)]
+    raise ValueError(f"dispatcher {name!r} is not replayable")
+
+
+def _fleet_result(sc: "Scenario", tasks, sel: list[int]):
+    """Rebuild the exact ``ClusterResult`` that ``ClusterSim.result()``
+    produces for an in-regime fleet: flat node0..node{n-1} roster,
+    assignments in dispatch order, unit price multipliers, no
+    resilience bookkeeping (all those layers are gate-refused)."""
+    from ..cluster.metrics import ClusterResult
+    from ..core.metrics import SimResult
+
+    fl, pol = sc.fleet, sc.policy
+    n = fl.n_nodes
+    node_ids = [f"node{i}" for i in range(n)]
+    per_node: list[list] = [[] for _ in range(n)]
+    for j, i in enumerate(sel):
+        per_node[i].append(tasks[j])
+    node_results = [
+        SimResult(policy=pol.name, tasks=ts,
+                  total_ctx=sum(t.ctx_switches for t in ts))
+        for ts in per_node]
+    meta = [{"node_id": nid, "zone": None, "rack": None, "sku": None,
+             "spot": False, "price_mult": 1.0, "base_price_mult": 1.0,
+             "spot_discount": 0.0} for nid in node_ids]
+    return ClusterResult(
+        node_results=node_results,
+        node_ids=node_ids,
+        node_policies=[pol.name] * n,
+        dispatcher=fl.dispatcher,
+        cores_per_node=fl.cores_per_node,
+        assignments=[(tasks[j].tid, node_ids[i])
+                     for j, i in enumerate(sel)],
+        node_meta=meta,
+    )
+
+
 def run_scenarios(scenarios: Sequence["Scenario"],
                   prebuilt: Optional[Sequence] = None
                   ) -> list["ScenarioResult"]:
@@ -56,11 +111,17 @@ def run_scenarios(scenarios: Sequence["Scenario"],
     (e.g. ``MonteCarlo`` shares one trace generation across load
     scales); otherwise each ``workload.build()`` runs here. Raises
     ``ValueError`` on out-of-regime scenarios — callers partition
-    with ``dispatch.supported`` first.
+    with ``dispatch.supported`` first.  Each result carries
+    ``mc_stats`` = ``{"iters", "events"}`` (kernel while-loop trips
+    and scheduling events retired for that cell, summed over fleet
+    units) — the algorithmic multi-event win stays visible even where
+    1-core wall-clock hides it.
     """
     from ..core.metrics import SimResult
     from ..scenario import ScenarioResult
     from .kernels import run_grid
+
+    enable_compile_cache()
 
     built = []
     for k, sc in enumerate(scenarios):
@@ -75,48 +136,80 @@ def run_scenarios(scenarios: Sequence["Scenario"],
                              f"({why}); route it to the scalar engine")
         built.append((tasks, meta))
 
+    # Kernel units: (scenario idx, node idx | None, task index list).
+    # Admitted fleets decompose node-by-node — the nodes never
+    # interact once assignments are fixed, so each is an independent
+    # cell batched alongside everything else.
+    units: list[tuple[int, Optional[int], list[int]]] = []
+    fleet_sel: dict[int, list[int]] = {}
+    for k, sc in enumerate(scenarios):
+        n = len(built[k][0])
+        if sc.fleet.is_fleet:
+            sel = replay_assignments(sc, n)
+            fleet_sel[k] = sel
+            for i in range(sc.fleet.n_nodes):
+                idxs = [j for j in range(n) if sel[j] == i]
+                if idxs:          # an empty node needs no kernel cell
+                    units.append((k, i, idxs))
+        else:
+            units.append((k, None, list(range(n))))
+
     # Shape buckets: one compiled program per (C, N) pair.
     groups: dict[tuple[int, int], list[int]] = {}
-    for k, sc in enumerate(scenarios):
-        key = (sc.fleet.cores_per_node, _bucket(len(built[k][0])))
-        groups.setdefault(key, []).append(k)
+    for u, (k, _i, idxs) in enumerate(units):
+        key = (scenarios[k].fleet.cores_per_node, _bucket(len(idxs)))
+        groups.setdefault(key, []).append(u)
 
-    results: list[Optional["ScenarioResult"]] = [None] * len(scenarios)
-    for (C, N), idxs in groups.items():
-        B = len(idxs)
+    iters = [0] * len(scenarios)   # kernel while-loop trips per cell
+    events = [0] * len(scenarios)  # scheduling events retired per cell
+    for (C, N), us in groups.items():
+        B = len(us)
         arrival = np.full((B, N), _INF)
         service = np.full((B, N), 1.0)
         n_tasks = np.zeros(B, np.int32)
         n_fifo = np.zeros(B, np.int32)
         limit = np.zeros(B)
-        for b, k in enumerate(idxs):
+        for b, u in enumerate(us):
+            k, _i, idxs = units[u]
             tasks = built[k][0]
-            n = len(tasks)
-            arrival[b, :n] = [t.arrival for t in tasks]
-            service[b, :n] = [t.service for t in tasks]
-            n_tasks[b] = n
+            arrival[b, :len(idxs)] = [tasks[j].arrival for j in idxs]
+            service[b, :len(idxs)] = [tasks[j].service for j in idxs]
+            n_tasks[b] = len(idxs)
             n_fifo[b], limit[b] = cell_params(scenarios[k])
         out = run_grid(arrival, service, n_tasks, n_fifo, limit,
                        n_cores=C)
         if not bool(np.all(out["ok"])):
-            bad = [idxs[b] for b in range(B) if not out["ok"][b]]
+            bad = sorted({units[us[b]][0] for b in range(B)
+                          if not out["ok"][b]})
             raise RuntimeError(
                 f"batched MC kernel failed to drain cells {bad} "
                 f"(iteration cap hit or tasks left unfinished) — "
                 f"regime bug, please report")
-        for b, k in enumerate(idxs):
-            sc, (tasks, meta) = scenarios[k], built[k]
-            total_ctx = 0
-            for i, task in enumerate(tasks):
-                task.completion = float(out["completion"][b, i])
-                task.first_run = float(out["first_run"][b, i])
-                task.preemptions = int(out["preemptions"][b, i])
-                task.ctx_switches = int(out["ctx_switches"][b, i])
-                task.migrations = int(out["migrations"][b, i])
+        for b, u in enumerate(us):
+            k, _i, idxs = units[u]
+            tasks = built[k][0]
+            for pos, j in enumerate(idxs):
+                task = tasks[j]
+                task.completion = float(out["completion"][b, pos])
+                task.first_run = float(out["first_run"][b, pos])
+                task.preemptions = int(out["preemptions"][b, pos])
+                task.ctx_switches = int(out["ctx_switches"][b, pos])
+                task.migrations = int(out["migrations"][b, pos])
+                task.cpu_time = float(out["cpu_time"][b, pos])
                 task.remaining = 0.0
-                total_ctx += task.ctx_switches
-            raw = SimResult(policy=sc.policy.name, tasks=tasks,
-                            total_ctx=total_ctx)
-            results[k] = ScenarioResult(scenario=sc, raw=raw,
-                                        meta=dict(meta))
+            iters[k] += int(out["n_iters"][b])
+            events[k] += int(out["n_events"][b])
+
+    results: list["ScenarioResult"] = []
+    for k, sc in enumerate(scenarios):
+        tasks, meta = built[k]
+        if sc.fleet.is_fleet:
+            raw = _fleet_result(sc, tasks, fleet_sel[k])
+        else:
+            raw = SimResult(
+                policy=sc.policy.name, tasks=tasks,
+                total_ctx=sum(t.ctx_switches for t in tasks))
+        results.append(ScenarioResult(
+            scenario=sc, raw=raw, meta=dict(meta),
+            mc_stats={"iters": iters[k], "events": events[k]}))
     return results

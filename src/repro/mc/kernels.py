@@ -20,22 +20,44 @@ tie)``: arrivals (klass 0, tid order), hybrid FIFO-core expiries
 migration round-robin, CFS runqueues), and CFS-core expiries (klass 2,
 core-local).  CFS expiries before the next arrival/FIFO barrier are
 INDEPENDENT across cores, so the kernel advances every eligible CFS
-core in one vectorized step, and cycles lone-task cores (empty
-runqueue — the solo regime PR 3's fast-forward batches) in a cheap
-``[C]``-wide inner loop.  Barrier events (arrivals in tid order, the
-minimal FIFO expiry) are then re-serialized exactly as the heap
-would.
+core in one vectorized step — and, since PR 9, retires MANY chunk
+expiries per outer iteration via the Sec. 13 closed forms re-expressed
+as fixed-length ``lax.scan`` batches:
+
+* **cycle engine** — the stable-alternation-cycle fast-forward: when a
+  core's runnable set is small (``<= _CYCLE_K`` members) the pop order
+  is a fixed rotation; a scan walks up to one window of chunks across
+  MULTIPLE rounds, carrying per-member (remaining, vruntime, cpu)
+  accumulators and the end-time left fold, stopping at the first
+  completion, instability, or barrier.  The lone-task solo regime is
+  the ``k == 1`` case of the same engine.
+* **window engine** — PR 4's ``_window_fast_forward`` twin: one full
+  rotation of a deeper runqueue evaluated at once (stability /
+  slice-constancy / bound / completion masks as vector predicates over
+  the chunk axis), completions retired inline, the surviving prefix
+  committed by scatter.
+* **generic advance** — the original one-event expire+pick, kept as
+  the universal fallback: any chunk the batches decline (unstable
+  push, slice change, the completing chunk of a cycle) retires here
+  with identical arithmetic.
+
+Barrier events (arrivals in tid order, the minimal FIFO expiry) are
+then re-serialized exactly as the heap would.
 
 Bit-identity contract: under ``jax_enable_x64`` on the CPU backend
 every float is computed by the SAME operation sequence as the scalar
 engine — the shared pure helpers of ``core/events.py``
 (`chunk_run_ms`, `chunk_end_ms`, `cfs_slice_ms`, `fifo_budget_ms`)
 re-bound to ``jnp.minimum``/``jnp.maximum`` — so per-task digests
-(completion, first_run, preemptions, ctx_switches, migrations) and
-every cost roll-up derived from them match the scalar engine
-bit-for-bit.  XLA's CPU backend does not reassociate or fuse these
-scalar chains (no FMA contraction across the explicit ``(t + ctx) +
-run`` ordering), which the golden equivalence battery pins.
+(completion, first_run, preemptions, ctx_switches, migrations,
+cpu_time) and every cost roll-up derived from them match the scalar
+engine bit-for-bit.  The multi-event batches preserve the contract
+because they only ever retire FULL chunks whose parameters the event
+path would compute identically: end times accumulate through an
+explicit left fold ``e = (e + ctx) + run`` inside ``lax.scan`` —
+NEVER ``cumsum``, which XLA may reassociate — and the only
+associative scans used for predicates are exact ones (integer
+``cumsum`` of completion flags, ``cummax`` of push keys).
 
 A plain-FIFO cell runs as the hybrid machinery with ``n_fifo == C``
 and an infinite budget: ``min(rem, inf) == rem`` and ``max(inf - 0.0,
@@ -46,14 +68,13 @@ cell is ``n_fifo == 0``.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.events import (_EPS, cfs_slice_ms, chunk_end_ms,
-                               chunk_run_ms, fifo_budget_ms)
+from repro.core.events import (_EPS, cfs_slice_ms, chunk_completes,
+                               chunk_end_ms, chunk_run_ms,
+                               fifo_budget_ms)
 
 # Default Linux knobs of the supported regime (see module docstring);
 # the dispatch gate (repro.mc.dispatch) refuses cells that override
@@ -67,9 +88,20 @@ _I32MAX = 2 ** 31 - 1
 
 # Safety valve: an upper bound on outer-loop iterations so a regime
 # bug hangs nothing — the engine checks the `ok` output and raises.
-# Every processed event makes >= min_granularity progress on some
-# task (or completes/queues one), so real cells sit far below this.
 _MAX_ITERS_PER_TASK = 1024
+
+# Multi-event retirement knobs. The cycle engine covers alternation
+# cycles of up to _CYCLE_K members (running task + up to _CYCLE_K - 1
+# queued); both batches retire up to one window of chunks per outer
+# iteration. The window length is the kernel twin of the scalar
+# engine's adaptive 64/256 `Core.ff_w` escalation — under jit shapes
+# are static, so the choice is made per compiled (C, N) bucket (small
+# buckets take the 64-chunk window, deep-queue buckets the 256) rather
+# than per core at runtime.
+_CYCLE_K = 8
+_WINDOW_SMALL = 64
+_WINDOW_DEEP = 256
+_MICRO_STEPS = 8
 
 
 def _sel_tree(pred, new, old):
@@ -88,10 +120,8 @@ def make_cell_kernel(n_cores: int, n_slots: int):
     """
     C, N = n_cores, n_slots
     LAT, GRAN, CTX = SCHED_LATENCY_MS, MIN_GRANULARITY_MS, CTX_SWITCH_MS
-    # The solo regime picks with an empty runqueue: nr_running == 0
-    # after the pop, so the slice is the full target latency. Computed
-    # through the SAME shared helper the scalar engine uses.
-    SOLO_SLICE = cfs_slice_ms(0, LAT, GRAN)
+    KC = _CYCLE_K
+    W = _WINDOW_SMALL if N <= 128 else _WINDOW_DEEP
 
     cids = jnp.arange(C, dtype=jnp.int32)
 
@@ -111,6 +141,7 @@ def make_cell_kernel(n_cores: int, n_slots: int):
             # per-task
             rem=service,
             vr=jnp.zeros(N),
+            cpu=jnp.zeros(N),
             seq=jnp.zeros(N, jnp.int32),
             qcore=jnp.zeros(N, jnp.int32),
             stat=jnp.zeros(N, jnp.int32),   # 0 unarrived, 1 fifo-q,
@@ -133,6 +164,7 @@ def make_cell_kernel(n_cores: int, n_slots: int):
             rr=jnp.int32(0),
             rrc=jnp.int32(0),
             it=jnp.int32(0),
+            ev=jnp.int32(0),
         )
 
         def t_arr(st):
@@ -147,6 +179,28 @@ def make_cell_kernel(n_cores: int, n_slots: int):
             tmin = jnp.min(e)
             fcid = jnp.argmax(busy & (e == tmin)).astype(jnp.int32)
             return tmin, fcid, jnp.any(busy)
+
+        def bb(e, ta, tf, fcid):
+            """Strictly-before-barrier test for a CFS expiry at ``e``
+            (heap order: arrivals win ties, FIFO expiries tie-break on
+            core id). Accepts [C] or [C, W] expiry arrays."""
+            cw = cids < fcid
+            if e.ndim == 2:
+                cw = cw[:, None]
+            return (e < ta) & ((e < tf) | ((e == tf) & cw))
+
+        def rotation(st):
+            """Per-core runqueue pop order: queued tasks sorted by
+            (vruntime, seq) — two stable argsorts == lexsort. [C, N]
+            task indices; entries past ``rqn[c]`` are padding."""
+            member = (st["stat"][None, :] == 2) & \
+                (st["qcore"][None, :] == cids[:, None])
+            skey = jnp.where(member, st["seq"][None, :], _I32MAX)
+            p1 = jnp.argsort(skey, axis=1, stable=True)
+            vkey = jnp.where(member, st["vr"][None, :], _INF)
+            vg = jnp.take_along_axis(vkey, p1, axis=1)
+            p2 = jnp.argsort(vg, axis=1, stable=True)
+            return jnp.take_along_axis(p1, p2, axis=1).astype(jnp.int32)
 
         # -- shared pick machinery ------------------------------------
         def cfs_pick_start(st, pickm, t_c, ctx_ref):
@@ -195,77 +249,260 @@ def make_cell_kernel(n_cores: int, n_slots: int):
                         end=jnp.where(pickm, nend, st["end"]),
                         clen=jnp.where(pickm, run, st["clen"])), pickm
 
-        # -- step 1: solo fast path -----------------------------------
-        # A CFS core running its only task (empty rq) cycles
-        # slice-expiry -> push -> pop(self) -> start with no shared
-        # reads: batch those rounds in a [C]-wide inner loop, bounded
-        # by the SAME barrier the eligibility test uses.
-        def solo_loop(st, ta, tf, fcid):
-            def before_barrier(e):
-                return (e < ta) & ((e < tf) | ((e == tf) & (cids < fcid)))
-
+        # -- step 1: stable-alternation-cycle fast-forward ------------
+        # A CFS core whose runnable set is small (k = rqn + 1 <= KC
+        # members) pops in a FIXED rotation while every pushback lands
+        # at the queue tail: slice-expiry -> push -> pop(next) -> start
+        # repeats with no shared reads.  One fixed-length lax.scan
+        # walks up to W chunks across MULTIPLE rounds, carrying the
+        # per-member accumulators in [C, KC] slots and the end time as
+        # an explicit left fold e = (e + ctx) + run (never cumsum).
+        # It stops at the first would-be completion, unstable push, or
+        # barrier; the chunk left in flight retires via the window or
+        # generic paths with identical arithmetic.  k == 1 is the solo
+        # regime of PR 3's fast-forward (ctx == 0, slice == latency).
+        def cycle_ff(st, ta, tf, fcid, rot):
             cur, rqn = st["cur"], st["rqn"]
-            act0 = (~is_fifo) & (cur >= 0) & (rqn == 0) & \
-                before_barrier(st["end"])
-            tid = jnp.where(cur >= 0, cur, 0)
-            lane0 = dict(
-                act=act0, any=act0,
-                t=st["end"], L=st["clen"],
-                r=st["rem"][tid], v=st["vr"][tid],
-                mv=st["minvr"],
-                np=jnp.zeros(C, jnp.int32), sq=jnp.zeros(C, jnp.int32),
-                done=jnp.zeros(C, bool), ct=jnp.zeros(C),
+            act0 = (~is_fifo) & (cur >= 0) & (rqn + 1 <= KC) & \
+                bb(st["end"], ta, tf, fcid)
+            jj = jnp.arange(KC, dtype=jnp.int32)[None, :]
+            idx = jnp.concatenate([cur[:, None], rot[:, :KC - 1]], axis=1)
+            valid = act0[:, None] & (jj < (rqn + 1)[:, None])
+            idx = jnp.where(valid, idx, N)
+            safe = jnp.minimum(idx, N - 1)
+            # Members never complete inside the batch, so the queue
+            # size — and with it the slice and the ctx charge — is
+            # invariant across the whole scan.
+            s = cfs_slice_ms(rqn, LAT, GRAN, _max=jnp.maximum)
+            ctx = jnp.where(rqn > 0, CTX, 0.0)
+            kk = jnp.maximum(rqn + 1, 1)
+            fr0 = st["fr"][safe]
+            cy = dict(
+                e=st["end"], L=st["clen"], m=jnp.zeros(C, jnp.int32),
+                rem=st["rem"][safe], vr=st["vr"][safe],
+                # Seed with the live totals: each fire then does ONE
+                # left-chained `cpu + L` exactly like the scalar
+                # `task.cpu_time += chunk_len` (a zero-seeded subtotal
+                # scatter-added later would reassociate the chain).
+                cpu=st["cpu"][safe],
+                np=jnp.zeros((C, KC), jnp.int32),
+                nctx=jnp.zeros((C, KC), jnp.int32),
+                sq=jnp.full((C, KC), -1, jnp.int32),
+                frv=fr0, frs=~jnp.isnan(fr0),
+                mv=st["minvr"], alive=act0, c=jnp.zeros(C, jnp.int32),
             )
 
-            def body(ln):
-                r2 = ln["r"] - ln["L"]
-                d = r2 <= _EPS
-                v2 = ln["v"] + ln["L"]
-                mv2 = jnp.maximum(ln["mv"], v2)
-                run = chunk_run_ms(r2, SOLO_SLICE,
-                                   _min=jnp.minimum, _max=jnp.maximum)
-                # ctx == 0.0: the core keeps its own task.
-                t2 = chunk_end_ms(ln["t"], 0.0, run)
-                cont = ln["act"] & ~d & before_barrier(t2)
-                a = ln["act"]
-                nd = a & d
-                adv = a & ~d
+            def step(cy, _):
+                e, L, m = cy["e"], cy["L"], cy["m"]
+                onem = jj == m[:, None]
+                r0 = jnp.take_along_axis(cy["rem"], m[:, None], 1)[:, 0]
+                v0 = jnp.take_along_axis(cy["vr"], m[:, None], 1)[:, 0]
+                r2 = r0 - L
+                v2 = v0 + L
+                # Stability: the pushback must land at the tail — at
+                # or after every queued member's key (the push's seq is
+                # fresher, so an equal vruntime still sorts after).
+                qmax = jnp.max(jnp.where(valid & ~onem, cy["vr"], -_INF),
+                               axis=1)
+                fire = cy["alive"] & (r2 > _EPS) & (v2 >= qmax) & \
+                    bb(e, ta, tf, fcid)
+                fm = fire[:, None] & onem
+                rem_u = jnp.where(fm, r2[:, None], cy["rem"])
+                vr_u = jnp.where(fm, v2[:, None], cy["vr"])
+                m2 = (m + 1) % kk
+                onem2 = jj == m2[:, None]
+                fm2 = fire[:, None] & onem2
+                r_n = jnp.take_along_axis(rem_u, m2[:, None], 1)[:, 0]
+                v_pop = jnp.take_along_axis(vr_u, m2[:, None], 1)[:, 0]
+                run2 = chunk_run_ms(r_n, s, _min=jnp.minimum,
+                                    _max=jnp.maximum)
+                e2 = chunk_end_ms(e, ctx, run2)    # the left fold
+                stamp = fm2 & ~cy["frs"]
                 return dict(
-                    act=cont, any=ln["any"] | a,
-                    t=jnp.where(adv, t2, ln["t"]),
-                    L=jnp.where(adv, run, ln["L"]),
-                    r=jnp.where(a, jnp.where(d, 0.0, r2), ln["r"]),
-                    v=jnp.where(adv, v2, ln["v"]),
-                    mv=jnp.where(adv, mv2, ln["mv"]),
-                    np=ln["np"] + adv.astype(jnp.int32),
-                    sq=ln["sq"] + adv.astype(jnp.int32),
-                    done=ln["done"] | nd,
-                    ct=jnp.where(nd, ln["t"], ln["ct"]),
-                )
+                    e=jnp.where(fire, e2, e),
+                    L=jnp.where(fire, run2, L),
+                    m=jnp.where(fire, m2, m),
+                    rem=rem_u, vr=vr_u,
+                    cpu=jnp.where(fm, cy["cpu"] + L[:, None], cy["cpu"]),
+                    np=cy["np"] + fm.astype(jnp.int32),
+                    nctx=cy["nctx"] +
+                        (fm2 & (ctx > 0.0)[:, None]).astype(jnp.int32),
+                    sq=jnp.where(fm, cy["c"][:, None], cy["sq"]),
+                    frv=jnp.where(stamp, e[:, None], cy["frv"]),
+                    frs=cy["frs"] | fm2,
+                    mv=jnp.where(fire, jnp.maximum(cy["mv"], v_pop),
+                                 cy["mv"]),
+                    alive=fire,
+                    c=cy["c"] + fire.astype(jnp.int32),
+                ), None
 
-            ln = lax.while_loop(lambda ln: jnp.any(ln["act"]), body, lane0)
+            cy, _ = lax.scan(step, cy, None, length=W, unroll=8)
 
-            touched = ln["any"]
-            sidx = jnp.where(touched, tid, N)
-            didx = jnp.where(ln["done"], tid, N)
+            did = act0 & (cy["c"] >= 1)
+            vc = valid & did[:, None]
+            tgt = jnp.where(vc, idx, N).reshape(-1)
+            m_f = cy["m"]
+            cur2 = jnp.take_along_axis(idx, m_f[:, None], 1)[:, 0]
+            last2 = jnp.take_along_axis(idx, ((m_f - 1) % kk)[:, None],
+                                        1)[:, 0]
+            pushed = vc & (cy["sq"] >= 0)
             return dict(
                 st,
-                rem=st["rem"].at[sidx].set(ln["r"], mode="drop"),
-                vr=st["vr"].at[sidx].set(ln["v"], mode="drop"),
-                npre=st["npre"].at[sidx].add(ln["np"], mode="drop"),
-                comp=st["comp"].at[didx].set(ln["ct"], mode="drop"),
-                stat=st["stat"].at[didx].set(4, mode="drop"),
-                minvr=jnp.where(touched, ln["mv"], st["minvr"]),
-                seqc=st["seqc"] + ln["sq"],
-                last=jnp.where(touched, tid, st["last"]),
-                cur=jnp.where(ln["done"], -1, st["cur"]),
-                end=jnp.where(ln["done"], _INF,
-                              jnp.where(touched, ln["t"], st["end"])),
-                clen=jnp.where(ln["done"], 0.0,
-                               jnp.where(touched, ln["L"], st["clen"])),
-            )
+                rem=st["rem"].at[tgt].set(cy["rem"].reshape(-1),
+                                          mode="drop"),
+                vr=st["vr"].at[tgt].set(cy["vr"].reshape(-1),
+                                        mode="drop"),
+                cpu=st["cpu"].at[tgt].set(cy["cpu"].reshape(-1),
+                                          mode="drop"),
+                npre=st["npre"].at[tgt].add(cy["np"].reshape(-1),
+                                            mode="drop"),
+                nctx=st["nctx"].at[tgt].add(cy["nctx"].reshape(-1),
+                                            mode="drop"),
+                fr=st["fr"].at[tgt].set(cy["frv"].reshape(-1),
+                                        mode="drop"),
+                seq=st["seq"].at[
+                    jnp.where(pushed, idx, N).reshape(-1)
+                ].set((st["seqc"][:, None] + cy["sq"]).reshape(-1),
+                      mode="drop"),
+                stat=st["stat"].at[tgt].set(2, mode="drop")
+                    .at[jnp.where(did, cur2, N)].set(3, mode="drop"),
+                cur=jnp.where(did, cur2, st["cur"]),
+                last=jnp.where(did, last2, st["last"]),
+                end=jnp.where(did, cy["e"], st["end"]),
+                clen=jnp.where(did, cy["L"], st["clen"]),
+                minvr=jnp.where(did, cy["mv"], st["minvr"]),
+                seqc=st["seqc"] + jnp.where(did, cy["c"], 0),
+                ev=st["ev"] + jnp.sum(jnp.where(did, cy["c"], 0),
+                      dtype=jnp.int32),
+            ), did
 
-        # -- step 2: vectorized CFS expiries --------------------------
+        # -- step 2: windowed rotation retirement ---------------------
+        # PR 4's `_window_fast_forward` twin: evaluate ONE rotation of
+        # a core's runqueue (up to W chunks) at once. Chunk 0 is the
+        # in-flight chunk; chunk i >= 1 pops rotation[i - 1]. All
+        # masks are vector predicates over the chunk axis; only the
+        # end-time chain is sequential (explicit lax.scan left fold).
+        # Completions retire inline; the integer cumsum of completion
+        # flags and the cummax of push keys are the ONLY associative
+        # scans (both exact under reassociation).
+        def window_ff(st, elig, ta, tf, fcid, rot):
+            k1 = st["rqn"]
+            winm = elig & (k1 >= 1)
+            cur = st["cur"]
+            ii = jnp.arange(W + 1, dtype=jnp.int32)[None, :]
+            u = jnp.concatenate([jnp.where(winm, cur, N)[:, None],
+                                 rot[:, :W]], axis=1)       # [C, W+1]
+            uvalid = winm[:, None] & (ii <= k1[:, None])
+            u = jnp.where(uvalid, u, N)
+            su = jnp.minimum(u, N - 1)
+            rem0 = st["rem"][su]
+            vr0 = st["vr"][su]
+            fr0 = st["fr"][su]
+            s = cfs_slice_ms(k1, LAT, GRAN, _max=jnp.maximum)
+            runs = chunk_run_ms(rem0, s[:, None], _min=jnp.minimum,
+                                _max=jnp.maximum)
+            runs = jnp.where(ii == 0, st["clen"][:, None], runs)
+            comp = chunk_completes(rem0, runs)
+            cum = jnp.cumsum(comp.astype(jnp.int32), axis=1)
+            cumx = jnp.concatenate(
+                [jnp.zeros((C, 1), jnp.int32), cum[:, :-1]], axis=1)
+            # slice at chunk i's pick: queue holds k1 - (completions
+            # among chunks < i) entries after the pop.
+            s_i = cfs_slice_ms(k1[:, None] - cumx, LAT, GRAN,
+                               _max=jnp.maximum)
+            slice_ok = (s_i == s[:, None]) | (ii == 0)
+            pushed = vr0 + runs
+            # Stability: a non-completing pushback must land at the
+            # tail — at/after the deepest original key and every
+            # earlier in-window push (exact cummax).
+            pkey = jnp.where(comp, -_INF, pushed)
+            # Deepest original key: rotation is sorted, so the last
+            # queue entry (possibly beyond the window) carries it.
+            tail_tid = jnp.take_along_axis(
+                rot, jnp.maximum(k1 - 1, 0)[:, None], 1)[:, 0]
+            tail0 = st["vr"][tail_tid]
+            prior = jnp.concatenate(
+                [tail0[:, None],
+                 jnp.maximum(tail0[:, None],
+                             lax.cummax(pkey, axis=1)[:, :-1])], axis=1)
+            stab = pushed >= prior
+
+            def estep(e, run_col):
+                e2 = chunk_end_ms(e, CTX, run_col)
+                return e2, e2
+
+            _, etail = lax.scan(estep, st["end"], runs[:, 1:].T,
+                                unroll=8)
+            E = jnp.concatenate([st["end"][:, None], etail.T], axis=1)
+            ok = uvalid & (ii < k1[:, None]) & (ii < W) & \
+                bb(E, ta, tf, fcid) & slice_ok & (comp | stab)
+            c = jnp.argmax(~ok, axis=1).astype(jnp.int32)
+            did = winm & (c >= 1)
+
+            cm = c[:, None]
+            Ec1 = jnp.take_along_axis(E, jnp.maximum(cm - 1, 0), 1)[:, 0]
+            cumc = jnp.take_along_axis(cumx, cm, 1)[:, 0]
+            s_c = jnp.take_along_axis(s_i, cm, 1)[:, 0]
+            rem_c = jnp.take_along_axis(rem0, cm, 1)[:, 0]
+            run_c = chunk_run_ms(rem_c, s_c, _min=jnp.minimum,
+                                 _max=jnp.maximum)
+            end_c = chunk_end_ms(Ec1, CTX, run_c)
+            u_c = jnp.take_along_axis(u, cm, 1)[:, 0]
+            u_cp = jnp.take_along_axis(u, jnp.maximum(cm - 1, 0),
+                                       1)[:, 0]
+            vr0_c = jnp.take_along_axis(vr0, cm, 1)[:, 0]
+
+            R = winm[:, None] & (ii < cm)          # retired chunks
+            Rc = R & comp
+            Rp = R & ~comp
+            tR = jnp.where(R, u, N).reshape(-1)
+            tRc = jnp.where(Rc, u, N).reshape(-1)
+            tRp = jnp.where(Rp, u, N).reshape(-1)
+            # picks: chunks 1..c start at the previous chunk's end;
+            # rotation members are pairwise distinct and distinct from
+            # the chunk-0 task, so every pick charges a ctx switch.
+            P = winm[:, None] & (ii >= 1) & (ii <= cm)
+            Eprev = jnp.concatenate([jnp.zeros((C, 1)), E[:, :-1]],
+                                    axis=1)
+            tfr = jnp.where(P & jnp.isnan(fr0), u, N).reshape(-1)
+            tP = jnp.where(P, u, N).reshape(-1)
+            pushseq = st["seqc"][:, None] + (ii - cumx)
+
+            st2 = dict(
+                st,
+                rem=st["rem"].at[tR].set(
+                    jnp.where(comp, 0.0, rem0 - runs).reshape(-1),
+                    mode="drop"),
+                cpu=st["cpu"].at[tR].add(runs.reshape(-1), mode="drop"),
+                comp=st["comp"].at[tRc].set(E.reshape(-1), mode="drop"),
+                vr=st["vr"].at[tRp].set(pushed.reshape(-1), mode="drop"),
+                npre=st["npre"].at[tRp].add(1, mode="drop"),
+                seq=st["seq"].at[tRp].set(pushseq.reshape(-1),
+                                          mode="drop"),
+                qcore=st["qcore"].at[tRp].set(
+                    jnp.broadcast_to(cids[:, None], (C, W + 1)
+                                     ).reshape(-1), mode="drop"),
+                fr=st["fr"].at[tfr].set(Eprev.reshape(-1), mode="drop"),
+                nctx=st["nctx"].at[tP].add(1, mode="drop"),
+                stat=st["stat"].at[tRp].set(2, mode="drop")
+                    .at[tRc].set(4, mode="drop")
+                    .at[jnp.where(did, u_c, N)].set(3, mode="drop"),
+                cur=jnp.where(did, u_c, st["cur"]),
+                last=jnp.where(did, u_cp, st["last"]),
+                end=jnp.where(did, end_c, st["end"]),
+                clen=jnp.where(did, run_c, st["clen"]),
+                # pops ratchet min_vruntime through nondecreasing keys:
+                # the iterated max equals one max against the last pop.
+                minvr=jnp.where(did,
+                                jnp.maximum(st["minvr"], vr0_c),
+                                st["minvr"]),
+                seqc=st["seqc"] + jnp.where(did, c - cumc, 0),
+                rqn=jnp.where(did, k1 - cumc, st["rqn"]),
+                ev=st["ev"] + jnp.sum(jnp.where(did, c, 0), dtype=jnp.int32),
+            )
+            return st2, did
+
+        # -- step 3: generic one-event CFS advance --------------------
         def cfs_advance(st, elig):
             """Advance every eligible CFS core one event: expire the
             in-flight chunk (complete or vruntime-charge + rq_push),
@@ -276,7 +513,7 @@ def make_cell_kernel(n_cores: int, n_slots: int):
             sidx = jnp.where(elig, cur, N)
             t_c, L = st["end"], st["clen"]
             rem2 = st["rem"][tid] - L
-            d = rem2 <= _EPS
+            d = chunk_completes(st["rem"][tid], L)  # rem2 <= _EPS, shared form
             pb = elig & ~d                      # pushback (chunk limit)
             de = elig & d                       # completion
             pidx = jnp.where(pb, cur, N)
@@ -285,6 +522,7 @@ def make_cell_kernel(n_cores: int, n_slots: int):
                 st,
                 rem=st["rem"].at[sidx].set(jnp.where(d, 0.0, rem2),
                                            mode="drop"),
+                cpu=st["cpu"].at[sidx].add(L, mode="drop"),
                 comp=st["comp"].at[jnp.where(de, cur, N)].set(t_c,
                                                               mode="drop"),
                 vr=st["vr"].at[pidx].set(vr2, mode="drop"),
@@ -301,25 +539,28 @@ def make_cell_kernel(n_cores: int, n_slots: int):
                 # leaves the core idle (restored below if it picks).
                 end=jnp.where(elig, _INF, st["end"]),
                 clen=jnp.where(elig, 0.0, st["clen"]),
+                ev=st["ev"] + jnp.sum(elig, dtype=jnp.int32),
             )
             picked, _ = cfs_pick_start(st, elig, t_c, st["last"])
             return picked
 
-        # -- step 3: the minimal FIFO-group expiry --------------------
+        # -- step 4: the minimal FIFO-group expiry --------------------
         def fifo_advance(st, fcid, t_f):
             c = fcid
             cur = st["cur"][c]
             tid = jnp.where(cur >= 0, cur, 0)
             L = st["clen"][c]
             rem2 = st["rem"][tid] - L
-            d = rem2 <= _EPS
+            d = chunk_completes(st["rem"][tid], L)  # rem2 <= _EPS, shared form
             st = dict(
                 st,
                 rem=st["rem"].at[tid].set(jnp.where(d, 0.0, rem2)),
+                cpu=st["cpu"].at[tid].add(L),
                 comp=jnp.where(d, st["comp"].at[tid].set(t_f), st["comp"]),
                 stat=jnp.where(d, st["stat"].at[tid].set(4), st["stat"]),
                 last=st["last"].at[c].set(cur),
                 cur=st["cur"].at[c].set(-1),
+                ev=st["ev"] + 1,
             )
             # -- budget expiry: migrate to a CFS core, round robin ----
             mig = ~d
@@ -370,10 +611,10 @@ def make_cell_kernel(n_cores: int, n_slots: int):
             )
             return _sel_tree(anyq, started, st)
 
-        # -- step 4: one arrival --------------------------------------
+        # -- step 5: one arrival --------------------------------------
         def arrival_step(st, ta):
             tid = jnp.minimum(st["ptr"], N - 1)
-            st = dict(st, ptr=st["ptr"] + 1)
+            st = dict(st, ptr=st["ptr"] + 1, ev=st["ev"] + 1)
 
             # hybrid / plain-fifo routing: global FIFO queue + first
             # idle FIFO core (idle_core scans in cid order).
@@ -428,6 +669,24 @@ def make_cell_kernel(n_cores: int, n_slots: int):
 
             return _sel_tree(n_fifo > 0, st_f, st_c)
 
+        # -- one-event micro step (PR 7's whole body): barriers, then
+        # exactly one of {generic CFS advance on all eligible cores,
+        # earliest FIFO expiry, next arrival}. No rotation, no scan.
+        def micro(st):
+            ta = t_arr(st)
+            tf, fcid, anyf = fifo_candidate(st)
+            elig = (~is_fifo) & (st["cur"] >= 0) & \
+                bb(st["end"], ta, tf, fcid)
+            any_cfs = jnp.any(elig)
+            do_f = anyf & ~any_cfs & (tf < ta)
+            do_a = ~any_cfs & ~do_f & (st["ptr"] < n_tasks)
+            st_cfs = cfs_advance(st, elig)
+            st_fifo = fifo_advance(st, fcid, tf)
+            st_arr = arrival_step(st, ta)
+            return _sel_tree(
+                any_cfs, st_cfs,
+                _sel_tree(do_f, st_fifo, _sel_tree(do_a, st_arr, st)))
+
         # -- outer loop ------------------------------------------------
         max_it = jnp.int32(_MAX_ITERS_PER_TASK) * \
             jnp.maximum(n_tasks, 1) + 64
@@ -440,22 +699,39 @@ def make_cell_kernel(n_cores: int, n_slots: int):
             st = dict(st, it=st["it"] + 1)
             ta = t_arr(st)
             tf, fcid, _ = fifo_candidate(st)
-            st = solo_loop(st, ta, tf, fcid)
+            # ONE rotation serves both engines: the cycle commits task
+            # state only on the cores it fires, so the pre-cycle rows
+            # of every unfired core are still the exact pop order the
+            # window needs (fired-but-still-eligible cores fall to the
+            # rotation-free generic advance this iteration).
+            rot = rotation(st)
+            st, cdid = cycle_ff(st, ta, tf, fcid, rot)
 
             tf, fcid, anyf = fifo_candidate(st)
             e = st["end"]
-            elig = (~is_fifo) & (st["cur"] >= 0) & (e < ta) & \
-                ((e < tf) | ((e == tf) & (cids < fcid)))
+            elig = (~is_fifo) & (st["cur"] >= 0) & bb(e, ta, tf, fcid)
             any_cfs = jnp.any(elig)
             do_f = anyf & ~any_cfs & (tf < ta)
             do_a = ~any_cfs & ~do_f & (st["ptr"] < n_tasks)
 
-            st_cfs = cfs_advance(st, elig)
+            st_w, handled = window_ff(st, elig & ~cdid, ta, tf, fcid,
+                                      rot)
+            st_cfs = cfs_advance(st_w, elig & ~handled)
             st_fifo = fifo_advance(st, fcid, tf)
             st_arr = arrival_step(st, ta)
-            return _sel_tree(
+            stn = _sel_tree(
                 any_cfs, st_cfs,
                 _sel_tree(do_f, st_fifo, _sel_tree(do_a, st_arr, st)))
+
+            # Micro-step chain: the sparse phases (arrival interleave,
+            # FIFO expiries, unstable pushes) advance one event at a
+            # time; retiring a handful of them per while-loop trip with
+            # the sort-free one-event machinery amortizes the fixed
+            # per-iteration cost (rotation sorts, cycle/window scans,
+            # state selects) over several events.
+            stn = lax.fori_loop(0, _MICRO_STEPS,
+                                lambda _, s: micro(s), stn)
+            return stn
 
         out = lax.while_loop(cond, body, st)
         live = jnp.arange(N) < n_tasks
@@ -463,7 +739,8 @@ def make_cell_kernel(n_cores: int, n_slots: int):
             (out["it"] < max_it)
         return dict(completion=out["comp"], first_run=out["fr"],
                     preemptions=out["npre"], ctx_switches=out["nctx"],
-                    migrations=out["nmig"], ok=ok, n_iters=out["it"])
+                    migrations=out["nmig"], cpu_time=out["cpu"],
+                    ok=ok, n_iters=out["it"], n_events=out["ev"])
 
     return kernel
 

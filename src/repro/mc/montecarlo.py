@@ -17,7 +17,8 @@ from dataclasses import dataclass, field, replace
 from typing import TYPE_CHECKING, Optional, Sequence
 
 from ..traces.azure import TraceSpec
-from .dispatch import supported, tasks_supported
+from .dispatch import (enable_compile_cache, reason_key, supported,
+                       tasks_supported)
 
 if TYPE_CHECKING:
     from ..scenario import Scenario, ScenarioResult
@@ -29,6 +30,10 @@ class MonteCarloResult:
     seeds: tuple
     loads: tuple
     meta: dict = field(default_factory=dict)
+    # Per-cell gate refusal keys, aligned with ``results``: None for
+    # batched cells, a stable counter key (see ``dispatch.Refusal``)
+    # for cells the gate demoted, "forced" under backend="python".
+    reasons: tuple = ()
 
     @property
     def rows(self) -> list[dict]:
@@ -39,6 +44,12 @@ class MonteCarloResult:
                 r = self.results[k]
                 row = dict(seed=seed, load_scale=load,
                            backend=self.meta["backends"][k])
+                why = self.reasons[k] if self.reasons else None
+                if why is not None and why != "forced":
+                    # Only genuine gate demotions are annotated — a
+                    # forced scalar baseline must stay row-identical
+                    # to its batched twin (the equivalence contract).
+                    row["fallback_reason"] = why
                 row.update(r.summary())
                 out.append(row)
                 k += 1
@@ -61,6 +72,10 @@ class MonteCarlo:
     seeds: Sequence[int] = (0,)
     loads: Sequence[float] = (1.0,)
     backend: str = "jax"
+    # Opt-in persistent XLA compilation cache directory (also settable
+    # process-wide via the REPRO_MC_COMPILE_CACHE env var): compiled
+    # bucket programs survive restarts, removing the jax_cold penalty.
+    compile_cache_dir: Optional[str] = None
 
     def cells(self) -> list["Scenario"]:
         wl = self.scenario.workload
@@ -84,14 +99,18 @@ class MonteCarlo:
         cells = self.cells()
         backends = []
         use_jax = []
+        reasons: list[Optional[str]] = []
         if self.backend == "jax":
+            enable_compile_cache(self.compile_cache_dir)
             for sc in cells:
-                ok = supported(sc) is None
-                use_jax.append(ok)
-                backends.append("jax" if ok else "python")
+                why = supported(sc)
+                use_jax.append(why is None)
+                backends.append("jax" if why is None else "python")
+                reasons.append(None if why is None else reason_key(why))
         elif self.backend == "python":
             use_jax = [False] * len(cells)
             backends = ["python"] * len(cells)
+            reasons = ["forced"] * len(cells)
         else:
             raise ValueError(f"unknown backend {self.backend!r}")
 
@@ -105,11 +124,13 @@ class MonteCarlo:
             # A caller-shaped task stream can still force a fallback.
             keep = []
             for j, k in enumerate(jax_idx):
-                if tasks_supported(prebuilt[j][0]) is None:
+                why = tasks_supported(prebuilt[j][0])
+                if why is None:
                     keep.append(j)
                 else:
                     use_jax[k] = False
                     backends[k] = "python"
+                    reasons[k] = reason_key(why)
             jax_idx = [jax_idx[j] for j in keep]
             prebuilt = [prebuilt[j] for j in keep]
         if jax_idx:
@@ -121,8 +142,14 @@ class MonteCarlo:
             if results[k] is None:
                 results[k] = run_scalar(sc)
 
+        counts: dict[str, int] = {}
+        for why in reasons:
+            if why is not None:
+                counts[why] = counts.get(why, 0) + 1
         return MonteCarloResult(
             results=results, seeds=tuple(self.seeds),
             loads=tuple(self.loads),
             meta={"backends": backends,
-                  "fallback": sum(b == "python" for b in backends)})
+                  "fallback": sum(b == "python" for b in backends),
+                  "fallback_reasons": counts},
+            reasons=tuple(reasons))

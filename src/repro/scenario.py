@@ -244,6 +244,11 @@ class ScenarioResult:
     scenario: Scenario
     raw: Union[SimResult, ClusterResult]
     meta: dict = field(default_factory=dict)
+    # Batched-engine accounting (repro.mc): kernel while-loop trips and
+    # scheduling events retired for this cell. Diagnostics only — NEVER
+    # part of the v1 summary schema, so scalar and batched summaries
+    # stay byte-identical.
+    mc_stats: Optional[dict] = None
 
     @property
     def n_requests(self) -> int:

@@ -51,11 +51,39 @@ def assert_bit_identical(sc):
 
 # -- fast tier: the static regime gate -----------------------------------------
 
+def _fleet_scenario(policy, dispatcher, n_nodes=3, n_cores=4,
+                    trace=SMOKE_TRACE, seed=5, **kw):
+    return Scenario(
+        workload=WorkloadSpec(kind="azure", trace=trace),
+        fleet=FleetSpec(n_nodes=n_nodes, cores_per_node=n_cores,
+                        dispatcher=dispatcher, seed=seed),
+        policy=PolicySpec(name=policy, kw=kw))
+
+
 def test_gate_accepts_the_batched_regime():
     for policy in ("fifo", "cfs", "hybrid"):
         assert supported(_scenario(policy)) is None
     assert supported(_scenario("hybrid", n_fifo=1,
                                time_limit_ms=500.0)) is None
+
+
+def test_gate_accepts_replayable_flat_fleets():
+    """ISSUE 9: state-oblivious dispatchers decompose into independent
+    per-node cells, so flat round_robin/random fleets are in-regime."""
+    for disp in ("round_robin", "random"):
+        for policy in ("fifo", "cfs", "hybrid"):
+            assert supported(_fleet_scenario(policy, disp)) is None
+
+
+def test_gate_refusals_carry_stable_counter_keys():
+    from repro.mc.dispatch import reason_key
+    why = supported(replace(
+        _scenario("cfs"),
+        fleet=FleetSpec(cores_per_node=4, containers="fixed")))
+    assert reason_key(why) == "containers"
+    why = supported(_fleet_scenario("cfs", "least_loaded"))
+    assert reason_key(why) == "fleet_dispatcher"
+    assert reason_key("a plain string") == "other"
 
 
 @pytest.mark.parametrize("sc, why", [
@@ -190,7 +218,9 @@ def test_montecarlo_mixed_grid_falls_back_transparently():
     sc = replace(_scenario("cfs"),
                  fleet=FleetSpec(cores_per_node=4, containers="fixed"))
     out = MonteCarlo(sc, seeds=(0,), loads=(1.0,), backend="jax").run()
-    assert out.meta == {"backends": ["python"], "fallback": 1}
+    assert out.meta == {"backends": ["python"], "fallback": 1,
+                        "fallback_reasons": {"containers": 1}}
+    assert out.rows[0]["fallback_reason"] == "containers"
     assert out.rows[0]["n"] > 0
 
 
@@ -205,6 +235,43 @@ def test_sweep_backend_parity():
     assert [r["backend"] for r in jx] == ["jax"] * len(jx)
     strip = lambda r: {k: v for k, v in r.items() if k != "backend"}
     assert [strip(r) for r in jx] == [strip(r) for r in py]
+
+
+# -- slow tier: the newly-admitted fleet class (ISSUE 9) -----------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dispatcher", ["round_robin", "random"])
+@pytest.mark.parametrize("policy", ["fifo", "cfs", "hybrid"])
+def test_fleet_golden_battery(policy, dispatcher):
+    """Flat replayable fleets: the batched engine must rebuild the
+    exact ClusterResult ClusterSim produces — canonical task digest,
+    summary roll-up, AND the dispatch bookkeeping (assignments,
+    roster) bit-for-bit."""
+    from repro.mc.engine import run_scenarios
+    trace = TraceSpec(minutes=1, invocations_per_min=120.0,
+                      n_functions=10, seed=1)
+    sc = _fleet_scenario(policy, dispatcher, trace=trace)
+    scalar = repro.run(sc)
+    batched = run_scenarios([sc])[0]
+    assert digest(batched) == digest(scalar)
+    assert batched.summary() == scalar.summary()
+    assert batched.raw.assignments == scalar.raw.assignments
+    assert batched.raw.node_ids == scalar.raw.node_ids
+    assert batched.raw.node_policies == scalar.raw.node_policies
+    assert batched.raw.dispatcher == scalar.raw.dispatcher
+    assert batched.raw.node_meta == scalar.raw.node_meta
+
+
+@pytest.mark.slow
+def test_montecarlo_fleet_cells_ride_the_device():
+    sc = _fleet_scenario("hybrid", "round_robin")
+    kw = dict(seeds=(0, 1), loads=(1.0,))
+    out = MonteCarlo(sc, backend="jax", **kw).run()
+    assert out.meta["backends"] == ["jax", "jax"]
+    assert out.meta["fallback_reasons"] == {}
+    py = MonteCarlo(sc, backend="python", **kw).run()
+    strip = lambda r: {k: v for k, v in r.items() if k != "backend"}
+    assert [strip(r) for r in out.rows] == [strip(r) for r in py.rows]
 
 
 # -- slow tier: randomized small grids (hypothesis) ----------------------------
@@ -242,5 +309,46 @@ def test_property_batched_matches_scalar():
         batched = run_scenarios([sc])[0]
         assert digest(batched) == digest(scalar)
         assert batched.summary() == scalar.summary()
+
+    check()
+
+
+@pytest.mark.slow
+def test_property_multi_event_paths_exercised():
+    """ISSUE 9 acceptance: on randomized DENSE grids the kernel must
+    retire strictly more than one event per while-loop iteration
+    (cycle/window/micro paths engaged) while staying bit-identical.
+    ``mc_stats['iters'] < mc_stats['events']`` is exactly "below the
+    one-event-per-iteration bound" — the PR 7 kernel ran at
+    iters == events."""
+    pytest.importorskip(
+        "hypothesis", reason="install the [test] extra for property tests")
+    from hypothesis import given, settings, strategies as st
+    from repro.mc.engine import run_scenarios
+
+    # Dense: 24-48 tasks arriving inside half a second on 2 cores, so
+    # runqueues go deep and alternation cycles/windows dominate. One
+    # (C=2, N=64) bucket -> a single XLA compile for the whole sweep.
+    specs = st.lists(
+        st.tuples(st.integers(0, 500), st.integers(50, 400)),
+        min_size=24, max_size=48)
+
+    @settings(max_examples=10, deadline=None)
+    @given(specs=specs,
+           policy=st.sampled_from(["fifo", "cfs", "hybrid"]))
+    def check(specs, policy):
+        specs = sorted(specs)
+        tasks = mk_tasks([(float(a), float(s)) for a, s in specs])
+        kw = {"n_fifo": 1} if policy == "hybrid" else {}
+        sc = Scenario(workload=WorkloadSpec(kind="tasks", tasks=tasks),
+                      fleet=FleetSpec(cores_per_node=2),
+                      policy=PolicySpec(name=policy, kw=kw))
+        scalar = repro.run(sc)
+        batched = run_scenarios([sc])[0]
+        assert digest(batched) == digest(scalar)
+        assert batched.summary() == scalar.summary()
+        stats = batched.mc_stats
+        assert stats["iters"] < stats["events"], \
+            f"one-event pace: {stats} ({policy}, n={len(specs)})"
 
     check()
