@@ -6,7 +6,7 @@ or several: given multiple baseline artifacts it collapses them into a
 synthetic per-cell MEDIAN baseline first (``--median-of N`` caps how
 many of the newest are used), so a single lucky or noisy historical
 run cannot anchor the gate. It FAILS (exit 1) on a regression beyond
-``--threshold``. Three artifact kinds are understood, auto-detected
+``--threshold``. Four artifact kinds are understood, auto-detected
 from the row schema:
 
 * ``cluster_matrix`` / ``BENCH_resilience`` / ``heavy_traffic`` rows —
@@ -34,6 +34,11 @@ from the row schema:
   fail the gate. Sweep artifacts gain nothing here: their summary rows
   are backend-invariant by the bit-identity contract, so the cluster
   key deliberately ignores any ``backend`` field.
+* ``BENCH_costmodel`` rows (``ape`` present) — fail when a shared
+  calibration op's absolute percentage error grows by more than the
+  threshold (absolute, not relative: APE is already a relative error).
+  Cells are matched on (op, mode), so the synthetic trajectory never
+  gates against the compiled-and-replayed one.
 
 Cells present on only one side are reported but do not fail the gate
 (grids evolve). Missing baseline files are skipped with a note; when
@@ -82,6 +87,10 @@ def cell_key(row: dict) -> tuple:
     # The topology axes (zones / spot / retry) default "off" the same
     # way: flat-fleet baselines keep their keys, and BENCH_topology's
     # zoned/spot/retry cells become new cells under the same function.
+    # The pricing / cost_model axes default to "default" / "static" —
+    # the bit-identity contract's spelling of "no CostModel involved" —
+    # so every pre-costmodel baseline keeps its key and a swept pricing
+    # or learned-model cell becomes a new trajectory.
     return (row.get("node_policy"), row.get("dispatcher"),
             row.get("n_nodes"), row.get("load_scale", 1.0),
             row.get("containers", "off"), row.get("chaos", "off"),
@@ -90,7 +99,8 @@ def cell_key(row: dict) -> tuple:
             row.get("retry", "off"),
             row.get("minutes"), row.get("invocations_per_min"),
             row.get("n_functions"), row.get("workload", "azure"),
-            row.get("model"))
+            row.get("model"), row.get("pricing", "default"),
+            row.get("cost_model", "static"))
 
 
 def throughput(row: dict) -> float:
@@ -104,6 +114,50 @@ def is_engine_rows(rows: list[dict]) -> bool:
 
 def is_mc_rows(rows: list[dict]) -> bool:
     return bool(rows) and "cells_per_sec" in rows[0]
+
+
+def is_costmodel_rows(rows: list[dict]) -> bool:
+    return bool(rows) and "ape" in rows[0]
+
+
+def costmodel_key(row: dict) -> tuple:
+    # mode separates the synthetic trajectory from the compiled-and-
+    # replayed one — the two measure different machines by design.
+    return (row.get("op"), row.get("mode"))
+
+
+def compare_costmodel(prev_rows: list[dict], new_rows: list[dict],
+                      threshold: float) -> tuple[list[str], list[str]]:
+    """Calibration-accuracy gate: a shared op's absolute percentage
+    error must not grow by more than ``threshold`` ABSOLUTE (APE is
+    already a relative error; a ratio of two small errors would flap)."""
+    prev = {costmodel_key(r): r for r in prev_rows}
+    new = {costmodel_key(r): r for r in new_rows}
+    failures, notes = [], []
+    for k in sorted(set(prev) ^ set(new), key=str):
+        side = "baseline" if k in prev else "new run"
+        notes.append(f"costmodel cell {k} only in {side}; skipped")
+    shared = sorted(set(prev) & set(new), key=str)
+    if not shared:
+        notes.append("no shared costmodel cells; nothing to gate")
+        return failures, notes
+    n_cmp = 0
+    for k in shared:
+        p, n = prev[k].get("ape"), new[k].get("ape")
+        if p is None or n is None:
+            continue
+        n_cmp += 1
+        if n > p + threshold:
+            failures.append(
+                f"costmodel cell {k}: prediction error grew "
+                f"{p:.4f} -> {n:.4f} (+{n - p:.4f} absolute)")
+    notes.append(f"compared {len(shared)} costmodel cells "
+                 f"({n_cmp} on ape)")
+    if n_cmp == 0:
+        failures.append(
+            f"{len(shared)} shared costmodel cells but 0 comparisons — "
+            "artifact schema drifted? (rows need ape)")
+    return failures, notes
 
 
 def mc_key(row: dict) -> tuple:
@@ -171,7 +225,10 @@ def median_baseline(rows_lists: list[list[dict]]) -> list[dict]:
         return rows_lists[0]
     engine = any(is_engine_rows(rows) for rows in rows_lists)
     mc = not engine and any(is_mc_rows(rows) for rows in rows_lists)
-    key_fn = engine_key if engine else mc_key if mc else cell_key
+    costmodel = not engine and not mc \
+        and any(is_costmodel_rows(rows) for rows in rows_lists)
+    key_fn = engine_key if engine else mc_key if mc \
+        else costmodel_key if costmodel else cell_key
     cells: dict[tuple, list[dict]] = {}
     order: list[tuple] = []
     for rows in rows_lists:            # newest first
@@ -195,6 +252,10 @@ def median_baseline(rows_lists: list[list[dict]]) -> list[dict]:
                     if r.get("cells_per_sec")]
             if vals:
                 synth["cells_per_sec"] = statistics.median(vals)
+        elif costmodel:
+            vals = [r["ape"] for r in history if r.get("ape") is not None]
+            if vals:
+                synth["ape"] = statistics.median(vals)
         else:
             costs = [r["cost_usd"] for r in history if r.get("cost_usd")]
             if costs:
@@ -337,6 +398,9 @@ def main(argv=None) -> int:
                                         args.threshold)
     elif is_mc_rows(new_rows) or is_mc_rows(prev_rows):
         failures, more = compare_mc(prev_rows, new_rows, args.threshold)
+    elif is_costmodel_rows(new_rows) or is_costmodel_rows(prev_rows):
+        failures, more = compare_costmodel(prev_rows, new_rows,
+                                           args.threshold)
     else:
         failures, more = compare(prev_rows, new_rows, args.threshold)
     notes.extend(more)

@@ -8,6 +8,7 @@ from __future__ import annotations
 import sys
 
 from . import cluster_bench as C
+from . import costmodel_bench as CM
 from . import paper_figures as F
 from . import llm_faas_bench as L
 from . import resilience_bench as R
@@ -33,6 +34,7 @@ BENCHES = [
     ("resilience_matrix", R.resilience_matrix),
     ("topology_matrix", T.topology_matrix),
     ("llm_faas", L.llm_faas_matrix),
+    ("costmodel", CM.costmodel_matrix),
 ]
 
 

@@ -32,7 +32,8 @@ import json
 import statistics
 from pathlib import Path
 
-from .regression_gate import cell_key, engine_key, load_rows, mc_key
+from .regression_gate import (cell_key, costmodel_key, engine_key,
+                              load_rows, mc_key)
 
 
 def _timing_key(row: dict) -> tuple:
@@ -55,6 +56,10 @@ KINDS = {
                       "lower", "{:.6g}"),
     "llm_faas": ("BENCH_llm_faas.json", cell_key, "usd_per_1k_requests",
                  "lower", "{:.6g}"),
+    # Calibration accuracy: per-op absolute percentage error of the
+    # fitted cost predictor (benchmarks.costmodel_bench).
+    "costmodel": ("BENCH_costmodel.json", costmodel_key, "ape",
+                  "lower", "{:.4f}"),
     # Nightly slow-tier per-module test wall-clock (tests/conftest.py
     # writes the artifact when REPRO_TEST_TIMINGS is set): a module
     # quietly doubling its runtime trends here like any bench cell.

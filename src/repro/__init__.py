@@ -23,7 +23,12 @@ _SCENARIO_EXPORTS = (
 # Batched Monte-Carlo front door (imports JAX only when touched).
 _MC_EXPORTS = ("MonteCarlo", "MonteCarloResult")
 
-__all__ = ["__version__", *_SCENARIO_EXPORTS, *_MC_EXPORTS]
+# Cost-model substrate (DESIGN.md Sec. 18): pricing + learned models.
+_COSTMODEL_EXPORTS = ("PricingSpec", "CostModel", "StaticCostModel",
+                      "LearnedCostModel", "make_cost_model")
+
+__all__ = ["__version__", *_SCENARIO_EXPORTS, *_MC_EXPORTS,
+           *_COSTMODEL_EXPORTS]
 
 
 def __getattr__(name):
@@ -33,9 +38,12 @@ def __getattr__(name):
     if name in _MC_EXPORTS:
         from . import mc
         return getattr(mc, name)
+    if name in _COSTMODEL_EXPORTS:
+        from . import costmodel
+        return getattr(costmodel, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
     return sorted(set(globals()) | set(_SCENARIO_EXPORTS)
-                  | set(_MC_EXPORTS))
+                  | set(_MC_EXPORTS) | set(_COSTMODEL_EXPORTS))

@@ -49,6 +49,9 @@ class AdmissionConfig:
     burst: float = 10.0             # bucket depth (invocations)
     rate_action: str = "queue"      # "shed" | "queue"
     # -- fleet load ceiling ---------------------------------------------
+    # A float, or the string "auto": derive the ceiling from the cost
+    # model's predicted load->inflation curve (resolved by the Scenario
+    # layer via CostModel.derive_max_load before the run starts).
     max_load: float = _INF          # admit while min node load <= this
     overload_action: str = "queue"  # "shed" | "queue" | "spill"
     queue_backoff_ms: float = 250.0  # overload retry interval
@@ -83,6 +86,11 @@ class AdmissionControl:
             config = AdmissionConfig(**overrides)
         elif overrides:
             raise TypeError("pass either a config or keyword overrides")
+        if config.max_load == "auto":
+            raise ValueError(
+                "max_load='auto' must be resolved by a cost model — run "
+                "the config through repro.run(Scenario(...)) (any "
+                "cost_model resolves it) or set a numeric ceiling")
         self.cfg = config
         # GCRA per function: theoretical arrival time of the NEXT
         # conforming invocation.

@@ -53,6 +53,7 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 from ..core.containers import expected_cold_ms
 from ..core.cost import price_per_ms
 from ..core.events import Task
+from ..costmodel.online import ScalarRLS
 
 
 class Dispatcher:
@@ -259,13 +260,22 @@ class CostAwareDispatch(Dispatcher):
     coefficient dispatcher and the estimate moves only as real evidence
     accumulates. Everything is deterministic: no sampling, and feedback
     arrives in canonical (completion, tid) order.
+
+    The estimator itself is ``costmodel.online.ScalarRLS`` — the online
+    half of the cost-model substrate. A learned ``CostModel`` seeds
+    ``queue_ms_per_load`` with its calibrated coefficient (and may
+    share its RLS instance outright via ``rls=``, so routing and the
+    model report one value); ``pricing`` prices routes with a
+    non-default :class:`~repro.costmodel.pricing.PricingSpec`.
+    ``snapshot()`` exposes the learned state (coefficient, observation
+    count, realized prediction error) for the summary schema.
     """
 
     name = "cost_aware"
 
     def __init__(self, seed: int = 0, queue_ms_per_load: float = 1_000.0,
                  learn: bool = True, rls_lambda: float = 0.98,
-                 prior_weight: float = 25.0):
+                 prior_weight: float = 25.0, pricing=None, rls=None):
         super().__init__(seed)
         self.queue_ms_per_load = queue_ms_per_load
         self.learn = learn
@@ -273,20 +283,34 @@ class CostAwareDispatch(Dispatcher):
         # completions it will ignore.
         self.wants_feedback = learn
         self.rls_lambda = rls_lambda
-        # Through-origin RLS state: coeff = _sxy / _sxx. The prior is
-        # pseudo-evidence at the configured coefficient.
-        self._sxx = prior_weight
-        self._sxy = prior_weight * queue_ms_per_load
-        self.n_observed = 0
+        self.pricing = pricing
+        self.rls = rls if rls is not None else ScalarRLS(
+            queue_ms_per_load, prior_weight=prior_weight,
+            lam=rls_lambda, learn=learn)
         # tid -> load of the chosen node at dispatch time.
         self._dispatch_load: dict[int, float] = {}
 
     @property
     def coeff(self) -> float:
         """Current load -> billed-ms conversion (the learned slope)."""
-        if not self.learn or self._sxx <= 0.0:
+        if not self.learn:
             return self.queue_ms_per_load
-        return max(0.0, self._sxy / self._sxx)
+        return self.rls.coeff
+
+    @property
+    def n_observed(self) -> int:
+        return self.rls.n_observed
+
+    def snapshot(self) -> dict:
+        """Learned-state roll-up (summary schema: cost_coeff /
+        cost_obs / cost_pred_err_ms)."""
+        return {
+            "coeff": self.coeff,
+            "n_observed": self.rls.n_observed,
+            "queue_ms_per_load": self.queue_ms_per_load,
+            "mean_abs_err_ms": self.rls.mean_abs_err,
+            "learn": self.learn,
+        }
 
     def observe_completion(self, task):
         load = self._dispatch_load.pop(task.tid, None)
@@ -295,13 +319,10 @@ class CostAwareDispatch(Dispatcher):
         if task.completion is None or task.first_run is None:
             return
         inflation = max(0.0, task.execution - task.init_ms - task.service)
-        lam = self.rls_lambda
-        self._sxx = lam * self._sxx + load * load
-        self._sxy = lam * self._sxy + load * inflation
-        self.n_observed += 1
+        self.rls.observe(load, inflation)
 
     def select(self, task, nodes, t):
-        p = price_per_ms(task.mem_mb)
+        p = price_per_ms(task.mem_mb, self.pricing)
         coeff = self.coeff
         topo = self.topology
         home = topo.home_zone(task.func_id) if topo is not None else None

@@ -57,6 +57,13 @@ class ClusterResult:
     cross_zone: int = 0                            # out-of-zone dispatches
     retry_stats: Optional[dict] = None             # RetryState.stats()
     degraded_ms: float = 0.0                       # sum of degrade intervals
+    # -- cost-model substrate (DESIGN.md Sec. 18) ---------------------------
+    # Learned dispatcher state (CostAwareDispatch.snapshot(): coeff /
+    # n_observed / mean_abs_err_ms), None for stateless dispatchers.
+    dispatcher_state: Optional[dict] = None
+    # PricingSpec the roll-ups bill with (None = DEFAULT_PRICING,
+    # bit-identically). Set post-run by the Scenario layer.
+    pricing: Optional[object] = None
 
     # -- task views (cached: summary() walks these repeatedly) --------------
     @cached_property
@@ -136,7 +143,8 @@ class ClusterResult:
         mults = self._price_mults()
         if mults is None:
             return workload_cost_usd(self.execution(),
-                                     mem_mb=[t.mem_mb for t in self.tasks])
+                                     mem_mb=[t.mem_mb for t in self.tasks],
+                                     pricing=self.pricing)
         # Heterogeneous SKUs: each node's bill is priced at ITS
         # multiplier over its own (completion, tid)-sorted completions,
         # then exactly summed — still order-canonical, because node_
@@ -147,7 +155,8 @@ class ClusterResult:
                           key=lambda t: (t.completion, t.tid))
             per_node.append(workload_cost_usd(
                 [t.execution for t in done],
-                mem_mb=[t.mem_mb for t in done], price_mult=mult))
+                mem_mb=[t.mem_mb for t in done], price_mult=mult,
+                pricing=self.pricing))
         return math.fsum(per_node)
 
     def spot_savings_usd(self) -> float:
@@ -166,7 +175,8 @@ class ClusterResult:
             done = sorted((t for t in r.tasks if t.completion is not None),
                           key=lambda t: (t.completion, t.tid))
             base = duration_cost_usd([t.execution for t in done],
-                                     [t.mem_mb for t in done])
+                                     [t.mem_mb for t in done],
+                                     pricing=self.pricing)
             out.append(base * m.get("base_price_mult", 1.0)
                        * m["spot_discount"])
         return math.fsum(out)
@@ -174,7 +184,7 @@ class ClusterResult:
     def rejected_cost_usd(self) -> float:
         """Per-request fees incurred by admission-shed invocations —
         reported separately so shedding never masquerades as savings."""
-        return rejected_request_cost_usd(len(self.shed))
+        return rejected_request_cost_usd(len(self.shed), self.pricing)
 
     def total_cost_usd(self) -> float:
         """User-facing bill including rejected-request fees."""
@@ -274,6 +284,12 @@ class ClusterResult:
             "cross_zone": self.cross_zone,
             "spot_savings_usd": self.spot_savings_usd(),
         }
+        # Learned-coefficient state (cost-model substrate): stable
+        # zeros when the dispatcher carries no estimator.
+        ds = self.dispatcher_state or {}
+        out["cost_coeff"] = ds.get("coeff", 0.0)
+        out["cost_obs"] = ds.get("n_observed", 0)
+        out["cost_pred_err_ms"] = ds.get("mean_abs_err_ms", 0.0)
         if self.redispatches:
             out["redispatches"] = self.redispatches
         return out

@@ -39,6 +39,12 @@ class PrewarmConfig:
     max_per_func: int = 8        # per-function per-minute sandbox cap
     headroom: float = 1.0        # scale on the expected concurrency
     keepalive_ms: Optional[float] = None  # None = the pool's own policy
+    # Where the per-minute rate comes from: "oracle" reads the trace's
+    # own counts (the historical planner, bit-identical default);
+    # "ewma" forecasts minute m from minutes < m via an online EWMA
+    # (costmodel.forecast) — what a real provider can actually do.
+    forecast: str = "oracle"
+    ewma_alpha: float = 0.5
 
 
 def make_prewarm_config(config) -> PrewarmConfig:
@@ -122,6 +128,9 @@ class Provisioner:
     def from_workload(cls, tasks, config: Optional[PrewarmConfig] = None,
                       ) -> "Provisioner":
         cfg = make_prewarm_config(config)
+        if cfg.forecast != "oracle":
+            from ..costmodel.forecast import make_plan
+            return cls(make_plan(tasks, cfg), cfg)
         return cls(build_plan(tasks, cfg), cfg)
 
     def pending_at(self, t: float) -> bool:

@@ -719,6 +719,9 @@ class ClusterSim:
             retry_stats=(self._retry.stats()
                          if self._retry is not None else None),
             degraded_ms=degraded,
+            dispatcher_state=(self.dispatcher.snapshot()
+                              if hasattr(self.dispatcher, "snapshot")
+                              else None),
         )
 
 

@@ -75,6 +75,11 @@ class Cell:
     # backoff policy for chaos-lost work.
     topology: str = "off"
     retry: str = "off"
+    # Cost-model substrate axes (DESIGN.md Sec. 18): pricing is a
+    # PRICINGS preset name; cost_model is "static" | "learned". The
+    # defaults keep cells bit-identical to the pre-CostModel grid.
+    pricing: str = "default"
+    cost_model: str = "static"
 
     def to_scenario(self) -> "Scenario":
         from ..scenario import (FleetSpec, PolicySpec, ResilienceSpec,
@@ -129,7 +134,10 @@ class Cell:
                             containers=containers, seed=self.seed,
                             topology=topology),
             policy=PolicySpec(name=self.node_policy),
-            resilience=resilience)
+            resilience=resilience,
+            pricing=None if self.pricing == "default" else self.pricing,
+            cost_model=(None if self.cost_model == "static"
+                        else self.cost_model))
 
 
 def run_cell(cell: Cell) -> dict:
@@ -266,7 +274,7 @@ def _row_key(row: dict) -> tuple:
     return tuple(str(row.get(k)) for k in (
         "node_policy", "dispatcher", "n_nodes", "load_scale",
         "containers", "seed", "minutes", "workload", "model",
-        "topology", "retry"))
+        "topology", "retry", "pricing", "cost_model"))
 
 
 def merge_rows(paths: list[str]) -> list[dict]:
@@ -369,6 +377,14 @@ def main(argv=None) -> None:
     ap.add_argument("--retry", default="off", choices=("off", "on"),
                     help="attach the default backoff retry policy for "
                          "chaos-lost work")
+    ap.add_argument("--pricing", default="default",
+                    help="PricingSpec preset every cell bills with "
+                         "(repro.costmodel.PRICINGS; default keeps the "
+                         "historical constants bit-identically)")
+    ap.add_argument("--cost-model", default="static",
+                    choices=("static", "learned"),
+                    help="cost model threaded into llm pricing, "
+                         "cost_aware dispatch, admission and pre-warm")
     ap.add_argument("--preset", default=None, choices=sorted(PRESETS),
                     help="named grid (overrides the grid-shape flags)")
     ap.add_argument("--shard", default=None, metavar="i/n",
@@ -416,7 +432,8 @@ def main(argv=None) -> None:
             containers=p["containers"],
             container_capacity_mb=args.container_capacity_mb,
             keepalive_ms=args.keepalive_ms,
-            topology=args.topology, retry=args.retry)
+            topology=args.topology, retry=args.retry,
+            pricing=args.pricing, cost_model=args.cost_model)
     else:
         grid = build_grid(
             _csv(args.policies), _csv(args.dispatchers),
@@ -427,7 +444,8 @@ def main(argv=None) -> None:
             containers=args.containers,
             container_capacity_mb=args.container_capacity_mb,
             keepalive_ms=args.keepalive_ms,
-            topology=args.topology, retry=args.retry)
+            topology=args.topology, retry=args.retry,
+            pricing=args.pricing, cost_model=args.cost_model)
 
     if args.shard:
         full = len(grid)

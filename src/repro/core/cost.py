@@ -14,20 +14,44 @@ warm-container locality worth routing for. Two helpers split that bill
 (`cold_start_cost_usd`) and price the PROVIDER-side cost of holding idle
 warm memory (`warm_pool_hold_cost_usd`): keep-alive is not free, it is a
 bet that a warm hit saves more billed-init than the idle DRAM costs.
+
+Rates live on :class:`~repro.costmodel.pricing.PricingSpec`: every
+helper takes an optional ``pricing=`` argument and defaults to
+``DEFAULT_PRICING`` (the historical constants, bit-identically). The
+legacy module constants (``PRICE_PER_GB_SECOND`` etc.) survive as
+DeprecationWarning shims via module ``__getattr__`` — same pattern as
+the PR 6 entrypoint shims.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Iterable, Optional, Sequence
 
-# AWS Lambda x86 pricing (https://aws.amazon.com/lambda/pricing/, 2024).
-PRICE_PER_GB_SECOND = 1.66667e-5  # USD
-PRICE_PER_REQUEST = 2.0e-7        # USD ($0.20 per 1M requests)
+from ..costmodel.pricing import DEFAULT_PRICING, PricingSpec
 
-# Provider-side cost of keeping one GB of warm-but-idle sandbox memory
-# resident for one second. Idle DRAM is far cheaper than billed compute;
-# ~12.5% of the user-facing rate is in line with provider COGS estimates.
-WARM_HOLD_PER_GB_SECOND = PRICE_PER_GB_SECOND / 8.0
+# Legacy module-level constants, now served by __getattr__ below with a
+# DeprecationWarning. Values (identical to the historical literals):
+#   PRICE_PER_GB_SECOND     = DEFAULT_PRICING.price_per_gb_second
+#   PRICE_PER_REQUEST       = DEFAULT_PRICING.price_per_request
+#   WARM_HOLD_PER_GB_SECOND = DEFAULT_PRICING.warm_hold_per_gb_second
+_DEPRECATED_CONSTANTS = {
+    "PRICE_PER_GB_SECOND": lambda: DEFAULT_PRICING.price_per_gb_second,
+    "PRICE_PER_REQUEST": lambda: DEFAULT_PRICING.price_per_request,
+    "WARM_HOLD_PER_GB_SECOND":
+        lambda: DEFAULT_PRICING.warm_hold_per_gb_second,
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED_CONSTANTS:
+        warnings.warn(
+            f"repro.core.cost.{name} is deprecated; use "
+            "repro.costmodel.PricingSpec / DEFAULT_PRICING instead",
+            DeprecationWarning, stacklevel=2)
+        return _DEPRECATED_CONSTANTS[name]()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 # Fig. 1 / Fig. 20 memory ladder (MB).
 MEMORY_LADDER_MB = (128, 256, 512, 1024, 2048, 4096, 10240)
@@ -46,45 +70,57 @@ AZURE_MEMORY_DISTRIBUTION = (
 )
 
 
-def price_per_ms(mem_mb: float) -> float:
-    return (mem_mb / 1024.0) * PRICE_PER_GB_SECOND / 1000.0
+def price_per_ms(mem_mb: float,
+                 pricing: Optional[PricingSpec] = None) -> float:
+    p = pricing if pricing is not None else DEFAULT_PRICING
+    return (mem_mb / 1024.0) * p.price_per_gb_second / 1000.0
 
 
 def invocation_cost_usd(execution_ms: float, mem_mb: float,
-                        price_mult: float = 1.0) -> float:
+                        price_mult: float = 1.0,
+                        pricing: Optional[PricingSpec] = None) -> float:
     """One invocation's bill. ``price_mult`` scales the DURATION share
     only (heterogeneous node SKUs / spot discounts — the per-request
     fee is a front-door charge, identical on every machine)."""
-    return execution_ms * price_per_ms(mem_mb) * price_mult \
-        + PRICE_PER_REQUEST
+    p = pricing if pricing is not None else DEFAULT_PRICING
+    return execution_ms * price_per_ms(mem_mb, p) * price_mult \
+        + p.price_per_request
 
 
-def cold_start_cost_usd(init_ms: float, mem_mb: float) -> float:
+def cold_start_cost_usd(init_ms: float, mem_mb: float,
+                        pricing: Optional[PricingSpec] = None) -> float:
     """The share of one invocation's bill attributable to sandbox boot
     (no per-request fee: the request is billed once, in
     ``invocation_cost_usd``)."""
-    return init_ms * price_per_ms(mem_mb)
+    return init_ms * price_per_ms(mem_mb, pricing)
 
 
-def rejected_request_cost_usd(n_rejected: int) -> float:
+def rejected_request_cost_usd(n_rejected: int,
+                              pricing: Optional[PricingSpec] = None,
+                              ) -> float:
     """Admission-shed invocations still hit the front door: the
     per-request fee is incurred (and, for the operator, is pure loss —
     no execution revenue behind it). Reported SEPARATELY from the
     execution bill so shedding can never masquerade as savings."""
-    return n_rejected * PRICE_PER_REQUEST
+    p = pricing if pricing is not None else DEFAULT_PRICING
+    return n_rejected * p.price_per_request
 
 
-def warm_pool_hold_cost_usd(warm_mb_ms: float) -> float:
+def warm_pool_hold_cost_usd(warm_mb_ms: float,
+                            pricing: Optional[PricingSpec] = None,
+                            ) -> float:
     """Provider-side cost of the idle warm set: the integral of resident
     idle sandbox memory over time (MB x ms), as accumulated by
     ``ContainerPool.warm_mb_ms``."""
-    return (warm_mb_ms / 1024.0 / 1000.0) * WARM_HOLD_PER_GB_SECOND
+    p = pricing if pricing is not None else DEFAULT_PRICING
+    return (warm_mb_ms / 1024.0 / 1000.0) * p.warm_hold_per_gb_second
 
 
 def workload_cost_usd(execution_ms: Iterable[float],
                       mem_mb: Optional[Iterable[float]] = None,
                       fixed_mem_mb: Optional[float] = None,
-                      price_mult: float = 1.0) -> float:
+                      price_mult: float = 1.0,
+                      pricing: Optional[PricingSpec] = None) -> float:
     """Total user-facing cost of a workload.
 
     With ``fixed_mem_mb`` set, prices every invocation at that size
@@ -99,26 +135,30 @@ def workload_cost_usd(execution_ms: Iterable[float],
     depend on the order tasks arrived at the completed list.
     """
     if fixed_mem_mb is not None:
-        return math.fsum(invocation_cost_usd(e, fixed_mem_mb, price_mult)
-                         for e in execution_ms)
+        return math.fsum(
+            invocation_cost_usd(e, fixed_mem_mb, price_mult, pricing)
+            for e in execution_ms)
     assert mem_mb is not None
-    return math.fsum(invocation_cost_usd(e, m, price_mult)
+    return math.fsum(invocation_cost_usd(e, m, price_mult, pricing)
                      for e, m in zip(execution_ms, mem_mb))
 
 
 def duration_cost_usd(execution_ms: Iterable[float],
-                      mem_mb: Iterable[float]) -> float:
+                      mem_mb: Iterable[float],
+                      pricing: Optional[PricingSpec] = None) -> float:
     """The duration share of a workload's bill alone (no per-request
     fees), exactly rounded — the base that SKU price multipliers and
     spot discounts scale, so spot savings are priced from the same sum
     the bill itself uses."""
-    return math.fsum(e * price_per_ms(m)
+    return math.fsum(e * price_per_ms(m, pricing)
                      for e, m in zip(execution_ms, mem_mb))
 
 
-def cost_ladder(execution_ms: Sequence[float]) -> dict[int, float]:
+def cost_ladder(execution_ms: Sequence[float],
+                pricing: Optional[PricingSpec] = None) -> dict[int, float]:
     """Cost for each memory size on the Fig. 1/20 ladder."""
-    return {mb: workload_cost_usd(execution_ms, fixed_mem_mb=mb)
+    return {mb: workload_cost_usd(execution_ms, fixed_mem_mb=mb,
+                                  pricing=pricing)
             for mb in MEMORY_LADDER_MB}
 
 

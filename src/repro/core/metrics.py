@@ -40,6 +40,9 @@ class SimResult:
     migrations: Optional[list] = None
     total_ctx: int = 0
     container_stats: Optional[dict] = None
+    # PricingSpec the roll-ups bill with (None = DEFAULT_PRICING,
+    # bit-identically). Set post-run by the Scenario layer.
+    pricing: Optional[object] = None
 
     # -- task views ---------------------------------------------------------
     @cached_property
@@ -95,26 +98,30 @@ class SimResult:
     def init_cost_usd(self) -> float:
         """The cold-start share of the user-facing bill (fsum over the
         canonical task order: permutation-invariant)."""
-        return math.fsum(cold_start_cost_usd(t.init_ms, t.mem_mb)
-                         for t in self.finished_tasks() if t.cold_start)
+        return math.fsum(
+            cold_start_cost_usd(t.init_ms, t.mem_mb, self.pricing)
+            for t in self.finished_tasks() if t.cold_start)
 
     def warm_hold_usd(self) -> float:
         """Provider-side cost of the idle warm set over the run."""
         if not self.container_stats:
             return 0.0
-        return warm_pool_hold_cost_usd(self.container_stats["warm_mb_ms"])
+        return warm_pool_hold_cost_usd(self.container_stats["warm_mb_ms"],
+                                       self.pricing)
 
     # -- cost ---------------------------------------------------------------
     def cost_usd(self, fixed_mem_mb: Optional[float] = None) -> float:
         done = self.finished_tasks()
         if fixed_mem_mb is not None:
             return workload_cost_usd((t.execution for t in done),
-                                     fixed_mem_mb=fixed_mem_mb)
+                                     fixed_mem_mb=fixed_mem_mb,
+                                     pricing=self.pricing)
         return workload_cost_usd((t.execution for t in done),
-                                 mem_mb=[t.mem_mb for t in done])
+                                 mem_mb=[t.mem_mb for t in done],
+                                 pricing=self.pricing)
 
     def cost_ladder(self) -> dict[int, float]:
-        return cost_ladder(self.execution())
+        return cost_ladder(self.execution(), pricing=self.pricing)
 
     # -- CDF helper -----------------------------------------------------------
     def cdf(self, metric: str) -> tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,32 @@
+"""Profiled, learned cost models — one substrate behind every dollar.
+
+* :mod:`~repro.costmodel.pricing`   — the frozen :class:`PricingSpec`
+  every cost helper and consumer prices with;
+* :mod:`~repro.costmodel.features`  — per-op FLOP/byte rows from the
+  compiled Pallas kernels and the llm chunk shapes;
+* :mod:`~repro.costmodel.calibrate` — compile-and-replay timing + ridge
+  fit, persisted as a versioned JSON artifact;
+* :mod:`~repro.costmodel.online`    — the online estimators (ScalarRLS,
+  EWMA rates);
+* :mod:`~repro.costmodel.forecast`  — the online pre-warm planner;
+* :mod:`~repro.costmodel.model`     — the :class:`CostModel` protocol
+  (:class:`StaticCostModel` / :class:`LearnedCostModel`) and its four
+  consumers' hooks.
+
+See DESIGN.md Sec. 18.
+"""
+from .calibrate import (calibrate, default_artifact_path, fit_ridge,
+                        load_artifact, predict_ms, save_artifact)
+from .model import (CostModel, LearnedCostModel, StaticCostModel,
+                    make_cost_model)
+from .online import EwmaRate, ScalarRLS
+from .pricing import (DEFAULT_PRICING, PRICINGS, PricingSpec, make_pricing,
+                      resolve_pricing)
+
+__all__ = [
+    "CostModel", "StaticCostModel", "LearnedCostModel", "make_cost_model",
+    "PricingSpec", "DEFAULT_PRICING", "PRICINGS", "make_pricing",
+    "resolve_pricing", "ScalarRLS", "EwmaRate",
+    "calibrate", "fit_ridge", "predict_ms", "save_artifact",
+    "load_artifact", "default_artifact_path",
+]

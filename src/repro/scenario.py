@@ -38,7 +38,7 @@ is additive-only (enforced by ``tests/test_scenario.py``).
 from __future__ import annotations
 
 import copy
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import TYPE_CHECKING, Optional, Sequence, Union
 
 from .cluster.admission import AdmissionConfig, AdmissionControl
@@ -78,6 +78,14 @@ SUMMARY_KEYS_V1 = (
     # (DESIGN.md Sec. 17); stable zeros when those layers are off.
     "retries", "retry_wait_ms", "revoked", "degraded_ms",
     "cross_zone", "spot_savings_usd",
+    # -- v1 additive growth: cost-model substrate (DESIGN.md Sec. 18).
+    # Which engine produced the row and why a jax cell fell back
+    # (promoted from the sweep's ad-hoc columns), which pricing/cost
+    # model priced it, and the learned-coefficient state (cost_aware
+    # RLS value, observation count, realized |prediction error|) so
+    # the gate and trend dashboard can see model drift.
+    "backend", "fallback_reason", "pricing", "cost_model",
+    "cost_coeff", "cost_obs", "cost_pred_err_ms",
 )
 
 
@@ -225,12 +233,68 @@ class ResilienceSpec:
 @dataclass(frozen=True)
 class Scenario:
     """One reproducible experiment: workload x fleet x policy x
-    resilience. ``repro.run(scenario)`` executes it."""
+    resilience — priced by ``pricing`` and costed by ``cost_model``.
+    ``repro.run(scenario)`` executes it.
+
+    ``pricing`` accepts ``None`` | preset name | kwargs dict |
+    :class:`~repro.costmodel.pricing.PricingSpec`; ``None`` keeps the
+    historical constants bit-identically. ``cost_model`` accepts
+    ``None`` | ``"static"`` | ``"learned"`` | calibration-artifact dict
+    or path | :class:`~repro.costmodel.model.CostModel`; ``None`` /
+    ``"static"`` is the do-nothing default, ``"learned"`` threads the
+    calibrated predictor into llm chunk pricing, cost_aware dispatch,
+    the admission ceiling (``max_load="auto"``) and predictive pre-warm
+    (DESIGN.md Sec. 18).
+    """
 
     workload: WorkloadSpec = field(default_factory=WorkloadSpec)
     fleet: FleetSpec = field(default_factory=FleetSpec)
     policy: PolicySpec = field(default_factory=PolicySpec)
     resilience: ResilienceSpec = field(default_factory=ResilienceSpec)
+    pricing: Union[None, str, dict, object] = None
+    cost_model: Union[None, str, dict, object] = None
+
+
+# -- cost-model plumbing ------------------------------------------------------
+
+def _pricing_name(pricing) -> str:
+    """The summary-schema label for a Scenario's pricing field."""
+    if pricing is None:
+        return "default"
+    from .costmodel.pricing import make_pricing
+    return make_pricing(pricing).name
+
+
+def _cost_model_kind(cost_model) -> str:
+    """The summary-schema label for a Scenario's cost_model field."""
+    if cost_model is None or cost_model == "static":
+        return "static"
+    if isinstance(cost_model, (str, dict)):
+        return "learned"
+    return getattr(cost_model, "kind", "learned")
+
+
+def _resolve_resilience(res: ResilienceSpec, cost_model) -> ResilienceSpec:
+    """Resolve the cost-model-derived resilience knobs before the run:
+    ``max_load="auto"`` becomes the model's predicted-inflation ceiling
+    (consumer 3), and a learned model switches config-shaped pre-warm
+    to its online forecaster unless the config chose one explicitly
+    (consumer 4)."""
+    adm = res.admission
+    if isinstance(adm, dict) and adm.get("max_load") == "auto":
+        budget = adm.get("max_queue_ms", AdmissionConfig.max_queue_ms)
+        adm = dict(adm, max_load=cost_model.derive_max_load(budget))
+        res = replace(res, admission=adm)
+    elif isinstance(adm, AdmissionConfig) and adm.max_load == "auto":
+        adm = replace(adm,
+                      max_load=cost_model.derive_max_load(adm.max_queue_ms))
+        res = replace(res, admission=adm)
+    pw = res.prewarm
+    if isinstance(pw, dict) and "forecast" not in pw \
+            and cost_model.prewarm_forecast() != "oracle":
+        res = replace(res, prewarm=dict(
+            pw, forecast=cost_model.prewarm_forecast()))
+    return res
 
 
 # -- result + versioned summary schema ----------------------------------------
@@ -277,6 +341,13 @@ class ScenarioResult:
             "rejected_cost_usd": 0.0,
             "retry_wait_ms": 0.0, "degraded_ms": 0.0,
             "spot_savings_usd": 0.0,
+            # Cost-model substrate defaults (DESIGN.md Sec. 18): the
+            # scalar python engine, no fallback, learned state zeroed
+            # (ClusterResult overlays real values when the dispatcher
+            # carries an estimator; the sweep overrides backend/
+            # fallback_reason per row).
+            "backend": "python", "fallback_reason": "none",
+            "cost_coeff": 0.0, "cost_pred_err_ms": 0.0,
         })
         out.update(self.raw.summary())
         for k, v in self.meta.items():
@@ -285,6 +356,8 @@ class ScenarioResult:
             "schema_version": SCHEMA_VERSION,
             "workload": sc.workload.kind,
             "policy": sc.policy.name,
+            "pricing": _pricing_name(sc.pricing),
+            "cost_model": _cost_model_kind(sc.cost_model),
             "n_requests": self.n_requests or out["n"],
             "total_cost_usd": self.total_cost_usd(),
         })
@@ -347,8 +420,12 @@ def _run_single(tasks: list[Task], containers, sc: Scenario,
 
 
 def _run_fleet(tasks: list[Task], containers, sc: Scenario,
-               serving: Optional[ServingSpec]) -> ClusterResult:
-    fl, pol, res = sc.fleet, sc.policy, sc.resilience
+               serving: Optional[ServingSpec], cost_model=None,
+               pricing=None,
+               res: Optional[ResilienceSpec] = None) -> ClusterResult:
+    fl, pol = sc.fleet, sc.policy
+    if res is None:
+        res = sc.resilience
     if pol.microvm or pol.ghost_mode:
         raise ValueError("microvm/ghost_mode are single-node system "
                          "models; use FleetSpec(dispatcher=None, "
@@ -368,11 +445,25 @@ def _run_fleet(tasks: list[Task], containers, sc: Scenario,
         node_spec = (pol.name, dict(pol.kw))
     else:
         node_spec = pol.name
+    dispatcher = fl.dispatcher if fl.dispatcher is not None \
+        else "least_loaded"
+    if dispatcher == "cost_aware" and cost_model is not None \
+            and (cost_model.kind != "static" or pricing is not None):
+        # Consumer 2: the cost model supplies the dispatcher's
+        # queueing prior and (when learned) SHARES its online RLS, so
+        # routing and the reported coefficient are one value. The
+        # default static/no-pricing path keeps the plain string —
+        # ClusterSim builds the identical historical dispatcher.
+        from .cluster.dispatch import CostAwareDispatch
+        kw = dict(seed=fl.seed, pricing=pricing,
+                  queue_ms_per_load=cost_model.queue_ms_per_load())
+        if getattr(cost_model, "rls", None) is not None:
+            kw["rls"] = cost_model.rls
+        dispatcher = CostAwareDispatch(**kw)
     sim = ClusterSim(
         n_nodes=fl.n_nodes, cores_per_node=fl.cores_per_node,
         node_policies=node_spec,
-        dispatcher=fl.dispatcher if fl.dispatcher is not None
-        else "least_loaded",
+        dispatcher=dispatcher,
         seed=fl.seed, node_factory=factory, containers=containers,
         admission=res.admission, topology=fl.topology)
     out = sim.run(tasks, fresh_tasks=False, chaos=res.chaos,
@@ -388,12 +479,28 @@ def run(scenario: Scenario) -> ScenarioResult:
     """Execute a :class:`Scenario` — THE entrypoint every legacy front
     door now routes through."""
     sc = scenario
-    tasks, meta = sc.workload.build()
+    from .costmodel.model import make_cost_model
+    from .costmodel.pricing import resolve_pricing
+    pricing = resolve_pricing(sc.pricing)   # None stays None: legacy path
+    cost_model = make_cost_model(sc.cost_model, pricing=sc.pricing)
+    workload = sc.workload
+    llm = None
+    if workload.kind == "llm":
+        from .serving.llm import LLMSpec
+        llm = workload.llm or LLMSpec()
+        # Consumer 1: a learned model replaces the LLMSpec's constant
+        # token costs with calibrated ones (static returns None and the
+        # spec constants stand, bit-identically).
+        tc = cost_model.token_costs(llm.resolve_model(), llm.seq_len)
+        if tc is not None:
+            cfg = llm.resolve_model().with_(
+                ms_per_ktoken_prefill=tc[0], ms_per_token_decode=tc[1])
+            llm = replace(llm, model=cfg)
+            workload = replace(workload, llm=llm)
+    tasks, meta = workload.build()
     serving = sc.policy.serving
     containers = sc.fleet.containers
-    if sc.workload.kind == "llm":
-        from .serving.llm import LLMSpec
-        llm = sc.workload.llm or LLMSpec()
+    if llm is not None:
         if serving is None:
             # llm workloads serve through the slot schedulers by
             # default: preemption = KV swap, quanta sized to match.
@@ -403,8 +510,17 @@ def run(scenario: Scenario) -> ScenarioResult:
             # start: weight-load + compile, warm pool = KV residency.
             containers = llm.container_spec()
     containers = as_container_config(containers, tasks)
+    res = _resolve_resilience(sc.resilience, cost_model)
     if sc.fleet.is_fleet:
-        raw = _run_fleet(tasks, containers, sc, serving)
+        raw = _run_fleet(tasks, containers, sc, serving,
+                         cost_model=cost_model, pricing=pricing, res=res)
     else:
         raw = _run_single(tasks, containers, sc, serving)
+    if pricing is not None:
+        # Non-default pricing re-prices every roll-up; the None default
+        # leaves the historical (bit-identical) constant path in place.
+        raw.pricing = pricing
+        if isinstance(raw, ClusterResult):
+            for r in raw.node_results:
+                r.pricing = pricing
     return ScenarioResult(scenario=sc, raw=raw, meta=dict(meta))

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..core.hybrid import TimeLimitAdapter
-from ..core.cost import PRICE_PER_GB_SECOND, PRICE_PER_REQUEST
+from ..costmodel.pricing import DEFAULT_PRICING
 from ..models import LM
 from .request import preemption_penalty_ms
 
@@ -53,7 +53,8 @@ class LiveRequest:
 
     def cost_usd(self) -> float:
         return (self.execution_ms() / 1000.0 * self.mem_gb
-                * PRICE_PER_GB_SECOND + PRICE_PER_REQUEST)
+                * DEFAULT_PRICING.price_per_gb_second
+                + DEFAULT_PRICING.price_per_request)
 
 
 class ServingEngine:

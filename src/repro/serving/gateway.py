@@ -28,7 +28,7 @@ from ..core.events import Task
 from ..core.hybrid import HybridScheduler, Rightsizer, TimeLimitAdapter
 from ..core.metrics import SimResult
 from ..core.policies import CFS, FIFO
-from ..core.cost import PRICE_PER_GB_SECOND, PRICE_PER_REQUEST
+from ..costmodel.pricing import DEFAULT_PRICING
 from ..traces.azure import TraceSpec
 from ..traces.workload import generate_workload
 from .request import RequestSpec, preemption_penalty_ms, service_ms
@@ -108,7 +108,8 @@ class GatewayResult:
         # bit-identical under any permutation of the completed list.
         return math.fsum(
             (t.execution / 1000.0) * (t.mem_mb / 1024.0)
-            * PRICE_PER_GB_SECOND + PRICE_PER_REQUEST
+            * DEFAULT_PRICING.price_per_gb_second
+            + DEFAULT_PRICING.price_per_request
             for t in self.sim.finished_tasks())
 
     def summary(self) -> dict:

@@ -1,0 +1,395 @@
+"""Cost-model substrate (DESIGN.md Sec. 18).
+
+Pins the three contracts the redesign makes:
+
+* **bit-identity** — ``PricingSpec()`` is exactly the historical
+  constants; cost helpers with ``pricing=None`` equal every explicit
+  default-spec spelling; ``cost_model="static"`` equals no model.
+* **calibration** — the artifact round-trips through JSON bit-for-bit,
+  the fit meets the MAPE acceptance bound, and predictions are
+  monotone non-decreasing in FLOPs and bytes by construction (fuzzed
+  under hypothesis when installed).
+* **consumers** — a perturbed artifact demonstrably changes the
+  admission ceiling and cost-aware routing; an unobserved learning
+  dispatcher routes exactly like a frozen one; the learned-coefficient
+  state reaches the summary schema at runtime.
+"""
+import math
+import warnings
+
+import pytest
+
+from repro.cluster.admission import AdmissionConfig, AdmissionControl
+from repro.cluster.dispatch import CostAwareDispatch
+from repro.core import cost
+from repro.core.events import Task
+from repro.costmodel import (DEFAULT_PRICING, LearnedCostModel, PRICINGS,
+                             PricingSpec, ScalarRLS, StaticCostModel,
+                             calibrate, fit_ridge, load_artifact,
+                             make_cost_model, make_pricing, predict_ms,
+                             save_artifact)
+from repro.costmodel.online import EwmaRate
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tier needs the [test] extra
+    HAVE_HYPOTHESIS = False
+
+
+# -- satellite 1: PricingSpec consolidation + shims --------------------------
+
+def test_default_pricing_is_the_historical_constants():
+    p = PricingSpec()
+    assert p.price_per_gb_second == 1.66667e-5
+    assert p.price_per_request == 2.0e-7
+    assert p.warm_hold_per_gb_second == 1.66667e-5 / 8.0
+    assert p == DEFAULT_PRICING
+
+
+def test_deprecated_constants_warn_and_match_spec():
+    for name, want in (
+            ("PRICE_PER_GB_SECOND", DEFAULT_PRICING.price_per_gb_second),
+            ("PRICE_PER_REQUEST", DEFAULT_PRICING.price_per_request),
+            ("WARM_HOLD_PER_GB_SECOND",
+             DEFAULT_PRICING.warm_hold_per_gb_second)):
+        with pytest.warns(DeprecationWarning, match=name):
+            assert getattr(cost, name) == want
+    with pytest.raises(AttributeError):
+        cost.NO_SUCH_CONSTANT
+
+
+def test_cost_helpers_bit_identical_default_vs_explicit():
+    """pricing=None, pricing=DEFAULT_PRICING and pricing=PricingSpec()
+    are the same bits on the whole helper battery."""
+    specs = (None, DEFAULT_PRICING, PricingSpec())
+    for mem in (128, 256, 1024, 1536):
+        base = cost.price_per_ms(mem)
+        assert all(cost.price_per_ms(mem, s) == base for s in specs)
+        inv = cost.invocation_cost_usd(250.0, mem, price_mult=1.3)
+        assert all(cost.invocation_cost_usd(250.0, mem, price_mult=1.3,
+                                            pricing=s) == inv
+                   for s in specs)
+        cold = cost.cold_start_cost_usd(900.0, mem)
+        assert all(cost.cold_start_cost_usd(900.0, mem, pricing=s) == cold
+                   for s in specs)
+    rej = cost.rejected_request_cost_usd(17)
+    hold = cost.warm_pool_hold_cost_usd(5.5e8)
+    assert all(cost.rejected_request_cost_usd(17, pricing=s) == rej
+               for s in specs)
+    assert all(cost.warm_pool_hold_cost_usd(5.5e8, pricing=s) == hold
+               for s in specs)
+
+
+def test_pricing_presets_and_coercions():
+    assert set(PRICINGS) >= {"default", "premium", "free_requests"}
+    assert make_pricing(None) is DEFAULT_PRICING
+    assert make_pricing("premium") is PRICINGS["premium"]
+    assert make_pricing({"name": "x", "price_per_request": 0.0}).name == "x"
+    p = make_pricing("premium")
+    assert cost.price_per_ms(1024, p) > cost.price_per_ms(1024)
+    assert PRICINGS["free_requests"].price_per_request == 0.0
+    with pytest.raises(KeyError):
+        make_pricing("no_such_preset")
+    with pytest.raises(ValueError):
+        PricingSpec(price_per_gb_second=-1.0)
+
+
+# -- calibration: artifact, bound, monotonicity ------------------------------
+
+def test_calibration_meets_mape_bound_and_clips_weights():
+    art = calibrate(mode="synthetic", seed=0)
+    assert art["mape"] <= 0.25          # the acceptance bound
+    assert all(w >= 0.0 for w in art["weights"])
+    assert art["queue_ms_per_load"] > 0.0
+
+
+def test_calibration_deterministic_per_seed():
+    assert calibrate(seed=3) == calibrate(seed=3)
+    a, b = calibrate(seed=1), calibrate(seed=2)
+    assert a["weights"] != b["weights"]  # the noise seed matters
+
+
+def test_artifact_roundtrip_bit_identical(tmp_path):
+    art = calibrate(mode="synthetic", seed=0)
+    path = save_artifact(art, tmp_path / "cal.json")
+    loaded = load_artifact(path)
+    m1, m2 = LearnedCostModel(art), LearnedCostModel(loaded)
+    for row in art["rows"]:
+        assert m1.predict_op_ms(row) == m2.predict_op_ms(row)
+    assert m1.queue_ms_per_load() == m2.queue_ms_per_load()
+
+
+def test_load_artifact_rejects_wrong_kind_and_version(tmp_path):
+    art = calibrate()
+    bad_kind = tmp_path / "k.json"
+    save_artifact(dict(art, kind="something-else"), bad_kind)
+    with pytest.raises(ValueError, match="not a"):
+        load_artifact(bad_kind)
+    bad_ver = tmp_path / "v.json"
+    save_artifact(dict(art, version=99), bad_ver)
+    with pytest.raises(ValueError, match="version"):
+        load_artifact(bad_ver)
+
+
+def test_fitted_predictions_monotone_seeded():
+    art = calibrate(mode="synthetic", seed=0)
+    w = art["weights"]
+    base = {"flops": 1e6, "bytes": 1e5}
+    assert predict_ms(w, {"flops": 2e6, "bytes": 1e5}) >= \
+        predict_ms(w, base)
+    assert predict_ms(w, {"flops": 1e6, "bytes": 2e5}) >= \
+        predict_ms(w, base)
+    assert predict_ms(w, {"flops": 0.0, "bytes": 0.0}) >= 0.0
+
+
+if HAVE_HYPOTHESIS:
+    _row = st.fixed_dictionaries({
+        "flops": st.floats(1e3, 1e10),
+        "bytes": st.floats(1e3, 1e9),
+        "measured_ms": st.floats(1e-3, 1e5),
+    })
+
+    @given(rows=st.lists(_row, min_size=3, max_size=8),
+           flops=st.floats(0.0, 1e10), bytes_=st.floats(0.0, 1e9),
+           dflops=st.floats(0.0, 1e10), dbytes=st.floats(0.0, 1e9))
+    @settings(max_examples=25, deadline=None)
+    def test_fit_monotone_nonneg_fuzzed(rows, flops, bytes_, dflops,
+                                        dbytes):
+        """Any fit over any rows predicts non-negatively and monotone
+        non-decreasing in both features (weights clipped at zero)."""
+        try:
+            w = fit_ridge(rows)
+        except ValueError:
+            return  # degenerate singular design: rejected loudly
+        lo = predict_ms(w, {"flops": flops, "bytes": bytes_})
+        hi = predict_ms(w, {"flops": flops + dflops,
+                            "bytes": bytes_ + dbytes})
+        assert lo >= 0.0
+        assert hi >= lo
+
+
+# -- the CostModel protocol and its consumers --------------------------------
+
+def test_make_cost_model_coercions():
+    assert isinstance(make_cost_model(None), StaticCostModel)
+    assert isinstance(make_cost_model("static"), StaticCostModel)
+    art = calibrate()
+    m = make_cost_model(art)
+    assert isinstance(m, LearnedCostModel)
+    assert make_cost_model(m) is m
+    assert make_cost_model("learned").kind == "learned"
+    with pytest.raises(TypeError):
+        make_cost_model(3.14)
+
+
+def test_learned_token_costs_anchored_and_transferable():
+    from repro.configs.registry import get_config
+    art = calibrate(model="deepseek-7b", seq_len=4096)
+    m = LearnedCostModel(art)
+    ref = get_config("deepseek-7b")
+    # Calibrated model: anchored to its own spec constants.
+    assert m.token_costs(ref, 4096) == (ref.ms_per_ktoken_prefill,
+                                        ref.ms_per_token_decode)
+    # Another model: transferred by predicted ratio — positive, finite,
+    # and NOT simply that model's spec constants.
+    other = get_config("deepseek-67b")
+    pre, dec = m.token_costs(other, 4096)
+    assert pre > 0.0 and dec > 0.0
+    assert math.isfinite(pre) and math.isfinite(dec)
+    assert (pre, dec) != (other.ms_per_ktoken_prefill,
+                          other.ms_per_token_decode)
+    # Static model: no opinion, the spec constants stand.
+    assert StaticCostModel().token_costs(ref, 4096) is None
+
+
+class _FakeNode:
+    """snapshot()-shaped stand-in for routing tests: warm-less with an
+    advertised cold model, so the cold-vs-queue tradeoff is explicit."""
+
+    def __init__(self, load, cold_ms):
+        self._s = {"load": load, "warm": {}, "cold_model": (cold_ms, 0.0)}
+
+    def snapshot(self):
+        return dict(self._s)
+
+
+def test_perturbed_artifact_changes_ceiling_and_routing():
+    art = calibrate(mode="synthetic", seed=0)
+    perturbed = dict(art, queue_ms_per_load=art["queue_ms_per_load"] * 25)
+    m1, m2 = LearnedCostModel(art), LearnedCostModel(perturbed)
+
+    # Consumer 3: the derived admission ceiling moves.
+    assert m1.derive_max_load(10_000.0) != m2.derive_max_load(10_000.0)
+    from repro.scenario import ResilienceSpec, _resolve_resilience
+    res = ResilienceSpec(admission={"max_load": "auto"})
+    r1 = _resolve_resilience(res, m1).admission["max_load"]
+    r2 = _resolve_resilience(res, m2).admission["max_load"]
+    assert r1 != r2 and r1 > 0 and r2 > 0
+
+    # Consumer 2: the routing decision flips where the cold-start
+    # price sits between the two queueing-penalty estimates.
+    cold_ms = 5.0 * math.sqrt(m1.queue_ms_per_load()
+                              * m2.queue_ms_per_load())
+    nodes = [_FakeNode(load=5.0, cold_ms=0.0),     # loaded but free
+             _FakeNode(load=0.0, cold_ms=cold_ms)]  # idle but cold
+    task = Task(tid=0, arrival=0.0, service=100.0, mem_mb=512, func_id=1)
+    d1 = CostAwareDispatch(queue_ms_per_load=m1.queue_ms_per_load(),
+                           learn=False)
+    d2 = CostAwareDispatch(queue_ms_per_load=m2.queue_ms_per_load(),
+                           learn=False)
+    assert d1.select(task, nodes, 0.0) != d2.select(task, nodes, 0.0)
+
+
+def test_admission_auto_requires_a_cost_model():
+    with pytest.raises(ValueError, match="auto"):
+        AdmissionControl(AdmissionConfig(max_load="auto"))
+
+
+def test_unobserved_fleet_routes_like_frozen_dispatcher():
+    """Satellite 3's regression: learn=True with NO completions must
+    route exactly like learn=False — the prior is pseudo-evidence, not
+    a behavior change."""
+    learner = CostAwareDispatch(seed=5, queue_ms_per_load=700.0,
+                                learn=True)
+    frozen = CostAwareDispatch(seed=5, queue_ms_per_load=700.0,
+                               learn=False)
+    assert learner.coeff == frozen.coeff == 700.0
+    for tid in range(40):
+        nodes = [_FakeNode(load=float((tid + i) % 7),
+                           cold_ms=200.0 * ((tid * i) % 3))
+                 for i in range(4)]
+        task = Task(tid=tid, arrival=float(tid), service=50.0,
+                    mem_mb=256 << (tid % 3), func_id=tid % 5)
+        assert learner.select(task, nodes, float(tid)) == \
+            frozen.select(task, nodes, float(tid))
+    assert learner.n_observed == 0
+    assert learner.snapshot()["coeff"] == 700.0
+
+
+def test_scalar_rls_prior_then_evidence():
+    rls = ScalarRLS(1000.0, prior_weight=25.0, lam=0.98)
+    assert rls.coeff == 1000.0
+    for _ in range(200):
+        rls.observe(2.0, 2.0 * 40.0)   # true slope 40
+    assert abs(rls.coeff - 40.0) < 5.0
+    assert rls.n_observed == 200
+    frozen = ScalarRLS(1000.0, learn=False)
+    frozen.observe(2.0, 80.0)
+    assert frozen.coeff == 1000.0
+
+
+def test_ewma_rate_unseen_is_zero():
+    fc = EwmaRate(alpha=0.5)
+    assert fc.forecast(7) == 0.0
+    fc.update(7, 8.0)
+    assert fc.forecast(7) == 8.0
+    fc.update(7, 0.0)
+    assert fc.forecast(7) == 4.0
+    with pytest.raises(ValueError):
+        EwmaRate(alpha=0.0)
+
+
+# -- consumer 4: the online forecaster ---------------------------------------
+
+def _burst_tasks(minutes=3, per_min=10, fid=0):
+    out = []
+    for m in range(minutes):
+        for i in range(per_min):
+            out.append(Task(tid=len(out), arrival=m * 60_000.0 + i * 100.0,
+                            service=6_000.0, mem_mb=256, func_id=fid))
+    return out
+
+
+def test_forecast_plan_only_uses_past_minutes():
+    from repro.cluster.prewarm import PrewarmConfig, build_plan
+    from repro.costmodel.forecast import build_forecast_plan, make_plan
+    tasks = _burst_tasks()
+    cfg = PrewarmConfig(lead_ms=2_000.0)
+    oracle = build_plan(tasks, cfg)
+    ewma = build_forecast_plan(tasks, cfg)
+    # The oracle knows minute 0's burst; the forecaster cannot.
+    assert any(row[0] == 0.0 for row in oracle)
+    assert ewma and all(row[0] >= 60_000.0 - 2_000.0 for row in ewma)
+    assert ewma == build_forecast_plan(tasks, cfg)  # deterministic
+    # make_plan dispatches on the config's forecast field.
+    assert make_plan(tasks, cfg) == oracle
+    assert make_plan(tasks, PrewarmConfig(forecast="ewma")) == \
+        build_forecast_plan(tasks, PrewarmConfig(forecast="ewma"))
+
+
+# -- Scenario integration: schema, bit-identity, runtime state ---------------
+
+def _tiny_llm_scenario(**kw):
+    from repro.scenario import FleetSpec, PolicySpec, Scenario, WorkloadSpec
+    from repro.serving.llm import LLMSpec
+    from repro.traces import TraceSpec
+    base = dict(
+        workload=WorkloadSpec(
+            kind="llm",
+            trace=TraceSpec(minutes=1, invocations_per_min=60.0,
+                            n_functions=6, seed=9),
+            llm=LLMSpec(model="deepseek-7b")),
+        fleet=FleetSpec(n_nodes=2, cores_per_node=4,
+                        dispatcher="cost_aware", seed=2),
+        policy=PolicySpec(name="hybrid"))
+    base.update(kw)
+    return Scenario(**base)
+
+
+def test_summary_carries_costmodel_keys():
+    from repro.scenario import SUMMARY_KEYS_V1, run
+    s = run(_tiny_llm_scenario()).summary()
+    for key in ("backend", "fallback_reason", "pricing", "cost_model",
+                "cost_coeff", "cost_obs", "cost_pred_err_ms"):
+        assert key in SUMMARY_KEYS_V1 and key in s
+    assert s["pricing"] == "default"
+    assert s["cost_model"] == "static"
+    assert s["backend"] == "python"
+    # Satellite 3: the cost_aware RLS state is live in the summary.
+    assert s["cost_obs"] > 0
+    assert s["cost_coeff"] > 0.0
+
+
+def test_static_cost_model_bit_identical_to_none():
+    from repro.scenario import run
+    a = run(_tiny_llm_scenario()).summary()
+    b = run(_tiny_llm_scenario(cost_model="static")).summary()
+    assert a == b
+
+
+def test_premium_pricing_raises_the_bill():
+    from repro.scenario import run
+    base = run(_tiny_llm_scenario()).summary()
+    prem = run(_tiny_llm_scenario(pricing="premium")).summary()
+    assert prem["pricing"] == "premium"
+    assert prem["cost_usd"] > base["cost_usd"]
+    # Pricing changes dollars, never the schedule.
+    assert prem["n"] == base["n"]
+    assert prem["makespan_s"] == base["makespan_s"]
+
+
+def test_learned_model_threads_prior_into_dispatcher():
+    from repro.scenario import run
+    art = calibrate(mode="synthetic", seed=0)
+    res = run(_tiny_llm_scenario(cost_model=dict(art)))
+    s = res.summary()
+    assert s["cost_model"] == "learned"
+    assert s["cost_obs"] > 0
+
+
+def test_sweep_cell_carries_pricing_and_cost_model_axes():
+    from repro.cluster.sweep import Cell, _row_key
+    cell = Cell(node_policy="hybrid", dispatcher="least_loaded",
+                n_nodes=2, pricing="premium", cost_model="learned")
+    sc = cell.to_scenario()
+    assert sc.pricing == "premium"
+    assert sc.cost_model == "learned"
+    default = Cell(node_policy="hybrid", dispatcher="least_loaded",
+                   n_nodes=2)
+    assert default.to_scenario().pricing is None
+    assert default.to_scenario().cost_model is None
+    row = {"node_policy": "hybrid", "pricing": "premium",
+           "cost_model": "learned"}
+    key = _row_key(row)
+    assert "premium" in key and "learned" in key

@@ -15,7 +15,7 @@ from repro.cluster import (AdmissionConfig, AdmissionControl, ChaosEvent,
                            run_cluster, shard_grid)
 from repro.core import ContainerConfig, ContainerPool, Task
 from repro.core.containers import expected_cold_ms
-from repro.core.cost import PRICE_PER_REQUEST
+from repro.costmodel.pricing import DEFAULT_PRICING
 
 from conftest import mk_tasks
 
@@ -251,7 +251,7 @@ def test_shed_completed_failed_partition_every_arrival(fleet_workload):
     assert shed_tids | done_tids == {t.tid for t in fleet_workload}
     assert all(t.failed for t in res.shed)
     assert res.rejected_cost_usd() == pytest.approx(
-        s["shed"] * PRICE_PER_REQUEST)
+        s["shed"] * DEFAULT_PRICING.price_per_request)
     assert res.total_cost_usd() == pytest.approx(
         res.cost_usd() + res.rejected_cost_usd())
 
